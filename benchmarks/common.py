@@ -1,0 +1,40 @@
+"""Shared benchmark utilities: dataset cache, timing, CSV row format."""
+
+from __future__ import annotations
+
+import time
+from functools import lru_cache
+
+import numpy as np
+
+from repro.core.topology import build_topology
+from repro.sensors.dataset import berkeley_surrogate, kfold_blocks
+
+
+@lru_cache(maxsize=1)
+def dataset(n_epochs: int = 7200):
+    return berkeley_surrogate(p=52, n_epochs=n_epochs, seed=0)
+
+
+@lru_cache(maxsize=8)
+def topo(radio_range: float):
+    return build_topology(dataset().positions, radio_range=radio_range)
+
+
+def folds(k: int = 3):
+    return kfold_blocks(dataset().n_epochs, k=k)
+
+
+def timed(fn, *args, repeat: int = 3, **kw):
+    """Run fn repeatedly; returns (result, best microseconds)."""
+    best = float("inf")
+    out = None
+    for _ in range(repeat):
+        t0 = time.perf_counter()
+        out = fn(*args, **kw)
+        best = min(best, time.perf_counter() - t0)
+    return out, best * 1e6
+
+
+def row(name: str, us: float, derived) -> dict:
+    return {"name": name, "us_per_call": round(us, 1), "derived": derived}

@@ -1,0 +1,34 @@
+"""Paper Fig. 10 + 14: network load vs number of components extracted.
+
+Fig. 10: per-epoch PCAg load for q in {1, 5, 15} against the default scheme
+(crossover when q(C*+1) > 2p-1).  Fig. 14: total PIM extraction load,
+quadratic in q (radio range 10 m, 20 iterations per component).
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import row, timed, topo
+from repro.core import costs
+
+
+def run(qs=(1, 2, 5, 10, 15, 20), radio_range: float = 10.0) -> list[dict]:
+    t = topo(radio_range)
+    p = t.p
+    c_max = int(t.tree.children_counts().max())
+    rows = []
+
+    d_max = costs.default_epoch_load(p)
+    rows.append(row("fig10/default", 0.0, f"max={d_max}"))
+    for q in qs:
+        load = costs.pcag_epoch_load(q, c_max)
+        rows.append(row(f"fig10/pcag_q={q}", 0.0,
+                        f"max={load} beats_default="
+                        f"{costs.pcag_beats_default(q, c_max, p)}"))
+
+    for q in qs:
+        (load, us) = timed(t.load_pim_total, q, [20] * q, repeat=3)
+        rows.append(row(f"fig14/pim_q={q}", us,
+                        f"max={int(load.max())} mean={load.mean():.0f}"))
+    return rows

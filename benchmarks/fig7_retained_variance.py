@@ -1,0 +1,35 @@
+"""Paper Fig. 7: retained variance vs number of principal components.
+
+K-fold block CV on the Berkeley surrogate; reports the test-set retained
+variance for q = 1..25 (the paper's claims: ~80 % at q=1, ~90 % at 4-5,
+~95 % at 10) and the train-on-test upper bound.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import dataset, folds, row, timed
+from repro.core.pca import DistributedPCA, retained_variance
+
+
+def run(qs=(1, 2, 3, 4, 5, 10, 15, 20, 25), k_folds: int = 3) -> list[dict]:
+    data = dataset()
+    rows = []
+    for q in qs:
+        fracs, uppers = [], []
+        us_total = 0.0
+        for tr_idx, te_idx in folds(k_folds):
+            train = data.measurements[tr_idx]
+            test = data.measurements[te_idx]
+            res, us = timed(DistributedPCA(q=q, method="eigh").fit, train,
+                            repeat=1)
+            us_total += us
+            fracs.append(retained_variance(test, res.components, res.mean))
+            res_u = DistributedPCA(q=q, method="eigh").fit(test)
+            uppers.append(retained_variance(test, res_u.components,
+                                            res_u.mean))
+        rows.append(row(f"fig7/q={q}", us_total / k_folds,
+                        f"test={np.mean(fracs):.4f} "
+                        f"upper={np.mean(uppers):.4f}"))
+    return rows

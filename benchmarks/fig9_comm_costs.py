@@ -1,0 +1,33 @@
+"""Paper Fig. 9 + Fig. 12: per-epoch network load, default vs PCAg vs
+covariance update, across radio ranges.
+
+Validated headline numbers (paper Sec. 4.4): root load 2p-1 = 103 for the
+default scheme; PCAg q=1 highest load = C*+1; overall aggregated load is
+topology-independent.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import row, timed, topo
+
+
+def run(ranges=(8.0, 10.0, 15.0, 20.0, 30.0, 50.0)) -> list[dict]:
+    rows = []
+    for r in ranges:
+        t = topo(r)
+        (loads_d, us) = timed(t.tree.load_default, repeat=5)
+        loads_a = t.tree.load_aggregation(q=1)
+        loads_f = t.tree.load_feedback()
+        loads_cov = t.load_covariance_update()
+        rows.append(row(
+            f"fig9/range={r:g}/default", us,
+            f"max={int(loads_d.max())} total={int(loads_d.sum())}"))
+        rows.append(row(
+            f"fig9/range={r:g}/pcag_q1", us,
+            f"max={int(loads_a.max())} total={int((loads_a + loads_f).sum())}"))
+        rows.append(row(
+            f"fig12/range={r:g}/cov_update", us,
+            f"max={int(loads_cov.max())} mean={loads_cov.mean():.1f}"))
+    return rows

@@ -1,0 +1,70 @@
+"""Kernel benchmarks: jnp reference wall time on CPU (the operational
+number in this container) + analytic TPU roofline estimate per kernel.
+
+The Pallas kernels themselves run in interpret mode here (Python — not a
+meaningful timing), so we time the jitted jnp reference, verify the kernel
+against it, and report the arithmetic-intensity-derived TPU v5e time bound
+(compute vs HBM, whichever dominates) as 'derived'.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import row, timed
+from repro.kernels import ops, ref
+from repro.launch.hlo_analysis import HBM_BW, PEAK_FLOPS
+
+
+def _tpu_bound_us(flops: float, bytes_moved: float) -> float:
+    return max(flops / PEAK_FLOPS, bytes_moved / HBM_BW) * 1e6
+
+
+def run() -> list[dict]:
+    rows = []
+    key = jax.random.PRNGKey(0)
+
+    # banded matvec: p=64k local shard, h=128
+    p, h = 65_536, 128
+    nb = 2 * h + 1
+    band = jax.random.normal(key, (nb, p), jnp.float32)
+    v = jax.random.normal(key, (p,), jnp.float32)
+    fn = jax.jit(ref.banded_matvec)
+    fn(band, v).block_until_ready()
+    _, us = timed(lambda: fn(band, v).block_until_ready(), repeat=5)
+    flops = 2.0 * nb * p
+    byts = (nb * p + 2 * p) * 4
+    rows.append(row("kernel/banded_matvec/p64k_h128", us,
+                    f"tpu_bound_us={_tpu_bound_us(flops, byts):.1f}"))
+    out_k = ops.banded_matvec(band[:, :4096], v[:4096], interpret=True)
+    ok = np.allclose(np.asarray(out_k),
+                     np.asarray(ref.banded_matvec(band[:, :4096], v[:4096])),
+                     atol=1e-3)
+    rows.append(row("kernel/banded_matvec/validated", 0.0, ok))
+
+    # cov update: n=256 epochs, p=16k shard, h=128
+    n, p2, h2 = 256, 16_384, 128
+    x = jax.random.normal(key, (n, p2), jnp.float32)
+    fn2 = jax.jit(lambda xx: ref.cov_band_update(xx, h2))
+    fn2(x).block_until_ready()
+    _, us = timed(lambda: fn2(x).block_until_ready(), repeat=3)
+    nb2 = 2 * h2 + 1
+    flops = 2.0 * n * nb2 * p2
+    byts = (n * p2 + nb2 * p2) * 4
+    rows.append(row("kernel/cov_update/n256_p16k_h128", us,
+                    f"tpu_bound_us={_tpu_bound_us(flops, byts):.1f}"))
+
+    # pca project: n=4096 rows, p=16k, q=32
+    n3, p3, q3 = 4096, 16_384, 32
+    x3 = jax.random.normal(key, (n3, p3), jnp.float32)
+    w3 = jax.random.normal(key, (p3, q3), jnp.float32)
+    fn3 = jax.jit(ref.pca_project)
+    fn3(x3, w3).block_until_ready()
+    _, us = timed(lambda: fn3(x3, w3).block_until_ready(), repeat=3)
+    flops = 2.0 * n3 * p3 * q3
+    byts = (n3 * p3 + p3 * q3 + n3 * q3) * 4
+    rows.append(row("kernel/pca_project/n4k_p16k_q32", us,
+                    f"tpu_bound_us={_tpu_bound_us(flops, byts):.1f}"))
+    return rows

@@ -1,0 +1,45 @@
+# One function per paper table/figure. Prints ``name,us_per_call,derived``
+# CSV rows; --full widens the CV folds and range sweeps to paper scale.
+from __future__ import annotations
+
+import argparse
+import sys
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", help="substring filter on benchmark module")
+    ap.add_argument("--full", action="store_true",
+                    help="paper-scale settings (10-fold CV, all ranges)")
+    args = ap.parse_args()
+
+    from benchmarks import (fig7_retained_variance, fig9_comm_costs,
+                            fig11_local_cov, fig13_pim_convergence,
+                            fig14_load_vs_q, kernels_bench,
+                            table1_complexity)
+
+    modules = {
+        "fig7": lambda: fig7_retained_variance.run(
+            k_folds=10 if args.full else 3),
+        "fig9": fig9_comm_costs.run,
+        "fig11": fig11_local_cov.run,
+        "fig13": fig13_pim_convergence.run,
+        "fig14": fig14_load_vs_q.run,
+        "table1": table1_complexity.run,
+        "kernels": kernels_bench.run,
+    }
+
+    print("name,us_per_call,derived")
+    for name, fn in modules.items():
+        if args.only and args.only not in name:
+            continue
+        try:
+            for r in fn():
+                print(f"{r['name']},{r['us_per_call']},{r['derived']}")
+        except Exception as e:  # noqa: BLE001 — report and continue
+            print(f"{name}/ERROR,0,{type(e).__name__}: {e}", file=sys.stdout)
+    sys.stdout.flush()
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,29 @@
+"""Paper Table 1: communication/computation/memory of the four schemes,
+instantiated for the experimental network (p=52, T=1440 epochs, q=5) and
+for the production configuration (p=1M, banded h=128) — the TPU mapping.
+"""
+
+from __future__ import annotations
+
+from benchmarks.common import row, topo
+from repro.core import costs
+
+
+def run() -> list[dict]:
+    t = topo(10.0)
+    n_max = int(t.neighborhood_sizes().max())
+    c_max = int(t.tree.children_counts().max())
+    rows = []
+    rep = costs.table1(p=52, T=1440, q=5, n_max=n_max, c_max=c_max, iters=20)
+    for name, r in rep.items():
+        rows.append(row(f"table1/52/{name}", 0.0,
+                        f"comm={r.communication:.3g} comp={r.computation:.3g}"
+                        f" mem={r.memory:.3g}"))
+    # production scale: 1M virtual sensors, neighborhood = band 2h
+    rep = costs.table1(p=1_048_576, T=14_400, q=32, n_max=256, c_max=2,
+                       iters=20)
+    for name, r in rep.items():
+        rows.append(row(f"table1/1m/{name}", 0.0,
+                        f"comm={r.communication:.3g} comp={r.computation:.3g}"
+                        f" mem={r.memory:.3g}"))
+    return rows

@@ -1,0 +1,69 @@
+"""Quickstart: the paper's full WSN pipeline on the Berkeley surrogate.
+
+1. build the sensor network (52 nodes, 10 m radio range, routing tree),
+2. estimate the covariance under the local covariance hypothesis,
+3. extract principal components with the distributed power iteration,
+4. compress measurements via in-network principal component aggregation,
+5. compare network loads against the default (send-everything) scheme.
+
+Run:  PYTHONPATH=src python examples/quickstart.py
+"""
+
+import numpy as np
+
+from repro.core import costs
+from repro.core.compression import SupervisedCompressor, scores_in_network
+from repro.core.pca import DistributedPCA, retained_variance
+from repro.core.topology import build_topology
+from repro.sensors.dataset import berkeley_surrogate, kfold_blocks
+
+
+def main() -> None:
+    print("=== Distributed PCA for WSN: quickstart ===\n")
+    data = berkeley_surrogate(p=52, n_epochs=7200, seed=0)
+    tr, te = kfold_blocks(data.n_epochs, k=10)[0]
+    train, test = data.measurements[tr], data.measurements[te]
+
+    topo = build_topology(data.positions, radio_range=10.0)
+    print(f"network: p={topo.p}, radio 10 m, tree depth "
+          f"{topo.tree.depth.max()}, max children "
+          f"{topo.tree.children_counts().max()}, "
+          f"max neighborhood {topo.neighborhood_sizes().max()}")
+
+    # distributed PCA: local covariance hypothesis + power iteration
+    pca = DistributedPCA(q=5, method="power", t_max=30, delta=1e-3,
+                         cov_mode="masked",
+                         mask=np.asarray(topo.covariance_mask()))
+    res = pca.fit(train)
+    kept = res.components[:, res.valid]
+    frac = retained_variance(test, kept, res.mean)
+    print(f"\ndistributed PCA: {kept.shape[1]} components kept, "
+          f"retained variance on held-out data = {frac:.1%}")
+    print(f"eigenvalues: {np.round(res.eigenvalues, 2)}")
+
+    # in-network score computation for one epoch (PCAg, Sec. 2.3)
+    x_epoch = test[0]
+    z, packets = scores_in_network(topo.tree, kept, x_epoch, mean=res.mean)
+    print(f"\nPCAg epoch: scores {np.round(z, 2)}")
+    print(f"  packets/node: max {packets.max()} "
+          f"(default scheme root load: {costs.default_epoch_load(52)})")
+
+    # supervised compression (Sec. 2.4.1): +/-0.5 degC guarantee
+    comp = SupervisedCompressor(kept, res.mean, epsilon=0.5)
+    out = comp.run(test[:1000])
+    notif = out.flagged.mean()
+    err = np.abs(out.x_hat - test[:1000]).max()
+    print(f"\nsupervised compression (eps=0.5 C): notification rate "
+          f"{notif:.1%}, max sink error {err:.3f} C")
+
+    # load table
+    print("\nload comparison (packets/epoch, highest-loaded node):")
+    for q in (1, 5, 15, 20):
+        load = costs.pcag_epoch_load(q, int(topo.tree.children_counts().max()))
+        print(f"  PCAg q={q:2d}: {load:4d}   "
+              f"{'wins' if costs.pcag_beats_default(q, 6, 52) else 'loses'}"
+              f" vs default {costs.default_epoch_load(52)}")
+
+
+if __name__ == "__main__":
+    main()

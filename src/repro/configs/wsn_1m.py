@@ -1,0 +1,22 @@
+"""wsn-1m — the paper's own system at production scale.
+
+1,048,576 virtual sensors (fleet telemetry channels) sharded over all chips,
+banded covariance with half-width 128 after bandwidth reduction
+(local covariance hypothesis), q=32 principal components, 256-epoch update
+batches.  Not an LM architecture: consumed by the dry-run via
+repro.core.production.
+"""
+import dataclasses
+
+
+@dataclasses.dataclass(frozen=True)
+class WSNConfig:
+    name: str = "wsn-1m"
+    p: int = 1_048_576
+    halfwidth: int = 128
+    q: int = 32
+    batch_epochs: int = 256
+    dtype: str = "float32"
+
+
+CONFIG = WSNConfig()

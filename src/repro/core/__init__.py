@@ -1,0 +1,17 @@
+"""Core library: the paper's contribution (distributed PCA for WSN) in JAX.
+
+Submodules
+----------
+topology         sensor layouts, radio neighborhoods, routing trees
+aggregation      init/f/e primitives, tree simulator, mesh D/A/F collectives
+covariance       streaming covariance (masked dense + banded layouts)
+power_iteration  Algorithms 1-3 (+ beyond-paper blocked orthogonal iteration)
+pca              fit/transform orchestrator
+compression      PCAg scores + supervised (+/- eps) compression
+events           low-variance-component event detection
+costs            Table-1 cost models
+"""
+
+from repro.core.pca import DistributedPCA, PCAResult, retained_variance
+
+__all__ = ["DistributedPCA", "PCAResult", "retained_variance"]

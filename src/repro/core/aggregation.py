@@ -1,0 +1,182 @@
+"""Aggregation service primitives (paper Sec. 2.1).
+
+An aggregation service is defined by three primitives (Sec. 2.1.2):
+
+* ``init``  — turn a local measurement into a partial state record,
+* ``f``     — merge two partial state records (associative + commutative),
+* ``e``     — evaluate the root record into the requested result.
+
+This module provides
+
+1. a faithful **routing-tree simulator** (:func:`aggregate_tree`) that executes
+   init/f/e along a :class:`~repro.core.topology.RoutingTree` leaf-to-root and
+   counts the packets each node processes (used to validate the cost models of
+   Sec. 2.1.3 / Table 1 against actual packet counts), and
+
+2. the **TPU mapping** of the D / A / F operations onto mesh collectives
+   (:func:`a_op`, :func:`d_op`, :func:`f_op`, :func:`halo_exchange`) used by
+   the production distributed path (DESIGN.md Sec. 2).  ``a_op`` fuses the
+   paper's A (aggregate up) and F (flood down) because ``psum`` delivers the
+   reduced value to every participant.
+
+The classic example from Sec. 2.1.2 (Euclidean norm of the network's
+measurement vector) is provided as :data:`NORM_PRIMITIVES` and used in tests.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.topology import RoutingTree
+
+__all__ = [
+    "AggregationPrimitives", "NORM_PRIMITIVES", "aggregate_tree",
+    "TreeAggregationResult", "a_op", "d_op", "f_op", "halo_exchange",
+    "tree_aggregate_fn",
+]
+
+
+@dataclasses.dataclass(frozen=True)
+class AggregationPrimitives:
+    """The (init, f, e) triple of Sec. 2.1.2."""
+
+    init: Callable[[Any], Any]
+    merge: Callable[[Any, Any], Any]
+    evaluate: Callable[[Any], Any]
+    record_size: Callable[[Any], int] = lambda record: int(np.size(record))
+
+
+NORM_PRIMITIVES = AggregationPrimitives(
+    init=lambda x: np.asarray(x, dtype=np.float64) ** 2,
+    merge=lambda a, b: a + b,
+    evaluate=lambda rec: np.sqrt(rec),
+)
+
+
+@dataclasses.dataclass(frozen=True)
+class TreeAggregationResult:
+    value: Any                    # e(root record)
+    packets: np.ndarray           # (p,) packets processed per node (rx + tx)
+    record_sizes: np.ndarray      # (p,) size of the record each node sent
+
+
+def aggregate_tree(tree: RoutingTree, values: Sequence[Any],
+                   primitives: AggregationPrimitives) -> TreeAggregationResult:
+    """Execute one epoch of the aggregation service on the routing tree.
+
+    Nodes are processed deepest-first; each node merges its children's partial
+    state records into its own ``init`` record and transmits the result to its
+    parent (paper Fig. 2/3).  Packet accounting matches Sec. 2.1.3's A
+    operation: node i transmits ``q`` packets (q = record size) and receives
+    the records of its direct children.
+    """
+    p = tree.p
+    records: list[Any] = [primitives.init(values[i]) for i in range(p)]
+    rx = np.zeros(p, dtype=np.int64)
+    tx = np.zeros(p, dtype=np.int64)
+    sizes = np.zeros(p, dtype=np.int64)
+
+    order = np.argsort(-tree.depth)          # deepest first
+    for i in order:
+        i = int(i)
+        par = int(tree.parent[i])
+        size = primitives.record_size(records[i])
+        sizes[i] = size
+        if par >= 0:
+            records[par] = primitives.merge(records[par], records[i])
+            tx[i] += size
+            rx[par] += size
+    # the root transmits the final record to the base station
+    tx[tree.root] += sizes[tree.root]
+    return TreeAggregationResult(
+        value=primitives.evaluate(records[tree.root]),
+        packets=rx + tx,
+        record_sizes=sizes,
+    )
+
+
+def tree_aggregate_fn(tree: RoutingTree,
+                      primitives: AggregationPrimitives) -> Callable:
+    """An ``aggregate`` callable (for power_iteration) backed by the simulator.
+
+    Takes a per-node array of local partial sums (axis 0 = node) and returns
+    the tree-aggregated total, mimicking an A+F round trip.  Only used in the
+    WSN simulation/tests — the production path uses :func:`a_op`.
+    """
+
+    def aggregate(local: np.ndarray) -> np.ndarray:
+        res = aggregate_tree(tree, list(np.asarray(local)), primitives)
+        return res.value
+
+    return aggregate
+
+
+# --------------------------------------------------------------------------
+# TPU mapping: D / A / F operations as mesh collectives
+# --------------------------------------------------------------------------
+def a_op(x: jnp.ndarray, axis_name: str | tuple[str, ...]) -> jnp.ndarray:
+    """A operation (+ fused F): global sum delivered to every device.
+
+    XLA lowers ``psum`` to a reduction tree / bidirectional ring over the ICI
+    links — the aggregation-tree structure of TAG, scheduled by the compiler.
+    """
+    return jax.lax.psum(x, axis_name)
+
+
+def f_op(x: jnp.ndarray, axis_name: str, root: int = 0) -> jnp.ndarray:
+    """F operation: flood the root's value to all devices on the axis.
+
+    Realized as a masked psum (only the root contributes); with ``psum``'s
+    all-reduce semantics every device receives the root record.
+    """
+    idx = jax.lax.axis_index(axis_name)
+    contrib = jnp.where(idx == root, x, jnp.zeros_like(x))
+    return jax.lax.psum(contrib, axis_name)
+
+
+def d_op(x: jnp.ndarray, axis_name: str, tiled: bool = False) -> jnp.ndarray:
+    """D operation (default collection): gather every device's raw record."""
+    return jax.lax.all_gather(x, axis_name, tiled=tiled)
+
+
+def halo_exchange(block: jnp.ndarray, halo: int, axis_name: str,
+                  wrap: bool = False) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Neighbor exchange of boundary columns over the device ring.
+
+    The paper's 'node broadcasts v_t[i] and receives v_t[j], j in N_i'
+    (Sec. 3.4.3) mapped onto ``lax.ppermute``: each device sends its right
+    edge to the right neighbor and its left edge to the left neighbor.
+
+    Parameters
+    ----------
+    block: (..., local_p) local shard of the feature axis.
+    halo: number of boundary elements to exchange (>= covariance half-width
+        remainder at the block edge).
+    wrap: if False (default), the ring is broken at the ends (block boundary
+        condition of a banded matrix); edge devices receive zeros.
+
+    Returns
+    -------
+    (left_halo, right_halo): the ``halo`` elements received from the left and
+    right neighbors, shaped (..., halo).
+    """
+    n = jax.lax.axis_size(axis_name)
+    right_edge = block[..., -halo:]
+    left_edge = block[..., :halo]
+
+    def perm(shift):
+        pairs = [(i, (i + shift) % n) for i in range(n)]
+        if not wrap:
+            pairs = [(s, d) for s, d in pairs if 0 <= s + shift < n]
+        return pairs
+
+    # send right edge rightward -> arrives as neighbor's left halo
+    from_left = jax.lax.ppermute(right_edge, axis_name, perm(+1))
+    # send left edge leftward -> arrives as neighbor's right halo
+    from_right = jax.lax.ppermute(left_edge, axis_name, perm(-1))
+    return from_left, from_right

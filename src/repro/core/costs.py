@@ -1,0 +1,90 @@
+"""Cost models (paper Sec. 2.1.3, 3.2.1, 3.3.2, 3.4.5 and Table 1).
+
+Closed-form communication / computation / memory costs for the centralized
+and distributed variants, parameterized by
+
+*  p      — network size,
+*  T      — number of training epochs used for the covariance,
+*  q      — number of principal components,
+*  n_max  — |N_{i*}|, largest neighborhood size,
+*  c_max  — C_{i*}, largest number of routing-tree children,
+*  iters  — PIM iterations per component.
+
+These formulas are validated against *actual packet counts* from the
+routing-tree simulator in tests/test_costs.py, and drive the Fig. 9/10/12/14
+benchmarks.  The TPU analogue of each quantity is noted inline.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+__all__ = ["CostReport", "centralized_covariance", "distributed_covariance",
+           "centralized_eigenvectors", "distributed_eigenvectors",
+           "pcag_epoch_load", "default_epoch_load", "table1"]
+
+
+@dataclasses.dataclass(frozen=True)
+class CostReport:
+    communication: float   # highest per-node network load (packets)
+    computation: float     # highest per-node flop count (order)
+    memory: float          # highest per-node storage (scalars)
+
+
+def centralized_covariance(p: int, T: int) -> CostReport:
+    """Sec. 3.2.1: T default collections; O(T p^2) flops at the base station."""
+    return CostReport(communication=T * p, computation=T * p * p, memory=p * p)
+
+
+def distributed_covariance(n_max: int, T: int) -> CostReport:
+    """Sec. 3.3.2: per epoch 1 send + |N_i| receives; O(|N_i|) flops/memory."""
+    return CostReport(communication=T * (n_max + 1), computation=T * n_max,
+                      memory=2 * n_max + 1)
+
+
+def centralized_eigenvectors(p: int, q: int) -> CostReport:
+    """Sec. 3.2.1: O(p^3) eigendecomposition; qp feedback packets."""
+    return CostReport(communication=q * p, computation=p ** 3, memory=p * p)
+
+
+def distributed_eigenvectors(p: int, q: int, n_max: int, c_max: int,
+                             iters: int = 20) -> CostReport:
+    """Sec. 3.4.5: per iteration of component k —
+    Cv: 1 send + n_max receives;  normalization: 1 A + 1 F;
+    orthogonalization: (k-1) A + (k-1) F   (record elements counted).
+    Highest load O(q |N*| + q^2 C*); computation O(q(|N*| + C*));
+    memory O(q + |N*|)."""
+    comm = 0.0
+    for k in range(1, q + 1):
+        per_iter = (n_max + 1) + k * (c_max + 1 + 2)
+        comm += iters * per_iter
+    comp = iters * q * (n_max + q * c_max)
+    mem = q + n_max
+    return CostReport(communication=comm, computation=comp, memory=mem)
+
+
+def default_epoch_load(p: int) -> int:
+    """Highest per-node load of the D scheme: the root processes 2p-1."""
+    return 2 * p - 1
+
+
+def pcag_epoch_load(q: int, c_max: int) -> int:
+    """Highest per-node load of the PCAg scheme: q (C* + 1)  (Eq. 7)."""
+    return q * (c_max + 1)
+
+
+def pcag_beats_default(q: int, c_max: int, p: int) -> bool:
+    """Eq. (7): q (C* + 1) <= 2p - 1."""
+    return pcag_epoch_load(q, c_max) <= default_epoch_load(p)
+
+
+def table1(p: int, T: int, q: int, n_max: int, c_max: int,
+           iters: int = 20) -> dict[str, CostReport]:
+    """The four rows of Table 1."""
+    return {
+        "covariance/centralized": centralized_covariance(p, T),
+        "covariance/distributed": distributed_covariance(n_max, T),
+        "eigenvectors/centralized": centralized_eigenvectors(p, q),
+        "eigenvectors/distributed": distributed_eigenvectors(p, q, n_max,
+                                                             c_max, iters),
+    }

@@ -1,0 +1,191 @@
+"""Streaming covariance estimation (paper Sec. 3.2-3.3).
+
+Two layouts are provided:
+
+* **Masked dense** (:class:`CovState`) — the paper's WSN formulation: the full
+  ``p x p`` matrix with the *local covariance hypothesis* mask
+  ``c_ij = 0 for j not in N_i`` (Sec. 3.3).  Used for the 52-sensor experiments
+  and as the oracle for the banded kernels.
+* **Banded** (:class:`BandedCovState`) — the TPU-native regularization
+  (DESIGN.md Sec. 2.1): after a bandwidth-reducing relabelling, the mask is a
+  band of half-width ``h`` and the matrix is stored as ``2h+1`` diagonals of
+  length ``p``.  This is the layout consumed by ``repro.kernels.banded_matvec``
+  and ``repro.kernels.cov_update`` and by the halo-exchange distributed path.
+
+Both maintain the sufficient statistics of Eq. (9)-(10):
+``t``, ``S_i = sum_tau x_i[tau]`` and ``S_ij = sum_tau x_i[tau] x_j[tau]``,
+so the covariance estimate ``c_ij = S_ij/t - S_i S_j / t^2`` can be updated
+from measurement batches of any size.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = [
+    "CovState", "cov_init", "cov_update", "cov_estimate",
+    "BandedCovState", "banded_init", "banded_update", "banded_estimate",
+    "band_to_dense", "dense_to_band", "banded_matvec_ref", "banded_matmul_ref",
+    "mask_from_band",
+]
+
+
+# --------------------------------------------------------------------------
+# Masked dense layout (paper-faithful)
+# --------------------------------------------------------------------------
+class CovState(NamedTuple):
+    t: jnp.ndarray          # () scalar, number of epochs seen
+    s: jnp.ndarray          # (p,)   S_i
+    sxy: jnp.ndarray        # (p, p) S_ij, only entries allowed by the mask
+    mask: jnp.ndarray       # (p, p) bool; True where c_ij may be nonzero
+
+
+def cov_init(p: int, mask: np.ndarray | jnp.ndarray | None = None,
+             dtype=jnp.float32) -> CovState:
+    if mask is None:
+        mask = jnp.ones((p, p), dtype=bool)
+    mask = jnp.asarray(mask, dtype=bool)
+    return CovState(
+        t=jnp.zeros((), dtype=dtype),
+        s=jnp.zeros((p,), dtype=dtype),
+        sxy=jnp.zeros((p, p), dtype=dtype),
+        mask=mask,
+    )
+
+
+def cov_update(state: CovState, x: jnp.ndarray) -> CovState:
+    """Fold a batch ``x`` of shape (n, p) into the sufficient statistics.
+
+    Equivalent to n applications of the paper's per-epoch recursion Eq. (10).
+    The masked entries of S_ij are never materialized as communication in the
+    distributed setting; here we compute the full outer product and mask, which
+    is the correct oracle semantics.
+    """
+    x = jnp.asarray(x, dtype=state.s.dtype)
+    n = x.shape[0]
+    sxy = state.sxy + jnp.where(state.mask, x.T @ x, 0.0)
+    return CovState(t=state.t + n, s=state.s + x.sum(axis=0), sxy=sxy,
+                    mask=state.mask)
+
+
+def cov_estimate(state: CovState) -> jnp.ndarray:
+    """Eq. (9): c_ij = S_ij/t - S_i S_j / t^2, masked."""
+    t = jnp.maximum(state.t, 1.0)
+    c = state.sxy / t - jnp.outer(state.s, state.s) / (t * t)
+    return jnp.where(state.mask, c, 0.0)
+
+
+# --------------------------------------------------------------------------
+# Banded layout (TPU-native)
+# --------------------------------------------------------------------------
+class BandedCovState(NamedTuple):
+    t: jnp.ndarray          # ()
+    s: jnp.ndarray          # (p,)
+    band: jnp.ndarray       # (2h+1, p): band[k, i] = S_{i, i+k-h}
+    halfwidth: int
+
+
+def banded_init(p: int, halfwidth: int, dtype=jnp.float32) -> BandedCovState:
+    return BandedCovState(
+        t=jnp.zeros((), dtype=dtype),
+        s=jnp.zeros((p,), dtype=dtype),
+        band=jnp.zeros((2 * halfwidth + 1, p), dtype=dtype),
+        halfwidth=halfwidth,
+    )
+
+
+def _shifted(x: jnp.ndarray, offset: int) -> jnp.ndarray:
+    """Column j of result = x[:, j+offset], zero-padded out of range."""
+    p = x.shape[-1]
+    rolled = jnp.roll(x, -offset, axis=-1)
+    j = jnp.arange(p)
+    valid = (j + offset >= 0) & (j + offset < p)
+    return jnp.where(valid, rolled, 0.0)
+
+
+def banded_update(state: BandedCovState, x: jnp.ndarray) -> BandedCovState:
+    """Banded version of Eq. (10): band[k,i] += sum_t x[t,i] x[t,i+k-h]."""
+    x = jnp.asarray(x, dtype=state.s.dtype)
+    h = state.halfwidth
+
+    def one_offset(k):
+        return jnp.sum(x * _shifted(x, k - h), axis=0)
+
+    delta = jnp.stack([one_offset(k) for k in range(2 * h + 1)], axis=0)
+    return BandedCovState(t=state.t + x.shape[0], s=state.s + x.sum(axis=0),
+                          band=state.band + delta, halfwidth=h)
+
+
+def banded_estimate(state: BandedCovState) -> jnp.ndarray:
+    """Banded covariance diagonals: c_band[k,i] = C[i, i+k-h]."""
+    t = jnp.maximum(state.t, 1.0)
+    h = state.halfwidth
+    mean_term = jnp.stack(
+        [state.s * _shifted(state.s[None, :], k - h)[0] for k in range(2 * h + 1)],
+        axis=0)
+    band = state.band / t - mean_term / (t * t)
+    # zero out-of-range entries explicitly
+    p = state.s.shape[0]
+    j = jnp.arange(p)[None, :]
+    k = jnp.arange(2 * h + 1)[:, None]
+    valid = (j + k - h >= 0) & (j + k - h < p)
+    return jnp.where(valid, band, 0.0)
+
+
+def band_to_dense(band: jnp.ndarray) -> jnp.ndarray:
+    """(2h+1, p) diagonals -> dense (p, p)."""
+    nb, p = band.shape
+    h = (nb - 1) // 2
+    out = jnp.zeros((p, p), dtype=band.dtype)
+    for k in range(nb):
+        off = k - h
+        diag = band[k]
+        i = jnp.arange(p)
+        j = i + off
+        valid = (j >= 0) & (j < p)
+        out = out.at[i[valid], j[valid]].set(diag[valid])
+    return out
+
+
+def dense_to_band(c: jnp.ndarray, halfwidth: int) -> jnp.ndarray:
+    """Dense (p, p) -> (2h+1, p) diagonals (entries outside the band dropped)."""
+    p = c.shape[0]
+    h = halfwidth
+    rows = []
+    i = jnp.arange(p)
+    for k in range(2 * h + 1):
+        j = i + (k - h)
+        valid = (j >= 0) & (j < p)
+        jc = jnp.clip(j, 0, p - 1)
+        rows.append(jnp.where(valid, c[i, jc], 0.0))
+    return jnp.stack(rows, axis=0)
+
+
+def mask_from_band(p: int, halfwidth: int) -> np.ndarray:
+    """Dense bool mask equivalent to a band of half-width h."""
+    i = np.arange(p)
+    return np.abs(i[:, None] - i[None, :]) <= halfwidth
+
+
+def banded_matvec_ref(band: jnp.ndarray, v: jnp.ndarray) -> jnp.ndarray:
+    """(Cv)[i] = sum_k band[k,i] * v[i+k-h] — the paper's neighbor-local Cv."""
+    nb, p = band.shape
+    h = (nb - 1) // 2
+    acc = jnp.zeros_like(v)
+    for k in range(nb):
+        acc = acc + band[k] * _shifted(v[None, :], k - h)[0]
+    return acc
+
+
+def banded_matmul_ref(band: jnp.ndarray, V: jnp.ndarray) -> jnp.ndarray:
+    """C @ V for V of shape (p, q) — the blocked orthogonal-iteration variant."""
+    nb, p = band.shape
+    h = (nb - 1) // 2
+    acc = jnp.zeros_like(V)
+    for k in range(nb):
+        acc = acc + band[k][:, None] * _shifted(V.T, k - h).T
+    return acc

@@ -1,0 +1,209 @@
+"""Power iteration method (paper Sec. 3.4, Algorithms 1-3).
+
+Paper-faithful pieces
+---------------------
+* :func:`power_iteration` — Algorithm 1: repeated ``v <- C v / ||C v||`` with
+  the dual stopping rule (max iterations and/or update norm ``delta``).
+* :func:`deflated_power_iteration` — Algorithm 2: q components by deflation
+  (orthogonalize against previously found eigenvectors inside the loop), with
+  the *sign criterion* for negative-eigenvalue detection
+  ``sign( sum_i sign(v_t[i] * v_{t+1}[i]) )`` used as the stopping rule.
+* All global reductions (norm, deflation dot products) are routed through an
+  ``aggregate`` callable so the same code runs single-host (identity), on a
+  simulated routing tree, or as ``jax.lax.psum`` over a mesh axis
+  (Sec. 3.4.3-3.4.4: the A and F operations).
+
+Beyond-paper piece (recorded separately in EXPERIMENTS.md)
+----------------------------------------------------------
+* :func:`orthogonal_iteration` — blocked subspace (simultaneous) iteration:
+  ``V <- C V`` is a banded *matmul* (MXU-friendly) and orthonormalization uses
+  a distributed Gram matrix + small replicated Cholesky, replacing the paper's
+  q sequential deflated solves and its O(q^2) aggregation traffic with O(q^2)
+  *elements in one* collective.
+"""
+
+from __future__ import annotations
+
+from functools import partial
+from typing import Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+__all__ = [
+    "PowerIterResult", "power_iteration", "eigenvalue_sign",
+    "DeflationResult", "deflated_power_iteration",
+    "orthogonal_iteration", "OrthoIterResult",
+]
+
+Aggregate = Callable[[jnp.ndarray], jnp.ndarray]
+
+
+def _identity_aggregate(x: jnp.ndarray) -> jnp.ndarray:
+    return x
+
+
+class PowerIterResult(NamedTuple):
+    v: jnp.ndarray           # (p,) eigenvector estimate (unit norm)
+    eigenvalue: jnp.ndarray  # () signed eigenvalue estimate
+    iterations: jnp.ndarray  # () int
+    delta: jnp.ndarray       # () final update norm ||v_{t+1} - v_t||
+
+
+def eigenvalue_sign(v_prev: jnp.ndarray, v_next: jnp.ndarray,
+                    aggregate: Aggregate = _identity_aggregate) -> jnp.ndarray:
+    """Paper's sign criterion: sign(sum_i sign(v_t[i] v_{t+1}[i])).
+
+    A negative eigenvalue flips the sign of every component each iteration;
+    averaging the per-component signs makes the estimate robust to numerical
+    error.  ``aggregate`` sums the local partial sums (an A operation).
+    """
+    s = aggregate(jnp.sum(jnp.sign(v_prev * v_next)))
+    return jnp.sign(s)
+
+
+def power_iteration(matvec: Callable[[jnp.ndarray], jnp.ndarray],
+                    v0: jnp.ndarray,
+                    t_max: int = 50,
+                    delta: float = 1e-3,
+                    aggregate: Aggregate = _identity_aggregate,
+                    orthogonal_to: jnp.ndarray | None = None) -> PowerIterResult:
+    """Algorithm 1 (and the inner loop of Algorithm 2 when ``orthogonal_to``).
+
+    Parameters
+    ----------
+    matvec: computes ``C v`` (locally; any required neighbor exchange happens
+        inside, e.g. the banded halo exchange).
+    v0: initial vector (must not be orthogonal to the principal eigenvector).
+    aggregate: global-sum primitive (identity locally, psum on a mesh, tree
+        aggregation in the WSN simulator).  Used for norms and dot products.
+    orthogonal_to: optional (p, k) matrix of previously found eigenvectors —
+        the deflation step of Algorithm 2.
+    """
+    p = v0.shape[0]
+    W = orthogonal_to if orthogonal_to is not None else jnp.zeros((p, 0), v0.dtype)
+
+    def project_out(v):
+        if W.shape[1] == 0:
+            return v
+        # k-1 dot products — one A op with a vector-valued partial record
+        coeff = aggregate(W.T @ v)
+        return v - W @ coeff
+
+    def norm(v):
+        return jnp.sqrt(aggregate(jnp.sum(v * v)))
+
+    v0n = v0 / jnp.maximum(norm(v0), 1e-30)
+
+    def cond(carry):
+        _, _, t, d, _ = carry
+        return jnp.logical_and(t < t_max, d > delta)
+
+    def body(carry):
+        v, _, t, _, _ = carry
+        cv = matvec(v)
+        cv = project_out(cv)
+        nrm = norm(cv)
+        v_next = cv / jnp.maximum(nrm, 1e-30)
+        sign = eigenvalue_sign(v, v_next, aggregate)
+        # measure the update against the sign-aligned vector so that
+        # negative-eigenvalue oscillation does not mask convergence
+        d = jnp.sqrt(aggregate(jnp.sum((v_next * sign - v) ** 2)))
+        return (v_next, sign * nrm, t + 1, d, sign)
+
+    init = (v0n, jnp.zeros((), v0.dtype), jnp.zeros((), jnp.int32),
+            jnp.array(jnp.inf, v0.dtype), jnp.ones((), v0.dtype))
+    v, lam, t, d, _ = jax.lax.while_loop(cond, body, init)
+    return PowerIterResult(v=v, eigenvalue=lam, iterations=t, delta=d)
+
+
+class DeflationResult(NamedTuple):
+    W: jnp.ndarray            # (p, q) eigenvector estimates, column k = w_{k+1}
+    eigenvalues: jnp.ndarray  # (q,) signed eigenvalue estimates
+    valid: jnp.ndarray        # (q,) bool — False from the first negative
+    iterations: jnp.ndarray   # (q,) int iterations used per component
+
+
+def deflated_power_iteration(matvec: Callable[[jnp.ndarray], jnp.ndarray],
+                             p: int, q: int, key: jax.Array,
+                             t_max: int = 50, delta: float = 1e-3,
+                             aggregate: Aggregate = _identity_aggregate,
+                             dtype=jnp.float32) -> DeflationResult:
+    """Algorithm 2: q components by deflation + sign-criterion stopping.
+
+    The per-component loop is a Python loop (q is a static, small number —
+    the paper's regime); each component runs a jittable while_loop.  The
+    paper's 'until k = q or lambda_k < 0' stop is realized as a validity mask:
+    components at or after the first negative eigenvalue are flagged invalid
+    (Sec. 3.3.1: discard eigenvectors with negative eigenvalues).
+    """
+    keys = jax.random.split(key, q)
+    W = jnp.zeros((p, q), dtype)
+    lams = jnp.zeros((q,), dtype)
+    iters = jnp.zeros((q,), jnp.int32)
+    valid = jnp.ones((q,), bool)
+    alive = jnp.ones((), bool)
+    for k in range(q):
+        v0 = jax.random.normal(keys[k], (p,), dtype)
+        res = power_iteration(matvec, v0, t_max=t_max, delta=delta,
+                              aggregate=aggregate, orthogonal_to=W[:, :k])
+        W = W.at[:, k].set(res.v)
+        lams = lams.at[k].set(res.eigenvalue)
+        iters = iters.at[k].set(res.iterations)
+        alive = jnp.logical_and(alive, res.eigenvalue > 0)
+        valid = valid.at[k].set(alive)
+    return DeflationResult(W=W, eigenvalues=lams, valid=valid, iterations=iters)
+
+
+class OrthoIterResult(NamedTuple):
+    W: jnp.ndarray            # (p, q) orthonormal basis, Rayleigh-ordered
+    eigenvalues: jnp.ndarray  # (q,) Rayleigh-quotient eigenvalue estimates
+    iterations: jnp.ndarray   # () int
+
+
+def orthogonal_iteration(matmul: Callable[[jnp.ndarray], jnp.ndarray],
+                         p: int, q: int, key: jax.Array,
+                         t_max: int = 50, delta: float = 1e-3,
+                         aggregate: Aggregate = _identity_aggregate,
+                         dtype=jnp.float32,
+                         eps: float = 1e-8) -> OrthoIterResult:
+    """Blocked subspace iteration (beyond-paper; see module docstring).
+
+    One iteration:  ``V <- C V``;  Gram ``G = V^T V`` (ONE aggregation of a
+    q x q record, versus the paper's k separate A/F rounds per component);
+    ``V <- V chol(G)^{-T}``.  After convergence the small Rayleigh problem
+    ``H = V^T (C V)`` is solved (replicated, q x q — the paper's 'base station
+    computes the small problem' pattern) to order the basis.
+    """
+    v0 = jax.random.normal(key, (p, q), dtype)
+
+    def orthonormalize(V):
+        G = aggregate(V.T @ V)                       # one A+F op, q^2 elements
+        L = jnp.linalg.cholesky(G + eps * jnp.eye(q, dtype=dtype))
+        # V @ inv(L)^T: the inverse of the tiny replicated factor keeps the
+        # update row-local on a sharded V (triangular_solve makes GSPMD
+        # all-gather V — EXPERIMENTS.md Sec. Perf hillclimb 1)
+        return V @ jnp.linalg.inv(L).T
+
+    def cond(carry):
+        _, t, d = carry
+        return jnp.logical_and(t < t_max, d > delta)
+
+    def body(carry):
+        V, t, _ = carry
+        V_next = orthonormalize(matmul(V))
+        # subspace distance proxy: per-column update norm after sign alignment
+        sign = jnp.sign(jnp.sum(V * V_next, axis=0))
+        d = jnp.sqrt(aggregate(jnp.sum((V_next * sign - V) ** 2)) / q)
+        return (V_next, t + 1, d)
+
+    V0 = orthonormalize(v0)
+    V, t, _ = jax.lax.while_loop(
+        cond, body, (V0, jnp.zeros((), jnp.int32), jnp.array(jnp.inf, dtype)))
+
+    CV = matmul(V)
+    H = aggregate(V.T @ CV)                          # (q, q) Rayleigh matrix
+    evals, U = jnp.linalg.eigh(H)                    # ascending
+    order = jnp.argsort(-evals)
+    return OrthoIterResult(W=V @ U[:, order], eigenvalues=evals[order],
+                           iterations=t)

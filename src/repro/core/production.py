@@ -1,0 +1,85 @@
+"""Production-scale distributed PCA steps (the paper's system on a pod).
+
+The feature axis (p "virtual sensors" — e.g. per-channel telemetry streams
+of a fleet) is sharded over every chip of the mesh; the banded covariance
+(local covariance hypothesis after bandwidth reduction — DESIGN.md Sec. 2.1)
+is stored as 2h+1 diagonals sharded the same way.
+
+Under jit + GSPMD:
+* the shifted products of the banded ops become **collective-permute** halo
+  exchanges with the ±1 ring neighbors (the paper's neighbor broadcast),
+* the Gram matrix / norms become **all-reduce** (the paper's A+F tree ops),
+* nothing else crosses chips — exactly the paper's communication structure.
+
+Step functions lowered by the dry-run:
+    cov_update_step      Eq. (10) streaming update from an epoch batch
+    pim_block_step       one blocked orthogonal-iteration round (optimized)
+    pim_deflated_step    one deflated single-vector PIM round (paper-faithful)
+    transform_step       PCAg scores for an epoch batch (Eq. 6)
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import covariance as cov
+
+__all__ = ["cov_update_step", "pim_block_step", "pim_deflated_step",
+           "transform_step"]
+
+
+def cov_update_step(state: cov.BandedCovState,
+                    x: jnp.ndarray) -> cov.BandedCovState:
+    """Fold an (n, p) epoch batch into the banded sufficient statistics."""
+    return cov.banded_update(state, x)
+
+
+def pim_block_step(band: jnp.ndarray, v: jnp.ndarray,
+                   eps: float = 1e-8) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """One blocked orthogonal-iteration round (beyond-paper variant).
+
+    v: (p, q).  Returns (v_next orthonormal, Rayleigh eigenvalue estimates).
+    The Gram matrix is the single A+F aggregation of the round (q^2 scalars).
+
+    Perf note (EXPERIMENTS.md Sec. Perf, hillclimb 1): the orthonormalization
+    is written as ``CV @ inv(L)^T`` with the inverse taken on the tiny
+    replicated (q, q) Cholesky factor — a row-local matmul on the sharded
+    feature axis.  The equivalent ``triangular_solve(L, CV^T)`` made GSPMD
+    all-gather the full (p, q) iterate (128 MiB/device at p=1M), turning the
+    paper's neighbor-local algorithm collective-bound.
+    """
+    q = v.shape[1]
+    cv = cov.banded_matmul_ref(band, v)              # halo exchanges
+    g = cv.T @ cv                                    # -> all-reduce (q x q)
+    l = jnp.linalg.cholesky(g + eps * jnp.eye(q, dtype=v.dtype))
+    l_inv = jnp.linalg.inv(l)                        # replicated small matrix
+    v_next = cv @ l_inv.T                            # row-local
+    rayleigh = jnp.diag(v.T @ cv)
+    return v_next, rayleigh
+
+
+def pim_deflated_step(band: jnp.ndarray, v: jnp.ndarray,
+                      w_prev: jnp.ndarray) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """One paper-faithful Algorithm-2 inner iteration for one component.
+
+    v: (p,); w_prev: (p, k-1) previously found components.  Performs
+    Cv (halo exchange), deflation dot products + norm (the paper's k-1 A ops
+    + 1 A op, fused by XLA into reductions), normalization.
+    Returns (v_next, eigenvalue_estimate).
+    """
+    cv = cov.banded_matvec_ref(band, v)
+    coeff = w_prev.T @ cv                            # k-1 scalar products
+    cv = cv - w_prev @ coeff
+    nrm = jnp.sqrt(jnp.sum(cv * cv))
+    sign = jnp.sign(jnp.sum(jnp.sign(v * cv)))       # paper's sign criterion
+    return cv / jnp.maximum(nrm, 1e-30), sign * nrm
+
+
+def transform_step(w: jnp.ndarray, mean: jnp.ndarray,
+                   x: jnp.ndarray) -> jnp.ndarray:
+    """PCAg scores Z = (X - mean) W for an (n, p) epoch batch.
+
+    The contraction over the sharded p axis is the in-network aggregation:
+    XLA lowers it to partial products + one all-reduce of (n, q) scores."""
+    return (x - mean[None, :]) @ w

@@ -1,0 +1,134 @@
+"""Low-rank gradient compression by distributed power iteration.
+
+The paper's algorithm — distributed PIM with tree aggregation (Sec. 3.4) —
+applied to the *gradient matrix* of data-parallel training.  This is the
+PowerSGD scheme (Vogels et al., 2019), which is exactly one warm-started
+iteration of Algorithm 1 per step with the A operation realized as a psum
+over the data axis:
+
+    P = G Q          (local matvec block — the 'Cv' step)
+    P = A(P)         (aggregation: psum over replicas; q*r elements
+                      instead of the full n*m gradient)
+    P = orth(P)      (Gram-Cholesky orthonormalization — the paper's
+                      normalization step, batched as in our beyond-paper
+                      blocked orthogonal iteration)
+    Q = G^T P ;  Q = A(Q)
+    G_hat = P Q^T    (rank-r approximation; broadcast = fused F operation)
+
+plus **error feedback**: the compression residual is added to the next
+step's gradient, which is what makes the method converge to the uncompressed
+optimum.  Communication per step drops from n*m to r*(n+m) per matrix.
+
+Matrices with stacked leading dims (scan-over-layers: (L, n, m)) are handled
+batched via vmap; small/1-D tensors (norms, biases) bypass compression and
+are reduced exactly.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["CompressorState", "init_compressor", "compress_gradients",
+           "compression_ratio"]
+
+Reduce = Callable[[jnp.ndarray], jnp.ndarray]
+
+
+def _eligible(x: jnp.ndarray, rank: int) -> bool:
+    if x.ndim < 2:
+        return False
+    n, m = x.shape[-2], x.shape[-1]
+    # compress only when it actually shrinks traffic
+    return n * m > 2 * rank * (n + m)
+
+
+class CompressorState(NamedTuple):
+    q: dict          # per-leaf Q factor (or None)
+    error: dict      # per-leaf error-feedback buffer (or None)
+    rank: int
+
+
+def init_compressor(params, rank: int, key: jax.Array) -> CompressorState:
+    leaves, treedef = jax.tree.flatten(params)
+    keys = jax.random.split(key, len(leaves))
+
+    def init_leaf(x, k):
+        if not _eligible(x, rank):
+            return None
+        m = x.shape[-1]
+        batch = x.shape[:-2]
+        return jax.random.normal(k, (*batch, m, rank), jnp.float32)
+
+    qs = [init_leaf(x, k) for x, k in zip(leaves, keys)]
+    errs = [jnp.zeros_like(x, dtype=jnp.float32) if q is not None else None
+            for x, q in zip(leaves, qs)]
+    return CompressorState(q=jax.tree.unflatten(treedef, qs),
+                           error=jax.tree.unflatten(treedef, errs),
+                           rank=rank)
+
+
+def _orthonormalize(p: jnp.ndarray, eps: float = 1e-8) -> jnp.ndarray:
+    """Gram-Cholesky orthonormalization of the columns of p (..., n, r)."""
+    g = jnp.einsum("...nr,...ns->...rs", p, p)
+    r = p.shape[-1]
+    l = jnp.linalg.cholesky(g + eps * jnp.eye(r, dtype=p.dtype))
+    return jax.lax.linalg.triangular_solve(l, p, left_side=False, lower=True,
+                                           transpose_a=True)
+
+
+def _compress_leaf(g: jnp.ndarray, q: jnp.ndarray, e: jnp.ndarray,
+                   reduce_fn: Reduce):
+    """One warm-started distributed power-iteration round on one matrix."""
+    g32 = g.astype(jnp.float32) + e                   # error feedback
+    p = jnp.einsum("...nm,...mr->...nr", g32, q)
+    p = _orthonormalize(reduce_fn(p))                 # A op + normalization
+    q_new = reduce_fn(jnp.einsum("...nm,...nr->...mr", g32, p))  # A op
+    g_hat = jnp.einsum("...nr,...mr->...nm", p, q_new)
+    e_new = g32 - g_hat                               # next-step feedback
+    return g_hat.astype(g.dtype), q_new, e_new
+
+
+def compress_gradients(grads, state: CompressorState,
+                       reduce_fn: Reduce | None = None):
+    """Compress + reduce a gradient pytree.
+
+    ``reduce_fn`` averages across data-parallel replicas (e.g.
+    ``lambda x: jax.lax.pmean(x, 'data')`` inside shard_map/jit, identity for
+    single-process use).  Uncompressed leaves are passed through ``reduce_fn``
+    exactly.  Returns (new_grads, new_state).
+    """
+    reduce_fn = reduce_fn or (lambda x: x)
+
+    def per_leaf(g, q, e):
+        if q is None:
+            return reduce_fn(g), None, None
+        return _compress_leaf(g, q, e, reduce_fn)
+
+    flat_g, treedef = jax.tree.flatten(grads)
+    flat_q = treedef.flatten_up_to(state.q)
+    flat_e = treedef.flatten_up_to(state.error)
+    out = [per_leaf(g, q, e) for g, q, e in zip(flat_g, flat_q, flat_e)]
+    new_g = jax.tree.unflatten(treedef, [o[0] for o in out])
+    new_q = jax.tree.unflatten(treedef, [o[1] for o in out])
+    new_e = jax.tree.unflatten(treedef, [o[2] for o in out])
+    return new_g, CompressorState(q=new_q, error=new_e, rank=state.rank)
+
+
+def compression_ratio(params, rank: int) -> float:
+    """Bytes on the wire: compressed / uncompressed (lower is better)."""
+    full = 0
+    compressed = 0
+    for x in jax.tree.leaves(params):
+        n = x.size
+        full += n
+        if _eligible(x, rank):
+            rows, cols = x.shape[-2], x.shape[-1]
+            batch = n // (rows * cols)
+            compressed += batch * rank * (rows + cols)
+        else:
+            compressed += n
+    return compressed / max(full, 1)

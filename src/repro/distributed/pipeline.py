@@ -1,0 +1,70 @@
+"""GPipe-style pipeline parallelism (optional axis for 1000+ node scaling).
+
+The production mesh (DESIGN.md Sec. 5) does not need PP at 2 pods — FSDP+TP
+covers 512 chips — but beyond ~4 pods the 'pod' axis becomes a natural stage
+axis.  This module provides the schedule: stage-sharded layer stacks with a
+microbatch ``lax.scan`` and collective-permute hand-offs between stages,
+written against shard_map so it composes with the data/model sharding.
+
+The schedule is the classic fill-drain (GPipe): with S stages and M
+microbatches, bubble fraction = (S-1)/(M+S-1).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["pipeline_apply", "bubble_fraction"]
+
+
+def bubble_fraction(n_stages: int, n_microbatches: int) -> float:
+    return (n_stages - 1) / (n_microbatches + n_stages - 1)
+
+
+def pipeline_apply(layer_fn: Callable, stage_params, x: jnp.ndarray,
+                   *, n_microbatches: int, axis_name: str = "pipe"):
+    """Run ``layer_fn(params, x)`` as a pipeline over ``axis_name``.
+
+    Must be called inside shard_map with ``axis_name`` in the mesh.
+    stage_params: this stage's layer parameters (already stage-sharded).
+    x: (B, ...) stage-0 input (other stages receive via permute); B must be
+    divisible by n_microbatches.
+    """
+    n_stages = jax.lax.axis_size(axis_name)
+    stage = jax.lax.axis_index(axis_name)
+    B = x.shape[0]
+    assert B % n_microbatches == 0
+    mb = B // n_microbatches
+    micro = x.reshape(n_microbatches, mb, *x.shape[1:])
+
+    n_ticks = n_microbatches + n_stages - 1
+    fwd_perm = [(i, i + 1) for i in range(n_stages - 1)]
+
+    def tick(carry, t):
+        buf, out = carry
+        # which microbatch enters stage 0 at this tick
+        idx = jnp.clip(t, 0, n_microbatches - 1)
+        inject = micro[idx]
+        incoming = jnp.where(stage == 0, inject, buf)
+        active = (t - stage >= 0) & (t - stage < n_microbatches)
+        y = layer_fn(stage_params, incoming)
+        y = jnp.where(active, y, jnp.zeros_like(y))
+        # last stage writes its finished microbatch to the output slot
+        done_idx = jnp.clip(t - (n_stages - 1), 0, n_microbatches - 1)
+        is_done = (stage == n_stages - 1) & (t - stage >= 0) \
+            & (t - stage < n_microbatches)
+        idx0 = (done_idx,) + (0,) * y.ndim
+        current = jax.lax.dynamic_slice(out, idx0, (1, *y.shape))
+        out = jax.lax.dynamic_update_slice(
+            out, jnp.where(is_done, y[None], current), idx0)
+        nxt = jax.lax.ppermute(y, axis_name, fwd_perm)
+        return (nxt, out), None
+
+    buf0 = jax.lax.pvary(jnp.zeros_like(micro[0]), (axis_name,))
+    out0 = jax.lax.pvary(jnp.zeros_like(micro), (axis_name,))
+    (_, out), _ = jax.lax.scan(tick, (buf0, out0), jnp.arange(n_ticks))
+    return out.reshape(B, *x.shape[1:])

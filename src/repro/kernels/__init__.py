@@ -1,0 +1,12 @@
+"""Pallas TPU kernels for the paper's compute hot spots.
+
+banded_matvec  — Cv of the distributed power iteration (Sec. 3.4.3)
+cov_update     — streaming banded covariance update (Eq. 10)
+pca_project    — PCAg scores / reconstruction (Eq. 5-6)
+
+ops.py holds the jitted wrappers; ref.py the pure-jnp oracles.
+"""
+
+from repro.kernels import ops, ref
+
+__all__ = ["ops", "ref"]

@@ -1,0 +1,95 @@
+"""Pallas TPU kernel: banded covariance-matrix product (the PIM hot loop).
+
+The paper's distributed ``Cv`` (Sec. 3.4.3) restricted to a banded layout:
+``y[i] = sum_k band[k, i] * v[i + k - h]``.  On the device this is the
+per-shard inner loop of every power-iteration step, so it is the compute
+hot-spot of the paper's algorithm.
+
+Design for TPU (DESIGN.md Sec. 2.3):
+* the band is tiled along the feature axis into VMEM blocks of ``block_p``
+  columns; the full (small) halo-padded operand vector/matrix stays resident
+  in VMEM (p_local + 2h elements — a per-device shard, tens of KB);
+* the diagonal loop (2h+1 iterations, h static) is unrolled in the kernel;
+  each step is a VPU multiply-add over a ``block_p``-wide slice, which keeps
+  the 8x128 vector registers full when block_p is a multiple of 128;
+* the matmul variant (``banded_matmul``: V has q columns) is the blocked
+  orthogonal-iteration workhorse — q is kept in the minor dimension so each
+  multiply-add is an (block_p, q) tile op.
+
+The wrappers in ops.py pad the operand with h zeros per side so the kernel
+body needs no bounds checks.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+__all__ = ["banded_matvec_pallas", "banded_matmul_pallas"]
+
+
+def _matvec_kernel(band_ref, vpad_ref, out_ref, *, nb: int, block_p: int):
+    i = pl.program_id(0)
+    base = i * block_p
+    acc = jnp.zeros((1, block_p), dtype=jnp.float32)
+    for k in range(nb):                       # static unroll over diagonals
+        bandk = band_ref[k, :].reshape(1, block_p).astype(jnp.float32)
+        vslice = vpad_ref[0, pl.dslice(base + k, block_p)]
+        acc = acc + bandk * vslice.reshape(1, block_p).astype(jnp.float32)
+    out_ref[...] = acc.astype(out_ref.dtype)
+
+
+def banded_matvec_pallas(band: jnp.ndarray, v_padded: jnp.ndarray,
+                         *, block_p: int, interpret: bool = False) -> jnp.ndarray:
+    """y (1, p) from band (nb, p) and v_padded (1, p + nb - 1)."""
+    nb, p = band.shape
+    assert p % block_p == 0, (p, block_p)
+    assert v_padded.shape == (1, p + nb - 1)
+    grid = (p // block_p,)
+    return pl.pallas_call(
+        functools.partial(_matvec_kernel, nb=nb, block_p=block_p),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((nb, block_p), lambda i: (0, i)),      # band tile
+            pl.BlockSpec(v_padded.shape, lambda i: (0, 0)),     # full operand
+        ],
+        out_specs=pl.BlockSpec((1, block_p), lambda i: (0, i)),
+        out_shape=jax.ShapeDtypeStruct((1, p), band.dtype),
+        interpret=interpret,
+    )(band, v_padded)
+
+
+def _matmul_kernel(band_ref, vpad_ref, out_ref, *, nb: int, block_p: int):
+    i = pl.program_id(0)
+    base = i * block_p
+    q = out_ref.shape[-1]
+    acc = jnp.zeros((block_p, q), dtype=jnp.float32)
+    for k in range(nb):
+        bandk = band_ref[k, :].reshape(block_p, 1).astype(jnp.float32)
+        vtile = vpad_ref[pl.dslice(base + k, block_p), :].astype(jnp.float32)
+        acc = acc + bandk * vtile
+    out_ref[...] = acc.astype(out_ref.dtype)
+
+
+def banded_matmul_pallas(band: jnp.ndarray, v_padded: jnp.ndarray,
+                         *, block_p: int, interpret: bool = False) -> jnp.ndarray:
+    """Y (p, q) from band (nb, p) and v_padded (p + nb - 1, q)."""
+    nb, p = band.shape
+    q = v_padded.shape[1]
+    assert p % block_p == 0, (p, block_p)
+    assert v_padded.shape[0] == p + nb - 1
+    grid = (p // block_p,)
+    return pl.pallas_call(
+        functools.partial(_matmul_kernel, nb=nb, block_p=block_p),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((nb, block_p), lambda i: (0, i)),
+            pl.BlockSpec(v_padded.shape, lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((block_p, q), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((p, q), band.dtype),
+        interpret=interpret,
+    )(band, v_padded)

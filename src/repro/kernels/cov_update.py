@@ -1,0 +1,62 @@
+"""Pallas TPU kernel: streaming banded-covariance update (Eq. 10).
+
+``delta[k, i] = sum_t x[t, i] * x[t, i + k - h]`` — the per-epoch sufficient
+statistic update of the paper's Sec. 3.3, batched over a measurement block.
+This is a rank-n update restricted to the band: per feature tile it is an
+elementwise product of the tile with a shifted view of the halo-padded batch,
+reduced over the batch axis (VPU work with an 8-deep sublane reduction).
+
+Tiling: grid = (feature blocks, batch blocks); the batch axis is the inner
+grid dimension so the output band tile is revisited consecutively and
+accumulated in place (Pallas output-revisiting pattern).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+__all__ = ["cov_band_update_pallas"]
+
+
+def _kernel(x_ref, xpad_ref, out_ref, *, nb: int, block_p: int):
+    i = pl.program_id(0)
+    j = pl.program_id(1)
+    base = i * block_p
+
+    @pl.when(j == 0)
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    x = x_ref[...].astype(jnp.float32)                  # (bn, block_p)
+    rows = []
+    for k in range(nb):
+        xs = xpad_ref[:, pl.dslice(base + k, block_p)].astype(jnp.float32)
+        rows.append(jnp.sum(x * xs, axis=0))            # (block_p,)
+    out_ref[...] = out_ref[...] + jnp.stack(rows, axis=0).astype(out_ref.dtype)
+
+
+def cov_band_update_pallas(x: jnp.ndarray, x_padded: jnp.ndarray,
+                           *, halfwidth: int, block_p: int, block_n: int,
+                           interpret: bool = False) -> jnp.ndarray:
+    """delta band (2h+1, p) from x (n, p) and x_padded (n, p + 2h)."""
+    n, p = x.shape
+    h = halfwidth
+    nb = 2 * h + 1
+    assert p % block_p == 0 and n % block_n == 0, (n, p, block_n, block_p)
+    assert x_padded.shape == (n, p + 2 * h)
+    grid = (p // block_p, n // block_n)                 # batch axis innermost
+    return pl.pallas_call(
+        functools.partial(_kernel, nb=nb, block_p=block_p),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_n, block_p), lambda i, j: (j, i)),
+            pl.BlockSpec((block_n, p + 2 * h), lambda i, j: (j, 0)),
+        ],
+        out_specs=pl.BlockSpec((nb, block_p), lambda i, j: (0, i)),
+        out_shape=jax.ShapeDtypeStruct((nb, p), jnp.float32),
+        interpret=interpret,
+    )(x, x_padded)

@@ -1,0 +1,125 @@
+"""Jitted public wrappers around the Pallas kernels.
+
+Handles padding, block-size selection, dtype promotion and the
+interpret-mode fallback (this container is CPU-only: ``interpret=True``
+executes the kernel bodies in Python for correctness validation; on real TPU
+the same code path compiles to Mosaic).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.banded_matvec import banded_matvec_pallas, banded_matmul_pallas
+from repro.kernels.cov_update import cov_band_update_pallas
+from repro.kernels.pca_project import pca_project_pallas, pca_reconstruct_pallas
+
+__all__ = ["banded_matvec", "banded_matmul", "cov_band_update",
+           "pca_project", "pca_reconstruct"]
+
+
+def _auto_interpret(interpret: bool | None) -> bool:
+    if interpret is None:
+        return jax.default_backend() != "tpu"
+    return interpret
+
+
+def _pick_block(p: int, target: int = 512) -> int:
+    """Largest divisor of p that is <= target (prefers multiples of 128)."""
+    for cand in (target, 256, 128, 64, 32, 16, 8, 4, 2, 1):
+        if cand <= target and p % cand == 0:
+            return cand
+    return 1
+
+
+@functools.partial(jax.jit, static_argnames=("block_p", "interpret"))
+def _banded_matvec(band, v, block_p, interpret):
+    nb = band.shape[0]
+    h = (nb - 1) // 2
+    vpad = jnp.pad(v, (h, h)).reshape(1, -1)
+    out = banded_matvec_pallas(band, vpad, block_p=block_p, interpret=interpret)
+    return out[0]
+
+
+def banded_matvec(band: jnp.ndarray, v: jnp.ndarray,
+                  block_p: int | None = None,
+                  interpret: bool | None = None) -> jnp.ndarray:
+    """y = C v with C banded (2h+1, p) diagonals; v (p,)."""
+    nb, p = band.shape
+    bp = block_p or _pick_block(p)
+    return _banded_matvec(band, v, bp, _auto_interpret(interpret))
+
+
+@functools.partial(jax.jit, static_argnames=("block_p", "interpret"))
+def _banded_matmul(band, V, block_p, interpret):
+    nb = band.shape[0]
+    h = (nb - 1) // 2
+    vpad = jnp.pad(V, ((h, h), (0, 0)))
+    return banded_matmul_pallas(band, vpad, block_p=block_p, interpret=interpret)
+
+
+def banded_matmul(band: jnp.ndarray, V: jnp.ndarray,
+                  block_p: int | None = None,
+                  interpret: bool | None = None) -> jnp.ndarray:
+    """Y = C V with C banded; V (p, q)."""
+    nb, p = band.shape
+    bp = block_p or _pick_block(p)
+    return _banded_matmul(band, V, bp, _auto_interpret(interpret))
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("halfwidth", "block_p", "block_n",
+                                    "interpret"))
+def _cov_band_update(x, halfwidth, block_p, block_n, interpret):
+    h = halfwidth
+    xpad = jnp.pad(x, ((0, 0), (h, h)))
+    return cov_band_update_pallas(x, xpad, halfwidth=h, block_p=block_p,
+                                  block_n=block_n, interpret=interpret)
+
+
+def cov_band_update(x: jnp.ndarray, halfwidth: int,
+                    block_p: int | None = None, block_n: int | None = None,
+                    interpret: bool | None = None) -> jnp.ndarray:
+    """delta band (2h+1, p) = sum_t outer(x_t, x_t) restricted to the band."""
+    n, p = x.shape
+    bp = block_p or _pick_block(p)
+    bn = block_n or _pick_block(n, target=128)
+    return _cov_band_update(x, halfwidth, bp, bn, _auto_interpret(interpret))
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("block_n", "block_k", "interpret"))
+def _pca_project(x, w, block_n, block_k, interpret):
+    return pca_project_pallas(x, w, block_n=block_n, block_k=block_k,
+                              interpret=interpret)
+
+
+def pca_project(x: jnp.ndarray, w: jnp.ndarray,
+                block_n: int | None = None, block_k: int | None = None,
+                interpret: bool | None = None) -> jnp.ndarray:
+    """Z = X W (PCAg scores for a batch of rows)."""
+    n, p = x.shape
+    bn = block_n or _pick_block(n, target=128)
+    bk = block_k or _pick_block(p)
+    return _pca_project(x, w, bn, bk, _auto_interpret(interpret))
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("block_n", "block_p", "interpret"))
+def _pca_reconstruct(z, w, block_n, block_p, interpret):
+    return pca_reconstruct_pallas(z, w, block_n=block_n, block_p=block_p,
+                                  interpret=interpret)
+
+
+def pca_reconstruct(z: jnp.ndarray, w: jnp.ndarray,
+                    block_n: int | None = None, block_p: int | None = None,
+                    interpret: bool | None = None) -> jnp.ndarray:
+    """X_hat = Z W^T."""
+    n, q = z.shape
+    p = w.shape[0]
+    bn = block_n or _pick_block(n, target=128)
+    bp = block_p or _pick_block(p)
+    return _pca_reconstruct(z, w, bn, bp, _auto_interpret(interpret))

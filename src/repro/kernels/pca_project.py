@@ -1,0 +1,86 @@
+"""Pallas TPU kernel: PCAg projection / reconstruction (Eq. 5-6).
+
+``Z = X W`` (scores) and ``X_hat = Z W^T`` (reconstruction) for measurement
+batches X (n, p) and a tall-skinny basis W (p, q).  These are the per-epoch
+PCAg compute at the sink/nodes and the inner products of the orthogonal-
+iteration Gram step, so they are on the paper's critical path.
+
+Tiling: classic k-accumulation matmul. The contraction (feature) axis p is
+the inner grid dimension; each step issues a (block_n x block_k) @
+(block_k x q) MXU matmul accumulated into a VMEM-resident (block_n, q)
+output tile in fp32.  q is small (# components) so the full q stays in the
+minor dimension — pick block shapes that are multiples of (8, 128) on real
+hardware.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+__all__ = ["pca_project_pallas", "pca_reconstruct_pallas"]
+
+
+def _project_kernel(x_ref, w_ref, out_ref):
+    k = pl.program_id(1)
+
+    @pl.when(k == 0)
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    out_ref[...] = out_ref[...] + jnp.dot(
+        x_ref[...], w_ref[...],
+        preferred_element_type=jnp.float32).astype(out_ref.dtype)
+
+
+def pca_project_pallas(x: jnp.ndarray, w: jnp.ndarray,
+                       *, block_n: int, block_k: int,
+                       interpret: bool = False) -> jnp.ndarray:
+    """Z (n, q) = X (n, p) @ W (p, q), k-accumulated over p."""
+    n, p = x.shape
+    p2, q = w.shape
+    assert p == p2
+    assert n % block_n == 0 and p % block_k == 0, (n, p, block_n, block_k)
+    grid = (n // block_n, p // block_k)                  # contraction inner
+    return pl.pallas_call(
+        _project_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_n, block_k), lambda i, k: (i, k)),
+            pl.BlockSpec((block_k, q), lambda i, k: (k, 0)),
+        ],
+        out_specs=pl.BlockSpec((block_n, q), lambda i, k: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((n, q), jnp.float32),
+        interpret=interpret,
+    )(x, w)
+
+
+def _reconstruct_kernel(z_ref, w_ref, out_ref):
+    out_ref[...] = jnp.dot(
+        z_ref[...], w_ref[...].T,
+        preferred_element_type=jnp.float32).astype(out_ref.dtype)
+
+
+def pca_reconstruct_pallas(z: jnp.ndarray, w: jnp.ndarray,
+                           *, block_n: int, block_p: int,
+                           interpret: bool = False) -> jnp.ndarray:
+    """X_hat (n, p) = Z (n, q) @ W^T; single pass (q not blocked)."""
+    n, q = z.shape
+    p, q2 = w.shape
+    assert q == q2
+    assert n % block_n == 0 and p % block_p == 0, (n, p, block_n, block_p)
+    grid = (n // block_n, p // block_p)
+    return pl.pallas_call(
+        _reconstruct_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_n, q), lambda i, j: (i, 0)),
+            pl.BlockSpec((block_p, q), lambda i, j: (j, 0)),
+        ],
+        out_specs=pl.BlockSpec((block_n, block_p), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((n, p), jnp.float32),
+        interpret=interpret,
+    )(z, w)

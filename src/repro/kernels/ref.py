@@ -1,0 +1,65 @@
+"""Pure-jnp oracles for the Pallas kernels.
+
+Each function is the mathematical definition of the corresponding kernel,
+written with plain jnp ops only (no pallas, no custom control flow), used by
+tests/test_kernels.py as the allclose reference across shape/dtype sweeps.
+
+Layouts (shared with repro.core.covariance):
+* banded matrix: ``band[k, i] = C[i, i + k - h]`` for ``k in [0, 2h]``,
+  out-of-range entries are zero.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+__all__ = ["banded_matvec", "banded_matmul", "cov_band_update",
+           "pca_project", "pca_reconstruct"]
+
+
+def _shifted_cols(x: jnp.ndarray, offset: int) -> jnp.ndarray:
+    """out[..., j] = x[..., j + offset], zero outside the valid range."""
+    p = x.shape[-1]
+    rolled = jnp.roll(x, -offset, axis=-1)
+    j = jnp.arange(p)
+    valid = (j + offset >= 0) & (j + offset < p)
+    return jnp.where(valid, rolled, jnp.zeros_like(rolled))
+
+
+def banded_matvec(band: jnp.ndarray, v: jnp.ndarray) -> jnp.ndarray:
+    """y[i] = sum_k band[k, i] * v[i + k - h]   (the paper's local Cv)."""
+    nb, p = band.shape
+    h = (nb - 1) // 2
+    acc = jnp.zeros_like(v)
+    for k in range(nb):
+        acc = acc + band[k] * _shifted_cols(v[None, :], k - h)[0]
+    return acc
+
+
+def banded_matmul(band: jnp.ndarray, V: jnp.ndarray) -> jnp.ndarray:
+    """Y[i, c] = sum_k band[k, i] * V[i + k - h, c]  (blocked PIM variant)."""
+    nb, p = band.shape
+    h = (nb - 1) // 2
+    acc = jnp.zeros_like(V)
+    for k in range(nb):
+        acc = acc + band[k][:, None] * _shifted_cols(V.T, k - h).T
+    return acc
+
+
+def cov_band_update(x: jnp.ndarray, halfwidth: int) -> jnp.ndarray:
+    """delta[k, i] = sum_t x[t, i] * x[t, i + k - h]  (Eq. 10, banded)."""
+    h = halfwidth
+    rows = []
+    for k in range(2 * h + 1):
+        rows.append(jnp.sum(x * _shifted_cols(x, k - h), axis=0))
+    return jnp.stack(rows, axis=0)
+
+
+def pca_project(x: jnp.ndarray, w: jnp.ndarray) -> jnp.ndarray:
+    """Z = X W — the PCAg scores (Eq. 6) for a batch of measurement rows."""
+    return jnp.dot(x, w, preferred_element_type=jnp.float32).astype(x.dtype)
+
+
+def pca_reconstruct(z: jnp.ndarray, w: jnp.ndarray) -> jnp.ndarray:
+    """X_hat = Z W^T — the approximation of Eq. (5)."""
+    return jnp.dot(z, w.T, preferred_element_type=jnp.float32).astype(z.dtype)

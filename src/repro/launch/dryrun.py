@@ -1,0 +1,395 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (architecture x shape x mesh).
+
+For each cell this driver builds the jitted step with full production
+shardings, calls ``.lower(**ShapeDtypeStruct inputs).compile()`` (no device
+allocation), and records:
+
+* ``compiled.memory_analysis()``  — per-device argument/temp/output bytes,
+* ``compiled.cost_analysis()``    — per-device FLOPs + bytes accessed,
+* parsed collective wire bytes    — from the post-SPMD optimized HLO,
+* the three roofline terms        — repro.launch.hlo_analysis.
+
+Cells: the 10 assigned LM architectures x their shape sets (train_4k /
+prefill_32k / decode_32k / long_500k where applicable) plus the paper's own
+system at production scale (wsn-1m: cov / pim / pim_faithful / transform).
+
+Usage:
+    python -m repro.launch.dryrun --arch qwen2-7b --shape train_4k \
+        --mesh pod --out results.jsonl
+    python -m repro.launch.dryrun --list          # enumerate all cells
+"""
+
+import argparse
+import dataclasses
+import json
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec
+
+from repro import configs
+from repro.configs import SHAPES, applicable_shapes
+from repro.configs.wsn_1m import CONFIG as WSN
+from repro.core import covariance as cov
+from repro.core import production as wsn_prod
+from repro.distributed.sharding import (activation_sharding, act_rules,
+                                        param_rules)
+from repro.launch import hlo_analysis as H
+from repro.launch.mesh import make_production_mesh, mesh_axis_sizes
+from repro.models import transformer as T
+from repro.models.params import param_pspecs
+from repro.train.optimizer import AdamWConfig
+from repro.train.trainer import TrainConfig, make_train_step
+
+WSN_SHAPES = ["cov_update", "pim_block", "pim_deflated", "transform"]
+
+
+# ---------------------------------------------------------------------------
+# Sharding helpers
+# ---------------------------------------------------------------------------
+def _spec(mesh, dims, axes):
+    """PartitionSpec from mesh-axis names with divisibility fallback."""
+    sizes = mesh_axis_sizes(mesh)
+    entries = []
+    for dim, ax in zip(dims, axes):
+        if ax is None:
+            entries.append(None)
+            continue
+        ax_tuple = (ax,) if isinstance(ax, str) else tuple(ax)
+        total = int(np.prod([sizes[a] for a in ax_tuple]))
+        if dim % total != 0:
+            entries.append(None)
+        else:
+            entries.append(ax_tuple if len(ax_tuple) > 1 else ax_tuple[0])
+    return PartitionSpec(*entries)
+
+
+def _sds(shape, dtype, mesh, axes):
+    return jax.ShapeDtypeStruct(
+        shape, dtype,
+        sharding=NamedSharding(mesh, _spec(mesh, shape, axes)))
+
+
+def _dp_axes(mesh):
+    return ("pod", "data") if "pod" in mesh.axis_names else ("data",)
+
+
+def _shard_tree(tree_shapes, specs_tree, mesh):
+    """Attach NamedShardings to an eval_shape pytree."""
+    return jax.tree.map(
+        lambda sds, spec: jax.ShapeDtypeStruct(
+            sds.shape, sds.dtype, sharding=NamedSharding(mesh, spec)),
+        tree_shapes, specs_tree)
+
+
+def _params_specs(cfg, mesh):
+    schema = T.model_schema(cfg)
+    rules = param_rules(multi_pod="pod" in mesh.axis_names)
+    return param_pspecs(schema, rules, mesh_axis_sizes(mesh))
+
+
+def _params_sds(cfg, mesh, dtype=jnp.bfloat16):
+    shapes = jax.eval_shape(
+        lambda: T.init_params(cfg, jax.random.PRNGKey(0), dtype=dtype))
+    return _shard_tree(shapes, _params_specs(cfg, mesh), mesh)
+
+
+def _decode_state_sds(cfg, mesh, batch, cache_len, enc_len=0):
+    dp = _dp_axes(mesh)
+    shapes = jax.eval_shape(
+        lambda: T.init_decode_state(cfg, batch, cache_len,
+                                    dtype=jnp.bfloat16, enc_len=enc_len))
+
+    def spec_for(path, sds):
+        name = "/".join(str(getattr(p, "name", getattr(p, "key", p)))
+                        for p in path)
+        dims = sds.shape
+        if "attn/pos" in name:
+            axes = (None, dp, "model")
+        elif "attn/" in name:                      # k, v: (L,B,Cl,K,Dh)
+            axes = (None, dp, "model", None, None)
+        elif "ssm/h" in name:                      # (L,B,nh,hd,N)
+            axes = (None, dp, "model", None, None)
+        elif "ssm/conv" in name:                   # (L,B,dc-1,conv_dim)
+            axes = (None, dp, None, "model")
+        elif "cross" in name:                      # (L,B,Se,K,Dh)
+            axes = (None, dp, "model", None, None)
+        else:
+            axes = tuple(None for _ in dims)
+        return jax.ShapeDtypeStruct(
+            dims, sds.dtype,
+            sharding=NamedSharding(mesh, _spec(mesh, dims, axes)))
+
+    flat, treedef = jax.tree_util.tree_flatten_with_path(shapes)
+    leaves = [spec_for(path, sds) for path, sds in flat]
+    return jax.tree_util.tree_unflatten(treedef, leaves)
+
+
+def _opt_sds(params_sds, moment_dtype):
+    """AdamW state ShapeDtypeStructs mirroring param shardings."""
+    mdt = jnp.dtype(moment_dtype)
+    moments = jax.tree.map(
+        lambda p: jax.ShapeDtypeStruct(p.shape, mdt, sharding=p.sharding),
+        params_sds)
+    from repro.train.optimizer import AdamWState
+    return AdamWState(step=jax.ShapeDtypeStruct((), jnp.int32),
+                      mu=moments, nu=jax.tree.map(lambda x: x, moments))
+
+
+def pick_microbatches(cfg, B, S, dp: int, budget_bytes=192 * 2**20) -> int:
+    """Smallest power-of-two microbatch count keeping the per-device layer
+    activation (B/m, S, d) bf16 — plus, for MoE, the per-data-shard
+    dispatch buffer (T_loc * k * cf * d) — under budget."""
+    m = 1
+    while m < B:
+        per_dev = (B // m) * S * cfg.d_model * 2 / dp
+        if cfg.n_experts and cfg.top_k:
+            per_dev += ((B // m) * S / dp) * cfg.top_k \
+                * cfg.capacity_factor * cfg.d_model * 2
+        if per_dev <= budget_bytes:
+            break
+        m *= 2
+    return m
+
+
+# ---------------------------------------------------------------------------
+# Cell builders: return (fn, args tuple of ShapeDtypeStructs)
+# ---------------------------------------------------------------------------
+def build_lm_cell(arch: str, shape_name: str, mesh,
+                  opt_level: int = 0):
+    """opt_level 0 = paper-faithful baseline shardings; 1+ = Sec.-Perf
+    optimizations (grad reduce-scatter constraints, ...)."""
+    cfg = configs.get(arch)
+    shp = SHAPES[shape_name]
+    dp = _dp_axes(mesh)
+    dp_size = int(np.prod([mesh_axis_sizes(mesh)[a] for a in dp]))
+    big = cfg.param_count() > 5e10
+    params = _params_sds(cfg, mesh)
+
+    if shp.kind == "train":
+        B, S = shp.global_batch, shp.seq_len
+        remat_groups = 0
+        budget = 192 * 2 ** 20
+        if opt_level >= 2:
+            # nested remat stashes only ~sqrt(L) boundaries, buying a 4x
+            # larger microbatch (4x fewer re-gathers/re-reductions)
+            L = cfg.n_layers
+            remat_groups = next((g for g in range(int(L ** 0.5), 1, -1)
+                                 if L % g == 0), 0)
+            budget = 768 * 2 ** 20
+        m = pick_microbatches(cfg, B, S, dp_size, budget_bytes=budget)
+        tcfg = TrainConfig(
+            optimizer=AdamWConfig(
+                moment_dtype="bfloat16" if big else "float32"),
+            microbatches=m,
+            accum_dtype="bfloat16" if big else "float32",
+            remat=True, remat_groups=remat_groups)
+        grad_shardings = None
+        if opt_level >= 1:
+            grad_shardings = jax.tree.map(lambda s: s.sharding, params)
+        step = make_train_step(cfg, tcfg, grad_shardings=grad_shardings)
+        opt = _opt_sds(params, tcfg.optimizer.moment_dtype)
+        if cfg.family == "encdec":
+            Se = Sd = S // 2
+            batch = {"tokens": _sds((B, Sd), jnp.int32, mesh, (dp, None)),
+                     "enc_input": _sds((B, Se, cfg.d_model), jnp.bfloat16,
+                                       mesh, (dp, None, None))}
+        else:
+            batch = {"tokens": _sds((B, S), jnp.int32, mesh, (dp, None))}
+        fn = lambda p, o, b, s: step(p, o, None, b, s)
+        args = (params, opt, batch, jax.ShapeDtypeStruct((), jnp.int32))
+        return fn, args, {"microbatches": m, "donate": (0, 1)}
+
+    if shp.kind == "prefill":
+        B, S = shp.global_batch, shp.seq_len
+        if cfg.family == "encdec":
+            Se = Sd = S // 2
+            state = _decode_state_sds(cfg, mesh, B, Sd, enc_len=Se)
+            tokens = _sds((B, Sd), jnp.int32, mesh, (dp, None))
+            enc = _sds((B, Se, cfg.d_model), jnp.bfloat16,
+                       mesh, (dp, None, None))
+            fn = lambda p, tok, st, e: T.prefill(p, cfg, tok, st, enc_input=e)
+            return fn, (params, tokens, state, enc), {"donate": (2,)}
+        state = _decode_state_sds(cfg, mesh, B, S)
+        tokens = _sds((B, S), jnp.int32, mesh, (dp, None))
+        fn = lambda p, tok, st: T.prefill(p, cfg, tok, st)
+        return fn, (params, tokens, state), {"donate": (2,)}
+
+    # decode
+    B, S = shp.global_batch, shp.seq_len
+    if cfg.family == "encdec":
+        Se = Sd = S // 2
+        state = _decode_state_sds(cfg, mesh, B, Sd, enc_len=Se)
+    else:
+        state = _decode_state_sds(cfg, mesh, B, S)
+    tokens = _sds((B, 1), jnp.int32, mesh, (dp, None))
+    t = jax.ShapeDtypeStruct((), jnp.int32)
+    fn = lambda p, tok, st, tt: T.decode_step(p, cfg, tok, st, tt)
+    return fn, (params, tokens, state, t), {"donate": (2,)}
+
+
+def build_wsn_cell(shape_name: str, mesh):
+    """The paper's production system; feature axis over every mesh axis."""
+    all_axes = tuple(mesh.axis_names)
+    p, h, q, n = WSN.p, WSN.halfwidth, WSN.q, WSN.batch_epochs
+    nb = 2 * h + 1
+    band = _sds((nb, p), jnp.float32, mesh, (None, all_axes))
+
+    if shape_name == "cov_update":
+        t_s = jax.ShapeDtypeStruct((), jnp.float32)
+        s_s = _sds((p,), jnp.float32, mesh, (all_axes,))
+        x = _sds((n, p), jnp.float32, mesh, (None, all_axes))
+
+        def fn(t, s, b, xx):
+            # halfwidth stays static (python int), not a traced leaf
+            st = cov.BandedCovState(t=t, s=s, band=b, halfwidth=h)
+            new = wsn_prod.cov_update_step(st, xx)
+            return new.t, new.s, new.band
+
+        return fn, (t_s, s_s, band, x), {"donate": (0, 1, 2)}
+    if shape_name == "pim_block":
+        v = _sds((p, q), jnp.float32, mesh, (all_axes, None))
+        fn = lambda b, vv: wsn_prod.pim_block_step(b, vv)
+        return fn, (band, v), {}
+    if shape_name == "pim_deflated":
+        v = _sds((p,), jnp.float32, mesh, (all_axes,))
+        w_prev = _sds((p, q - 1), jnp.float32, mesh, (all_axes, None))
+        fn = lambda b, vv, w: wsn_prod.pim_deflated_step(b, vv, w)
+        return fn, (band, v, w_prev), {}
+    if shape_name == "transform":
+        w = _sds((p, q), jnp.float32, mesh, (all_axes, None))
+        mean = _sds((p,), jnp.float32, mesh, (all_axes,))
+        x = _sds((n, p), jnp.float32, mesh, (None, all_axes))
+        fn = lambda ww, mm, xx: wsn_prod.transform_step(ww, mm, xx)
+        return fn, (w, mean, x), {}
+    raise KeyError(shape_name)
+
+
+# ---------------------------------------------------------------------------
+# Runner
+# ---------------------------------------------------------------------------
+def all_cells() -> list[tuple[str, str]]:
+    cells = []
+    for arch in configs.ASSIGNED:
+        for shp in applicable_shapes(configs.get(arch)):
+            cells.append((arch, shp))
+    for shp in WSN_SHAPES:
+        cells.append(("wsn-1m", shp))
+    return cells
+
+
+def skipped_cells() -> list[tuple[str, str, str]]:
+    out = []
+    for arch in configs.ASSIGNED:
+        cfg = configs.get(arch)
+        if not cfg.supports_long_context:
+            out.append((arch, "long_500k",
+                        "full-attention family: long_500k requires "
+                        "sub-quadratic sequence mixing (DESIGN.md Sec. 4)"))
+    return out
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool,
+             opt_level: int = 0) -> dict:
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    n_dev = int(np.prod(mesh.devices.shape))
+    rec = {"arch": arch, "shape": shape_name, "opt_level": opt_level,
+           "mesh": "2x16x16" if multi_pod else "16x16", "ok": False}
+    t0 = time.time()
+    try:
+        if arch == "wsn-1m":
+            fn, args, extra = build_wsn_cell(shape_name, mesh)
+        else:
+            fn, args, extra = build_lm_cell(arch, shape_name, mesh,
+                                            opt_level=opt_level)
+        donate = extra.pop("donate", ())
+        rec.update(extra)
+        rules = act_rules(multi_pod=multi_pod)
+        with mesh, activation_sharding(mesh, rules):
+            lowered = jax.jit(fn, donate_argnums=donate).lower(*args)
+            rec["lower_s"] = round(time.time() - t0, 1)
+            t1 = time.time()
+            compiled = lowered.compile()
+            rec["compile_s"] = round(time.time() - t1, 1)
+
+        ma = compiled.memory_analysis()
+        rec["memory"] = {
+            "argument_bytes": int(ma.argument_size_in_bytes),
+            "output_bytes": int(ma.output_size_in_bytes),
+            "temp_bytes": int(ma.temp_size_in_bytes),
+            "alias_bytes": int(ma.alias_size_in_bytes),
+        }
+        # per-device peak ~ args + temps (aliased buffers counted once)
+        rec["memory"]["peak_per_device"] = int(
+            ma.argument_size_in_bytes + ma.temp_size_in_bytes
+            - ma.alias_size_in_bytes)
+        ca = compiled.cost_analysis()
+        rec["cost"] = {"flops": float(ca.get("flops", 0.0)),
+                       "bytes accessed": float(ca.get("bytes accessed", 0.0))}
+        coll = H.parse_collectives(compiled.as_text(), n_devices=n_dev)
+        rec["collectives"] = {
+            "counts": coll.counts,
+            "wire_bytes": {k: float(v) for k, v in coll.wire_bytes.items()},
+            "total_wire_bytes": float(coll.total_wire_bytes),
+        }
+        terms = H.roofline_terms(rec["cost"], coll)
+        rec["roofline"] = {
+            "compute_s": terms.compute_s,
+            "memory_s": terms.memory_s,
+            "collective_s": terms.collective_s,
+            "dominant": terms.dominant,
+        }
+        rec["ok"] = True
+    except Exception as e:  # noqa: BLE001 — cell failures are data
+        rec["error"] = f"{type(e).__name__}: {e}"
+        rec["traceback"] = traceback.format_exc()[-2000:]
+    rec["total_s"] = round(time.time() - t0, 1)
+    return rec
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch")
+    ap.add_argument("--shape")
+    ap.add_argument("--mesh", choices=["pod", "multipod", "both"],
+                    default="both")
+    ap.add_argument("--out", default="dryrun_results.jsonl")
+    ap.add_argument("--opt-level", type=int, default=0)
+    ap.add_argument("--list", action="store_true")
+    args = ap.parse_args()
+
+    if args.list:
+        for a, s in all_cells():
+            print(f"{a}\t{s}")
+        for a, s, why in skipped_cells():
+            print(f"{a}\t{s}\tSKIP: {why}")
+        return
+
+    cells = all_cells()
+    if args.arch:
+        cells = [(a, s) for a, s in cells if a == args.arch]
+    if args.shape:
+        cells = [(a, s) for a, s in cells if s == args.shape]
+    meshes = {"pod": [False], "multipod": [True],
+              "both": [False, True]}[args.mesh]
+
+    for arch, shape in cells:
+        for mp in meshes:
+            rec = run_cell(arch, shape, mp, opt_level=args.opt_level)
+            line = json.dumps(rec)
+            with open(args.out, "a") as f:
+                f.write(line + "\n")
+            status = "OK " if rec["ok"] else "FAIL"
+            print(f"[{status}] {arch} {shape} {rec['mesh']} "
+                  f"({rec['total_s']}s)"
+                  + ("" if rec["ok"] else f"  {rec.get('error')}"))
+
+
+if __name__ == "__main__":
+    main()

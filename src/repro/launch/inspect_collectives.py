@@ -1,0 +1,97 @@
+import os
+os.environ.setdefault("XLA_FLAGS",
+                      "--xla_force_host_platform_device_count=512")
+
+"""Perf-debugging tool: list the largest collectives of a dry-run cell with
+their enclosing computation, trip-count multiplier and wire bytes.
+
+    python -m repro.launch.inspect_collectives --arch llama3-405b \
+        --shape train_4k [--multipod] [--top 15]
+"""
+
+import argparse
+import re
+
+import jax
+import numpy as np
+
+from repro.launch import hlo_analysis as H
+
+
+def dump_largest(hlo_text: str, n_devices: int, top: int = 15):
+    comps = H._split_computations(hlo_text)
+    body_trip = {}
+    children = {name: [] for name in comps}
+    for name, lines in comps.items():
+        for ln in lines:
+            m = H._WHILE_RE.search(ln)
+            if m:
+                cond, body = m.group(1), m.group(2)
+                body_trip[body] = H._trip_count(comps.get(cond, []))
+                children[name].append(body)
+    mult = {name: 1.0 for name in comps}
+
+    def visit(name, factor):
+        mult[name] = max(mult.get(name, 1.0), factor)
+        for child in children.get(name, []):
+            visit(child, factor * body_trip.get(child, 1))
+
+    for name in comps:
+        if name not in body_trip:
+            visit(name, 1.0)
+
+    rows = []
+    for name, lines in comps.items():
+        for ln in lines:
+            for kind in H._COLLECTIVES:
+                if f" {kind}(" in ln or f" {kind}-start(" in ln:
+                    lhs = ln.split(f" {kind}")[0]
+                    nbytes = H._result_bytes(lhs)
+                    g = H._group_size(ln, n_devices)
+                    wire = (2 * nbytes * (g - 1) / g if kind == "all-reduce"
+                            else nbytes if kind == "collective-permute"
+                            else nbytes * (g - 1) / g)
+                    meta = re.search(r'op_name="([^"]*)"', ln)
+                    rows.append({
+                        "kind": kind, "comp": name, "trip": mult.get(name, 1),
+                        "bytes": nbytes, "wire_total": wire * mult.get(name, 1),
+                        "group": g,
+                        "op": meta.group(1)[-90:] if meta else "?",
+                    })
+                    break
+    rows.sort(key=lambda r: -r["wire_total"])
+    total = sum(r["wire_total"] for r in rows)
+    print(f"total wire/dev: {total/2**30:.1f} GiB")
+    for r in rows[:top]:
+        print(f"{r['wire_total']/2**30:9.2f} GiB  {r['kind']:<18} x{r['trip']:<6.0f}"
+              f" g={r['group']:<4} {r['bytes']/2**20:8.1f} MiB/op  {r['op']}")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", required=True)
+    ap.add_argument("--multipod", action="store_true")
+    ap.add_argument("--top", type=int, default=15)
+    ap.add_argument("--opt-level", type=int, default=0)
+    args = ap.parse_args()
+
+    from repro.launch.dryrun import build_lm_cell, build_wsn_cell
+    from repro.launch.mesh import make_production_mesh
+    from repro.distributed.sharding import activation_sharding, act_rules
+
+    mesh = make_production_mesh(multi_pod=args.multipod)
+    n_dev = int(np.prod(mesh.devices.shape))
+    if args.arch == "wsn-1m":
+        fn, cell_args, extra = build_wsn_cell(args.shape, mesh)
+    else:
+        fn, cell_args, extra = build_lm_cell(args.arch, args.shape, mesh,
+                                             opt_level=args.opt_level)
+    donate = extra.pop("donate", ())
+    with mesh, activation_sharding(mesh, act_rules(args.multipod)):
+        compiled = jax.jit(fn, donate_argnums=donate).lower(*cell_args).compile()
+    dump_largest(compiled.as_text(), n_dev, args.top)
+
+
+if __name__ == "__main__":
+    main()

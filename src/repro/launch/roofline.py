@@ -1,0 +1,138 @@
+"""Roofline report: aggregate dry-run JSONL records into the Sec.-Roofline
+table (EXPERIMENTS.md).
+
+Per (arch x shape x mesh):
+  compute / memory / collective terms (seconds), dominant term,
+  MODEL_FLOPS = 6 N D (train) or 2 N_active D (inference) vs compiled
+  HLO FLOPs (useful-compute ratio), peak bytes/device vs v5e HBM.
+
+Usage:  python -m repro.launch.roofline results/*.jsonl [--md]
+"""
+
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import sys
+
+from repro import configs
+from repro.configs import SHAPES
+from repro.configs.wsn_1m import CONFIG as WSN
+
+V5E_HBM = 16 * 2 ** 30
+
+
+def model_flops(arch: str, shape: str) -> float:
+    """Analytic 'useful' FLOPs per step, whole job (all chips)."""
+    if arch == "wsn-1m":
+        p, h, q, n = WSN.p, WSN.halfwidth, WSN.q, WSN.batch_epochs
+        nb = 2 * h + 1
+        return {
+            "cov_update": 2.0 * n * nb * p,
+            "pim_block": 2.0 * nb * p * q + 4.0 * p * q * q,
+            "pim_deflated": 2.0 * nb * p + 4.0 * p * (q - 1),
+            "transform": 2.0 * n * p * q,
+        }[shape]
+    cfg = configs.get(arch)
+    shp = SHAPES[shape]
+    n_active = cfg.active_param_count()
+    if shp.kind == "train":
+        tokens = shp.global_batch * shp.seq_len
+        return 6.0 * n_active * tokens
+    if shp.kind == "prefill":
+        tokens = shp.global_batch * shp.seq_len
+        return 2.0 * n_active * tokens
+    # decode: one token per sequence
+    return 2.0 * n_active * shp.global_batch
+
+
+def n_chips(mesh: str) -> int:
+    return 512 if mesh == "2x16x16" else 256
+
+
+def load(paths) -> list[dict]:
+    recs = []
+    for path in paths:
+        with open(path) as f:
+            for line in f:
+                if line.strip():
+                    recs.append(json.loads(line))
+    # dedup on (arch, shape, mesh): keep the last record
+    uniq = {}
+    for r in recs:
+        uniq[(r["arch"], r["shape"], r["mesh"])] = r
+    return sorted(uniq.values(),
+                  key=lambda r: (r["arch"], r["shape"], r["mesh"]))
+
+
+def analyze(rec: dict) -> dict:
+    from repro.launch.analytic import cell_model
+    chips = n_chips(rec["mesh"])
+    rl = rec.get("roofline", {})
+    cost = rec.get("cost", {})
+    mf = model_flops(rec["arch"], rec["shape"])
+    hlo_total = cost.get("flops", 0.0) * chips
+
+    model = cell_model(rec["arch"], rec["shape"], chips,
+                       microbatches=rec.get("microbatches", 1))
+    wire_per_dev = rec.get("collectives", {}).get("total_wire_bytes", 0.0)
+    # CPU-backend adjustment: XLA CPU upcasts bf16 dots to f32, so the
+    # all-reduces of dot outputs ride fp32 shapes; the TPU lowering keeps
+    # them bf16 — halve the AR component for the TPU estimate.
+    ar = rec.get("collectives", {}).get("wire_bytes", {}).get("all-reduce", 0.0)
+    wire_per_dev = wire_per_dev - 0.5 * ar
+    terms = model.terms(chips, wire_per_dev)
+    useful = mf / model.flops_global if model.flops_global else float("nan")
+    frac = terms["compute_s"] / terms["bound_s"] if terms["bound_s"] \
+        else float("nan")
+    peak = rec.get("memory", {}).get("peak_per_device", 0)
+    return {
+        "arch": rec["arch"], "shape": rec["shape"], "mesh": rec["mesh"],
+        "ok": rec["ok"],
+        "compute_s": terms["compute_s"], "memory_s": terms["memory_s"],
+        "collective_s": terms["collective_s"],
+        "dominant": terms["dominant"],
+        "hlo_compute_s": rl.get("compute_s"),
+        "hlo_memory_s": rl.get("memory_s"),
+        "hlo_collective_s": rl.get("collective_s"),
+        "model_flops": mf, "hlo_flops_total": hlo_total,
+        "useful_ratio": useful,
+        "roofline_fraction": frac,
+        "peak_gb": peak / 2 ** 30,
+        "fits_v5e": peak <= V5E_HBM,
+    }
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("paths", nargs="*", default=["results/dryrun_*.jsonl"])
+    ap.add_argument("--md", action="store_true")
+    ap.add_argument("--mesh", default=None)
+    args = ap.parse_args()
+    paths = []
+    for p in args.paths:
+        paths.extend(glob.glob(p))
+    if not paths:
+        sys.exit("no dry-run result files found")
+    rows = [analyze(r) for r in load(paths) if r["ok"]]
+    if args.mesh:
+        rows = [r for r in rows if r["mesh"] == args.mesh]
+
+    if args.md:
+        print("| arch | shape | mesh | compute s | memory s | coll s |"
+              " dominant | MODEL/HLO | comp/bound | peak GB | fits v5e |")
+        print("|---|---|---|---|---|---|---|---|---|---|---|")
+        for r in rows:
+            print(f"| {r['arch']} | {r['shape']} | {r['mesh']} "
+                  f"| {r['compute_s']:.3e} | {r['memory_s']:.3e} "
+                  f"| {r['collective_s']:.3e} | {r['dominant']} "
+                  f"| {r['useful_ratio']:.2f} | {r['roofline_fraction']:.2f} "
+                  f"| {r['peak_gb']:.1f} | {'y' if r['fits_v5e'] else 'N'} |")
+    else:
+        for r in rows:
+            print(json.dumps(r))
+
+
+if __name__ == "__main__":
+    main()

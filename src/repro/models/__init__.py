@@ -1,0 +1,8 @@
+"""Model zoo: dense GQA / MoE / Mamba-2 SSD / hybrid / enc-dec families."""
+
+from repro.models.transformer import (model_schema, init_params, forward,
+                                      lm_loss, init_decode_state, decode_step,
+                                      encode, prefill)
+
+__all__ = ["model_schema", "init_params", "forward", "lm_loss",
+           "init_decode_state", "decode_step", "encode", "prefill"]

@@ -1,0 +1,315 @@
+"""Shared transformer building blocks: RMSNorm, RoPE, GQA attention, SwiGLU.
+
+All functions are pure; parameters come from the schema system
+(repro.models.params).  Attention supports: causal/bidirectional, GQA,
+sliding windows with an always-visible meta-token prefix (Hymba), QK-norm
+(Chameleon), QKV bias (Qwen2), and decode against a position-tracking KV
+cache (:class:`PosCache`) that supports both linear and ring-buffer layouts.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.sharding import shard_activation
+from repro.models.params import P
+
+__all__ = ["rms_norm", "rope", "attention_schema", "attention_apply",
+           "attention_cached", "mlp_schema", "mlp_apply", "PosCache",
+           "init_pos_cache"]
+
+_NEG_INF = -1e30
+
+
+def rms_norm(x: jnp.ndarray, gamma: jnp.ndarray, eps: float = 1e-5) -> jnp.ndarray:
+    x32 = x.astype(jnp.float32)
+    scale = jax.lax.rsqrt(jnp.mean(x32 * x32, axis=-1, keepdims=True) + eps)
+    return (x32 * scale).astype(x.dtype) * gamma
+
+
+def rope(x: jnp.ndarray, positions: jnp.ndarray, theta: float) -> jnp.ndarray:
+    """Rotary embedding.  x: (B, S, H, Dh); positions: (S,) or (B, S).
+
+    fp32 math between *explicit* casts on both boundaries: without the input
+    cast, ``bf16 * f32`` promotion leaks fp32 cotangents into the projection
+    backward and doubles every TP all-reduce (EXPERIMENTS.md Sec. Perf)."""
+    dh = x.shape[-1]
+    half = dh // 2
+    freqs = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    pos = positions if positions.ndim == 2 else positions[None, :]
+    angles = pos[..., None].astype(jnp.float32) * freqs       # (B?, S, half)
+    cos = jnp.cos(angles)[:, :, None, :]
+    sin = jnp.sin(angles)[:, :, None, :]
+    x32 = x.astype(jnp.float32)
+    x1, x2 = x32[..., :half], x32[..., half:]
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Attention
+# ---------------------------------------------------------------------------
+def attention_schema(cfg) -> dict:
+    d, hd = cfg.d_model, cfg.head_dim
+    H, K = cfg.n_heads, cfg.n_kv_heads
+    sch = {
+        "wq": P((d, H, hd), ("embed", "heads", "head_dim"), fan_in_axes=(0,)),
+        "wk": P((d, K, hd), ("embed", "kv_heads", "head_dim"), fan_in_axes=(0,)),
+        "wv": P((d, K, hd), ("embed", "kv_heads", "head_dim"), fan_in_axes=(0,)),
+        "wo": P((H, hd, d), ("heads", "head_dim", "embed"), fan_in_axes=(0, 1),
+                scale=1.0 / math.sqrt(2 * max(cfg.n_layers, 1))),
+    }
+    if cfg.qkv_bias:
+        sch["bq"] = P((H, hd), ("heads", "head_dim"), init="zeros")
+        sch["bk"] = P((K, hd), ("kv_heads", "head_dim"), init="zeros")
+        sch["bv"] = P((K, hd), ("kv_heads", "head_dim"), init="zeros")
+    if cfg.qk_norm:
+        sch["q_norm"] = P((hd,), ("head_dim",), init="ones")
+        sch["k_norm"] = P((hd,), ("head_dim",), init="ones")
+    return sch
+
+
+class PosCache(NamedTuple):
+    """KV cache that records the absolute position held in every slot.
+
+    ``pos[b, s] == -1`` marks an empty slot.  Linear layout writes slot = t;
+    a ring layout writes slot = meta + (t - meta) % window — the mask logic
+    is identical because it only consults the stored positions.  Positions
+    are per batch row, so continuous batching can run unaligned requests.
+    """
+    k: jnp.ndarray      # (B, Cl, K, Dh)
+    v: jnp.ndarray      # (B, Cl, K, Dh)
+    pos: jnp.ndarray    # (B, Cl) int32
+
+
+def init_pos_cache(cfg, batch: int, cache_len: int, dtype=jnp.bfloat16) -> PosCache:
+    shape = (batch, cache_len, cfg.n_kv_heads, cfg.head_dim)
+    return PosCache(k=jnp.zeros(shape, dtype), v=jnp.zeros(shape, dtype),
+                    pos=jnp.full((batch, cache_len), -1, jnp.int32))
+
+
+def _project_qkv(p, cfg, x, kv_src):
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"])
+    k = jnp.einsum("bsd,dhk->bshk", kv_src, p["wk"])
+    v = jnp.einsum("bsd,dhk->bshk", kv_src, p["wv"])
+    if cfg.qkv_bias:
+        q, k, v = q + p["bq"], k + p["bk"], v + p["bv"]
+    if cfg.qk_norm:
+        q = rms_norm(q, p["q_norm"], cfg.norm_eps)
+        k = rms_norm(k, p["k_norm"], cfg.norm_eps)
+    return q, k, v
+
+
+def _gqa_attend(q, k, v, mask, head_dim):
+    """q: (B,Sq,H,Dh); k,v: (B,Sk,K,Dh); mask broadcastable to
+    (B,K,G,Sq,Sk) or None."""
+    B, Sq, H, Dh = q.shape
+    K = k.shape[2]
+    G = H // K
+    qg = q.reshape(B, Sq, K, G, Dh)
+    # fp32 via explicit casts (NOT preferred_element_type): the cast
+    # boundaries convert the backward cotangents back to bf16, preventing
+    # fp32 dq/dk/dW chains that double the TP all-reduce wire
+    # (EXPERIMENTS.md Sec. Perf hillclimb 2, move 3)
+    scores = jnp.einsum("bqkgd,bskd->bkgqs", qg.astype(jnp.float32),
+                        k.astype(jnp.float32))
+    scores = scores / math.sqrt(head_dim)
+    if mask is not None:
+        scores = jnp.where(mask, scores, _NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bkgqs,bskd->bqkgd", probs.astype(v.dtype), v)
+    return out.reshape(B, Sq, H, Dh)
+
+
+# Sequences at or above this length take the online-softmax chunked path —
+# full (Sq, Sk) score materialization at 32k+ would need tens of GB/device.
+CHUNKED_ATTN_THRESHOLD = 8192
+_Q_CHUNK = 1024
+_KV_CHUNK = 1024
+
+
+def _largest_divisor(n: int, target: int) -> int:
+    for c in range(target, 0, -1):
+        if n % c == 0:
+            return c
+    return 1
+
+
+def _chunked_attend(q, k, v, q_pos, kv_pos, *, causal, window, n_meta,
+                    head_dim, q_chunk=_Q_CHUNK, kv_chunk=_KV_CHUNK):
+    """Flash-style attention: never materializes the (Sq, Sk) score matrix.
+
+    Outer loop over query chunks (lax.map), inner lax.scan over KV chunks
+    carrying the online-softmax state (running max m, normalizer l, weighted
+    accumulator acc).  Live memory is O(q_chunk * kv_chunk) per head instead
+    of O(Sq * Sk).  Masking (causal / sliding window / meta prefix) is
+    evaluated per chunk pair from the position arrays.
+    """
+    B, Sq, H, Dh = q.shape
+    Sk = k.shape[1]
+    K = k.shape[2]
+    G = H // K
+    q_chunk = _largest_divisor(Sq, min(q_chunk, Sq))
+    kv_chunk = _largest_divisor(Sk, min(kv_chunk, Sk))
+    nq, nk = Sq // q_chunk, Sk // kv_chunk
+    scale = 1.0 / math.sqrt(head_dim)
+    w = jnp.asarray(window)
+
+    qr = jnp.moveaxis(q.reshape(B, nq, q_chunk, K, G, Dh), 1, 0)
+    qpr = q_pos.reshape(nq, q_chunk)
+    kr = jnp.moveaxis(k.reshape(B, nk, kv_chunk, K, Dh), 1, 0)
+    vr = jnp.moveaxis(v.reshape(B, nk, kv_chunk, K, Dh), 1, 0)
+    kpr = kv_pos.reshape(nk, kv_chunk)
+
+    def one_q(args):
+        qc, qp = args                                  # (B,qc,K,G,Dh), (qc,)
+
+        def kv_step(carry, inputs):
+            acc, m, l = carry
+            kc, vc, kp = inputs
+            s = jnp.einsum("bqkgd,bskd->bkgqs", qc.astype(jnp.float32),
+                           kc.astype(jnp.float32)) * scale
+            if causal:
+                qpb = qp[:, None]
+                kpb = kp[None, :]
+                allowed = kpb <= qpb
+                in_w = jnp.where(w > 0, (qpb - kpb) < w, True)
+                if n_meta > 0:
+                    in_w = in_w | (kpb < n_meta)
+                s = jnp.where((allowed & in_w)[None, None, None], s, _NEG_INF)
+            m_new = jnp.maximum(m, s.max(axis=-1))
+            p_ = jnp.exp(s - m_new[..., None])
+            alpha = jnp.exp(m - m_new)
+            acc = acc * alpha[..., None] + jnp.einsum(
+                "bkgqs,bskd->bkgqd", p_, vc.astype(jnp.float32))
+            l = l * alpha + p_.sum(axis=-1)
+            return (acc, m_new, l), None
+
+        acc0 = jnp.zeros((B, K, G, q_chunk, Dh), jnp.float32)
+        m0 = jnp.full((B, K, G, q_chunk), -jnp.inf, jnp.float32)
+        l0 = jnp.zeros((B, K, G, q_chunk), jnp.float32)
+        (acc, m, l), _ = jax.lax.scan(kv_step, (acc0, m0, l0), (kr, vr, kpr))
+        out = acc / jnp.maximum(l[..., None], 1e-30)   # (B,K,G,qc,Dh)
+        return jnp.moveaxis(out, 3, 1).reshape(B, q_chunk, H, Dh)
+
+    out = jax.lax.map(one_q, (qr, qpr))                # (nq,B,qc,H,Dh)
+    return jnp.moveaxis(out, 0, 1).reshape(B, Sq, H, Dh).astype(q.dtype)
+
+
+def attention_apply(p: dict, cfg, x: jnp.ndarray, positions: jnp.ndarray,
+                    *, causal: bool = True, window: jnp.ndarray | int = 0,
+                    kv_x: jnp.ndarray | None = None,
+                    kv_positions: jnp.ndarray | None = None,
+                    use_rope: bool = True, return_kv: bool = False):
+    """Full-sequence GQA attention (train / prefill / encoder / cross).
+
+    ``window`` <= 0 means full attention; meta-token positions
+    (< cfg.n_meta_tokens) are always visible under a window (Hymba).
+    """
+    kv_src = x if kv_x is None else kv_x
+    q, k, v = _project_qkv(p, cfg, x, kv_src)
+    kv_pos = positions if kv_positions is None else kv_positions
+    if use_rope:
+        q = rope(q, positions, cfg.rope_theta)
+        k = rope(k, kv_pos, cfg.rope_theta)
+    q = shard_activation(q, ("batch", "seq", "act_heads", None))
+    k = shard_activation(k, ("batch", "seq", "act_kv_heads", None))
+
+    if max(q.shape[1], k.shape[1]) >= CHUNKED_ATTN_THRESHOLD:
+        out = _chunked_attend(q, k, v, positions, kv_pos, causal=causal,
+                              window=window, n_meta=cfg.n_meta_tokens,
+                              head_dim=cfg.head_dim)
+    else:
+        mask = None
+        if causal:
+            qp = positions[:, None]
+            kp = kv_pos[None, :]
+            mask = kp <= qp
+            w = jnp.asarray(window)
+            in_window = jnp.where(w > 0, (qp - kp) < w, True)
+            if cfg.n_meta_tokens > 0:
+                in_window = in_window | (kp < cfg.n_meta_tokens)
+            mask = (mask & in_window)[None, None, None]  # (1,1,1,Sq,Sk)
+        out = _gqa_attend(q, k, v, mask, cfg.head_dim)
+    y = jnp.einsum("bshk,hkd->bsd", out, p["wo"])
+    y = shard_activation(y, ("batch", "seq", "act_embed"))
+    if return_kv:
+        return y, (k, v)
+    return y
+
+
+def attention_cached(p: dict, cfg, x: jnp.ndarray, t: jnp.ndarray,
+                     cache: PosCache, *, window: jnp.ndarray | int = 0,
+                     write_slot: jnp.ndarray | None = None,
+                     use_rope: bool = True) -> tuple[jnp.ndarray, PosCache]:
+    """Single-token decode against a PosCache.
+
+    x: (B, 1, d); t: scalar or (B,) absolute position(s) of this token —
+    per-row positions support unaligned continuous batching.
+    ``write_slot`` defaults to t (linear cache); pass the ring-buffer slot
+    for windowed layers.
+    """
+    B = x.shape[0]
+    q, k, v = _project_qkv(p, cfg, x, x)
+    tv = jnp.broadcast_to(jnp.atleast_1d(t), (B,)).astype(jnp.int32)
+    if use_rope:
+        q = rope(q, tv[:, None], cfg.rope_theta)
+        k = rope(k, tv[:, None], cfg.rope_theta)
+
+    slot = tv if write_slot is None else \
+        jnp.broadcast_to(jnp.atleast_1d(write_slot), (B,)).astype(jnp.int32)
+    bidx = jnp.arange(B)
+    ck = cache.k.at[bidx, slot].set(k[:, 0].astype(cache.k.dtype))
+    cv = cache.v.at[bidx, slot].set(v[:, 0].astype(cache.v.dtype))
+    cpos = cache.pos.at[bidx, slot].set(tv)
+    new_cache = PosCache(k=ck, v=cv, pos=cpos)
+
+    kp = cpos                                            # (B, Cl)
+    tb = tv[:, None]
+    mask = (kp >= 0) & (kp <= tb)
+    w = jnp.asarray(window)
+    in_window = jnp.where(w > 0, (tb - kp) < w, True)
+    if cfg.n_meta_tokens > 0:
+        in_window = in_window | ((kp < cfg.n_meta_tokens) & (kp >= 0))
+    mask = (mask & in_window)[:, None, None, None, :]    # (B,1,1,1,Cl)
+
+    out = _gqa_attend(q, ck, cv, mask, cfg.head_dim)
+    y = jnp.einsum("bshk,hkd->bsd", out, p["wo"])
+    return y, new_cache
+
+
+def cross_attention_cached(p: dict, cfg, x: jnp.ndarray, t: jnp.ndarray,
+                           enc_k: jnp.ndarray, enc_v: jnp.ndarray) -> jnp.ndarray:
+    """Decode-time cross attention against precomputed (roped) encoder K/V."""
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"])
+    if cfg.qkv_bias:
+        q = q + p["bq"]
+    if cfg.qk_norm:
+        q = rms_norm(q, p["q_norm"], cfg.norm_eps)
+    q = rope(q, jnp.reshape(t, (1,)).astype(jnp.int32), cfg.rope_theta)
+    out = _gqa_attend(q, enc_k, enc_v, None, cfg.head_dim)
+    return jnp.einsum("bshk,hkd->bsd", out, p["wo"])
+
+
+# ---------------------------------------------------------------------------
+# SwiGLU MLP
+# ---------------------------------------------------------------------------
+def mlp_schema(cfg) -> dict:
+    d, f = cfg.d_model, cfg.d_ff
+    return {
+        "w_gate": P((d, f), ("embed", "mlp"), fan_in_axes=(0,)),
+        "w_up": P((d, f), ("embed", "mlp"), fan_in_axes=(0,)),
+        "w_down": P((f, d), ("mlp", "embed"), fan_in_axes=(0,),
+                    scale=1.0 / math.sqrt(2 * max(cfg.n_layers, 1))),
+    }
+
+
+def mlp_apply(p: dict, x: jnp.ndarray) -> jnp.ndarray:
+    h = jax.nn.silu(x @ p["w_gate"]) * (x @ p["w_up"])
+    h = shard_activation(h, ("batch", "seq", "act_mlp"))
+    y = h @ p["w_down"]
+    return shard_activation(y, ("batch", "seq", "act_embed"))

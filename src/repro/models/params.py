@@ -1,0 +1,99 @@
+"""Parameter schema system.
+
+A model's parameters are described once as a nested dict of :class:`P`
+descriptors (shape + logical axis names + init law).  From the schema we
+derive (a) materialized arrays (:func:`init_params`) and (b) a matching
+PartitionSpec pytree (:func:`param_pspecs`) for any mesh/rule set — keeping
+model code and distribution policy decoupled (DESIGN.md Sec. 5).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec
+
+__all__ = ["P", "init_params", "param_pspecs", "tree_size"]
+
+
+@dataclasses.dataclass(frozen=True)
+class P:
+    """One parameter leaf: shape + logical axes + initialization."""
+
+    shape: tuple[int, ...]
+    axes: tuple[str | None, ...]          # logical axis names, len == ndim
+    init: str = "normal"                  # normal | zeros | ones
+    fan_in_axes: tuple[int, ...] = ()     # dims whose product is fan-in
+    scale: float = 1.0
+
+    def __post_init__(self):
+        assert len(self.shape) == len(self.axes), (self.shape, self.axes)
+
+
+def _materialize(leaf: P, key: jax.Array, dtype) -> jnp.ndarray:
+    if leaf.init == "zeros":
+        return jnp.zeros(leaf.shape, dtype)
+    if leaf.init == "ones":
+        return jnp.ones(leaf.shape, dtype)
+    fan_in = 1
+    for ax in leaf.fan_in_axes:
+        fan_in *= leaf.shape[ax]
+    std = leaf.scale / math.sqrt(max(fan_in, 1))
+    return (jax.random.normal(key, leaf.shape, jnp.float32) * std).astype(dtype)
+
+
+def init_params(schema: dict, key: jax.Array, dtype=jnp.float32) -> dict:
+    """Materialize a schema into arrays (deterministic per leaf path)."""
+    leaves, treedef = jax.tree.flatten(
+        schema, is_leaf=lambda x: isinstance(x, P))
+    keys = jax.random.split(key, len(leaves))
+    arrays = [_materialize(leaf, k, dtype) for leaf, k in zip(leaves, keys)]
+    return jax.tree.unflatten(treedef, arrays)
+
+
+def param_pspecs(schema: dict,
+                 rules: dict[str, str | tuple[str, ...] | None],
+                 mesh_axis_sizes: dict[str, int] | None = None) -> dict:
+    """PartitionSpec pytree from logical-axis rules.
+
+    ``rules`` maps logical axis name -> mesh axis (or tuple / None).  When
+    ``mesh_axis_sizes`` is given, a mapping is dropped (replicated) if the
+    dimension size is not divisible by the mesh-axis-product — e.g. 4 KV
+    heads cannot shard over a 16-way model axis, so they replicate.
+    """
+
+    def spec_for(leaf: P) -> PartitionSpec:
+        entries = []
+        for dim, axis in zip(leaf.shape, leaf.axes):
+            mesh_axes = rules.get(axis) if axis is not None else None
+            if mesh_axes is None:
+                entries.append(None)
+                continue
+            if isinstance(mesh_axes, str):
+                mesh_axes = (mesh_axes,)
+            if mesh_axis_sizes is not None:
+                total = 1
+                for m in mesh_axes:
+                    total *= mesh_axis_sizes.get(m, 1)
+                if total == 0 or dim % total != 0:
+                    entries.append(None)
+                    continue
+            entries.append(mesh_axes if len(mesh_axes) > 1 else mesh_axes[0])
+        return PartitionSpec(*entries)
+
+    return jax.tree.map(spec_for, schema,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+def tree_size(tree: Any) -> int:
+    """Total number of elements in a pytree of arrays or P descriptors."""
+    def leaf_size(x):
+        if isinstance(x, P):
+            return math.prod(x.shape)
+        return x.size
+    return sum(leaf_size(x) for x in jax.tree.leaves(
+        tree, is_leaf=lambda x: isinstance(x, P)))

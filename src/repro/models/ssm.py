@@ -1,0 +1,189 @@
+"""Mamba-2 SSD (state-space duality) block [arXiv:2405.21060].
+
+Chunked SSD for train/prefill (intra-chunk quadratic form + inter-chunk
+recurrence carried by ``lax.scan``) and an O(1)-per-token recurrent decode
+step.  Geometry follows the paper: ``d_inner = expand * d_model`` split into
+heads of ``ssm_headdim``; scalar decay per head (``A``), shared B/C of size
+``d_state`` (one group), depthwise causal conv over (x, B, C), gated RMSNorm
+before the output projection.
+
+TPU notes: heads shard over the model axis (TP); the intra-chunk term is a
+(Q x Q) masked matmul per head — MXU work; the inter-chunk scan carries the
+(B, H, P, N) state, which for decode is the *entire* context summary
+(the reason this family runs the long_500k cell).
+"""
+
+from __future__ import annotations
+
+import math
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.sharding import shard_activation
+from repro.models.params import P
+
+__all__ = ["ssm_schema", "ssd_apply", "ssd_decode_step", "SSMCache",
+           "init_ssm_cache"]
+
+
+def _dims(cfg):
+    di = cfg.d_inner
+    nh = di // cfg.ssm_headdim
+    n = cfg.d_state
+    conv_dim = di + 2 * n
+    return di, nh, n, conv_dim
+
+
+def ssm_schema(cfg) -> dict:
+    d = cfg.d_model
+    di, nh, n, conv_dim = _dims(cfg)
+    proj_out = 2 * di + 2 * n + nh           # z, x, B, C, dt
+    return {
+        "in_proj": P((d, proj_out), ("embed", "ssm_inner"), fan_in_axes=(0,)),
+        "conv_w": P((cfg.d_conv, conv_dim), ("conv", "ssm_inner"),
+                    fan_in_axes=(0,)),
+        "conv_b": P((conv_dim,), ("ssm_inner",), init="zeros"),
+        "a_log": P((nh,), ("ssm_heads",), init="ones"),
+        "dt_bias": P((nh,), ("ssm_heads",), init="zeros"),
+        "d_skip": P((nh,), ("ssm_heads",), init="ones"),
+        "norm": P((di,), ("ssm_inner",), init="ones"),
+        "out_proj": P((di, d), ("ssm_inner", "embed"), fan_in_axes=(0,),
+                      scale=1.0 / math.sqrt(2 * max(cfg.n_layers, 1))),
+    }
+
+
+class SSMCache(NamedTuple):
+    h: jnp.ndarray           # (B, nh, hd, N) recurrent state
+    conv: jnp.ndarray        # (B, d_conv - 1, conv_dim) conv history
+
+
+def init_ssm_cache(cfg, batch: int, dtype=jnp.float32) -> SSMCache:
+    di, nh, n, conv_dim = _dims(cfg)
+    return SSMCache(
+        h=jnp.zeros((batch, nh, cfg.ssm_headdim, n), dtype),
+        conv=jnp.zeros((batch, cfg.d_conv - 1, conv_dim), dtype),
+    )
+
+
+def _split_proj(cfg, zxbcdt):
+    di, nh, n, _ = _dims(cfg)
+    z, xin, bmat, cmat, dt = jnp.split(
+        zxbcdt, [di, 2 * di, 2 * di + n, 2 * di + 2 * n], axis=-1)
+    return z, xin, bmat, cmat, dt
+
+
+def _conv_causal(u, w, b):
+    """Depthwise causal conv.  u: (B,S,Cd), w: (dc,Cd), b: (Cd,)."""
+    dc = w.shape[0]
+    pad = jnp.pad(u, ((0, 0), (dc - 1, 0), (0, 0)))
+    out = jnp.zeros_like(u)
+    for i in range(dc):                       # dc static (=4): unrolled taps
+        out = out + pad[:, i:i + u.shape[1], :] * w[i]
+    return out + b
+
+
+def ssd_apply(p: dict, cfg, x: jnp.ndarray, *, chunk: int = 128,
+              return_state: bool = False):
+    """Chunked SSD forward.  x: (B, S, d) -> y: (B, S, d)."""
+    B, S, d = x.shape
+    di, nh, n, conv_dim = _dims(cfg)
+    hd = cfg.ssm_headdim
+    Q = min(chunk, S)
+    assert S % Q == 0, (S, Q)
+    nc = S // Q
+
+    zxbcdt = x @ p["in_proj"]
+    z, xin, bmat, cmat, dt_raw = _split_proj(cfg, zxbcdt)
+    u = jnp.concatenate([xin, bmat, cmat], axis=-1)
+    conv_out = jax.nn.silu(_conv_causal(u, p["conv_w"], p["conv_b"]))
+    xin, bmat, cmat = jnp.split(conv_out, [di, di + n], axis=-1)
+
+    xin = shard_activation(xin, ("batch", "seq", "act_ssm_inner"))
+    xh = xin.reshape(B, nc, Q, nh, hd)
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + p["dt_bias"])  # (B,S,nh)
+    dt = dt.reshape(B, nc, Q, nh)
+    a = -jnp.exp(p["a_log"].astype(jnp.float32))                      # (nh,)
+    da = dt * a                                                       # <= 0
+    la = jnp.cumsum(da, axis=2)                                       # (B,nc,Q,nh)
+    bm = bmat.reshape(B, nc, Q, n).astype(jnp.float32)
+    cm = cmat.reshape(B, nc, Q, n).astype(jnp.float32)
+    xf = xh.astype(jnp.float32)
+
+    # ---- intra-chunk (quadratic in Q, MXU) --------------------------------
+    cb = jnp.einsum("bcqn,bcjn->bcqj", cm, bm)                 # (B,nc,Q,Q)
+    qi = jnp.arange(Q)
+    causal = qi[:, None] >= qi[None, :]                        # j <= q
+    diff = la[:, :, :, None, :] - la[:, :, None, :, :]         # (B,nc,Q,Q,nh)
+    decay = jnp.exp(jnp.where(causal[None, None, :, :, None], diff, -jnp.inf))
+    m = cb[..., None] * decay * dt[:, :, None, :, :]           # (B,nc,Q,Q,nh)
+    y_intra = jnp.einsum("bcqjh,bcjhp->bcqhp", m, xf)
+
+    # ---- chunk states ------------------------------------------------------
+    rem = jnp.exp(la[:, :, -1:, :] - la)                       # (B,nc,Q,nh)
+    sc = jnp.einsum("bcjn,bcjh,bcjhp->bchpn", bm, rem * dt, xf)  # (B,nc,nh,hd,n)
+
+    # ---- inter-chunk recurrence (scan over chunks) -------------------------
+    chunk_decay = jnp.exp(la[:, :, -1, :])                     # (B,nc,nh)
+
+    def step(h_prev, inputs):
+        s_c, dec_c = inputs                                    # (B,nh,hd,n), (B,nh)
+        h_new = dec_c[:, :, None, None] * h_prev + s_c
+        return h_new, h_prev
+
+    h0 = jnp.zeros((B, nh, hd, n), jnp.float32)
+    h_last, h_prevs = jax.lax.scan(
+        step, h0, (jnp.moveaxis(sc, 1, 0), jnp.moveaxis(chunk_decay, 1, 0)))
+    h_prevs = jnp.moveaxis(h_prevs, 0, 1)                      # (B,nc,nh,hd,n)
+
+    y_inter = jnp.einsum("bcqn,bcqh,bchpn->bcqhp",
+                         cm, jnp.exp(la), h_prevs)
+    y = y_intra + y_inter + p["d_skip"][:, None] * xf          # (B,nc,Q,nh,hd)
+    y = y.reshape(B, S, di).astype(x.dtype)
+
+    # gated RMSNorm + output projection
+    y32 = y.astype(jnp.float32)
+    scale = jax.lax.rsqrt(jnp.mean(y32 * y32, -1, keepdims=True) + cfg.norm_eps)
+    y = (y32 * scale).astype(x.dtype) * p["norm"] * jax.nn.silu(z)
+    out = y @ p["out_proj"]
+    out = shard_activation(out, ("batch", "seq", "act_embed"))
+
+    if return_state:
+        conv_state = jnp.pad(u, ((0, 0), (cfg.d_conv - 1, 0), (0, 0)))[
+            :, -(cfg.d_conv - 1):, :]
+        return out, SSMCache(h=h_last, conv=conv_state)
+    return out
+
+
+def ssd_decode_step(p: dict, cfg, x: jnp.ndarray,
+                    cache: SSMCache) -> tuple[jnp.ndarray, SSMCache]:
+    """One-token recurrent update.  x: (B, 1, d) -> (B, 1, d)."""
+    B = x.shape[0]
+    di, nh, n, conv_dim = _dims(cfg)
+    hd = cfg.ssm_headdim
+
+    zxbcdt = x[:, 0] @ p["in_proj"]                       # (B, proj)
+    z, xin, bmat, cmat, dt_raw = _split_proj(cfg, zxbcdt)
+    u_t = jnp.concatenate([xin, bmat, cmat], axis=-1)     # (B, conv_dim)
+    full = jnp.concatenate([cache.conv, u_t[:, None]], axis=1)  # (B,dc,Cd)
+    conv_out = jnp.einsum("bdc,dc->bc", full.astype(jnp.float32),
+                          p["conv_w"].astype(jnp.float32)) + p["conv_b"]
+    conv_out = jax.nn.silu(conv_out)
+    xin, bmat, cmat = jnp.split(conv_out, [di, di + n], axis=-1)
+    new_conv = full[:, 1:]
+
+    xt = xin.reshape(B, nh, hd).astype(jnp.float32)
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + p["dt_bias"])  # (B,nh)
+    a = -jnp.exp(p["a_log"].astype(jnp.float32))
+    decay = jnp.exp(dt * a)                               # (B,nh)
+    dbx = jnp.einsum("bh,bhp,bn->bhpn", dt, xt, bmat.astype(jnp.float32))
+    h = decay[:, :, None, None] * cache.h + dbx
+    y = jnp.einsum("bhpn,bn->bhp", h, cmat.astype(jnp.float32)) \
+        + p["d_skip"][:, None] * xt                       # (B,nh,hd)
+    y = y.reshape(B, di)
+
+    scale = jax.lax.rsqrt(jnp.mean(y * y, -1, keepdims=True) + cfg.norm_eps)
+    y = (y * scale).astype(x.dtype) * p["norm"] * jax.nn.silu(z)
+    out = (y @ p["out_proj"])[:, None, :]
+    return out, SSMCache(h=h, conv=new_conv)

@@ -1,0 +1,583 @@
+"""Model assembly: all assigned families behind one API.
+
+Families (repro.configs.base.Family):
+* dense  — pre-norm GQA transformer (llama3 / qwen2 / phi3 / chameleon)
+* moe    — dense attention + top-k expert FFN (granite / moonshot)
+* ssm    — Mamba-2 SSD stack, attention-free (mamba2-2.7b)
+* hybrid — parallel attention+SSM heads per layer, meta tokens, SWA (hymba)
+* encdec — encoder + cross-attending decoder (seamless-m4t)
+
+Layers are stacked (leading ``L`` dim) and applied with ``lax.scan``; remat
+wraps the scanned body.  Public entry points:
+
+``model_schema / init_params``         parameters
+``forward``                            full-sequence logits (train/prefill)
+``lm_loss``                            next-token CE (the train step core)
+``init_decode_state / decode_step``    single-token serving step
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.distributed.sharding import shard_activation
+from repro.models import layers as L
+from repro.models import moe as MOE
+from repro.models import ssm as SSM
+from repro.models.params import P, init_params as _init, param_pspecs
+
+__all__ = ["model_schema", "init_params", "layer_windows", "forward",
+           "lm_loss", "init_decode_state", "decode_step", "encode"]
+
+
+# ---------------------------------------------------------------------------
+# Schemas
+# ---------------------------------------------------------------------------
+def _stack(schema: dict, n: int) -> dict:
+    """Prepend a stacked 'layers' dimension to every leaf."""
+    def bump(leaf: P) -> P:
+        return P((n, *leaf.shape), ("layers", *leaf.axes), init=leaf.init,
+                 fan_in_axes=tuple(a + 1 for a in leaf.fan_in_axes),
+                 scale=leaf.scale)
+    return jax.tree.map(bump, schema, is_leaf=lambda x: isinstance(x, P))
+
+
+def _dense_layer_schema(cfg) -> dict:
+    return {"ln1": P((cfg.d_model,), ("embed",), init="ones"),
+            "attn": L.attention_schema(cfg),
+            "ln2": P((cfg.d_model,), ("embed",), init="ones"),
+            "mlp": L.mlp_schema(cfg)}
+
+
+def _moe_layer_schema(cfg) -> dict:
+    return {"ln1": P((cfg.d_model,), ("embed",), init="ones"),
+            "attn": L.attention_schema(cfg),
+            "ln2": P((cfg.d_model,), ("embed",), init="ones"),
+            "moe": MOE.moe_schema(cfg)}
+
+
+def _ssm_layer_schema(cfg) -> dict:
+    return {"ln1": P((cfg.d_model,), ("embed",), init="ones"),
+            "ssm": SSM.ssm_schema(cfg)}
+
+
+def _hybrid_layer_schema(cfg) -> dict:
+    return {"ln1": P((cfg.d_model,), ("embed",), init="ones"),
+            "attn": L.attention_schema(cfg),
+            "ssm": SSM.ssm_schema(cfg),
+            "norm_attn": P((cfg.d_model,), ("embed",), init="ones"),
+            "norm_ssm": P((cfg.d_model,), ("embed",), init="ones"),
+            "ln2": P((cfg.d_model,), ("embed",), init="ones"),
+            "mlp": L.mlp_schema(cfg)}
+
+
+def _enc_layer_schema(cfg) -> dict:
+    return _dense_layer_schema(cfg)
+
+
+def _dec_layer_schema(cfg) -> dict:
+    return {"ln1": P((cfg.d_model,), ("embed",), init="ones"),
+            "attn": L.attention_schema(cfg),
+            "ln_cross": P((cfg.d_model,), ("embed",), init="ones"),
+            "cross": L.attention_schema(cfg),
+            "ln2": P((cfg.d_model,), ("embed",), init="ones"),
+            "mlp": L.mlp_schema(cfg)}
+
+
+_LAYER_SCHEMAS = {"dense": _dense_layer_schema, "moe": _moe_layer_schema,
+                  "ssm": _ssm_layer_schema, "hybrid": _hybrid_layer_schema,
+                  "encdec": _dec_layer_schema}
+
+
+def model_schema(cfg) -> dict:
+    d, v = cfg.d_model, cfg.vocab_size
+    sch: dict[str, Any] = {
+        "embed": P((v, d), ("vocab", "embed"), fan_in_axes=(1,)),
+        "out_head": P((d, v), ("embed", "vocab"), fan_in_axes=(0,)),
+        "final_norm": P((d,), ("embed",), init="ones"),
+        "layers": _stack(_LAYER_SCHEMAS[cfg.family](cfg), cfg.n_layers),
+    }
+    if cfg.family == "hybrid" and cfg.n_meta_tokens:
+        sch["meta_tokens"] = P((cfg.n_meta_tokens, d), (None, "embed"),
+                               fan_in_axes=(1,))
+    if cfg.family == "encdec":
+        sch["enc_layers"] = _stack(_enc_layer_schema(cfg), cfg.enc_layers)
+        sch["enc_final_norm"] = P((d,), ("embed",), init="ones")
+    return sch
+
+
+def init_params(cfg, key: jax.Array, dtype=None) -> dict:
+    dtype = dtype or jnp.dtype(cfg.dtype)
+    return _init(model_schema(cfg), key, dtype=dtype)
+
+
+def layer_windows(cfg) -> np.ndarray:
+    """Per-layer attention window (0 = full).  Hybrid: first/middle/last
+    layers are global, the rest use cfg.swa_window (Hymba recipe)."""
+    w = np.full(cfg.n_layers, cfg.swa_window, np.int32)
+    if cfg.family == "hybrid" and cfg.n_global_layers > 0:
+        idx = np.linspace(0, cfg.n_layers - 1, cfg.n_global_layers).astype(int)
+        w[idx] = 0
+    return w
+
+
+# ---------------------------------------------------------------------------
+# Layer bodies (full-sequence)
+# ---------------------------------------------------------------------------
+def _layer_fwd(cfg, h, lp, positions, window):
+    """One layer, full sequence.  Returns (h, aux)."""
+    aux = jnp.zeros((), jnp.float32)
+    if cfg.family == "ssm":
+        h = h + SSM.ssd_apply(lp["ssm"], cfg, L.rms_norm(h, lp["ln1"], cfg.norm_eps))
+        return h, aux
+    if cfg.family == "hybrid":
+        xn = L.rms_norm(h, lp["ln1"], cfg.norm_eps)
+        a = L.attention_apply(lp["attn"], cfg, xn, positions, causal=True,
+                              window=window)
+        s = SSM.ssd_apply(lp["ssm"], cfg, xn)
+        mixed = 0.5 * (L.rms_norm(a, lp["norm_attn"], cfg.norm_eps)
+                       + L.rms_norm(s, lp["norm_ssm"], cfg.norm_eps))
+        h = h + mixed
+        h = h + L.mlp_apply(lp["mlp"], L.rms_norm(h, lp["ln2"], cfg.norm_eps))
+        return h, aux
+    # dense / moe / encdec-decoder self-attention stack
+    a = L.attention_apply(lp["attn"], cfg,
+                          L.rms_norm(h, lp["ln1"], cfg.norm_eps),
+                          positions, causal=True, window=window)
+    h = h + a
+    if cfg.family == "moe":
+        y, aux = MOE.moe_apply(lp["moe"], cfg,
+                               L.rms_norm(h, lp["ln2"], cfg.norm_eps))
+        h = h + y
+    else:
+        h = h + L.mlp_apply(lp["mlp"], L.rms_norm(h, lp["ln2"], cfg.norm_eps))
+    return h, aux
+
+
+def _dec_layer_fwd(cfg, h, lp, positions, enc_out, enc_positions):
+    a = L.attention_apply(lp["attn"], cfg,
+                          L.rms_norm(h, lp["ln1"], cfg.norm_eps),
+                          positions, causal=True)
+    h = h + a
+    c = L.attention_apply(lp["cross"], cfg,
+                          L.rms_norm(h, lp["ln_cross"], cfg.norm_eps),
+                          positions, causal=False, kv_x=enc_out,
+                          kv_positions=enc_positions)
+    h = h + c
+    h = h + L.mlp_apply(lp["mlp"], L.rms_norm(h, lp["ln2"], cfg.norm_eps))
+    return h
+
+
+def _scan_layers(cfg, h, layers_params, body, xs_extra=None, remat=True,
+                 remat_groups: int = 0):
+    """Scan over stacked layers with single- or two-level rematerialization.
+
+    ``remat_groups > 1`` enables nested remat: layers are grouped into
+    G = remat_groups chunks; only the G group-boundary activations are
+    stashed (instead of all L layer boundaries) and the inner layers are
+    recomputed per group during backward — the classic sqrt(L) memory
+    trade that buys smaller microbatch counts for the FSDP giants
+    (EXPERIMENTS.md Sec. Perf hillclimb 2).
+    """
+    def step(carry, xs):
+        hh, aux = carry
+        hh, a = body(hh, xs)
+        return (hh, aux + a), None
+
+    xs = (layers_params,) if xs_extra is None else (layers_params, *xs_extra)
+    n_layers = jax.tree.leaves(layers_params)[0].shape[0]
+
+    if remat and remat_groups > 1 and n_layers % remat_groups == 0:
+        per = n_layers // remat_groups
+        grouped = jax.tree.map(
+            lambda x: x.reshape(remat_groups, per, *x.shape[1:]), xs)
+
+        inner_step = jax.checkpoint(
+            step, policy=jax.checkpoint_policies.nothing_saveable)
+
+        def group_step(carry, group_xs):
+            out, _ = jax.lax.scan(inner_step, carry, group_xs)
+            return out, None
+
+        group_step = jax.checkpoint(
+            group_step, policy=jax.checkpoint_policies.nothing_saveable)
+        (h, aux), _ = jax.lax.scan(group_step,
+                                   (h, jnp.zeros((), jnp.float32)), grouped)
+        return h, aux
+
+    if remat:
+        step = jax.checkpoint(step,
+                              policy=jax.checkpoint_policies.nothing_saveable)
+    (h, aux), _ = jax.lax.scan(step, (h, jnp.zeros((), jnp.float32)), xs)
+    return h, aux
+
+
+# ---------------------------------------------------------------------------
+# Forward (train / prefill)
+# ---------------------------------------------------------------------------
+def encode(params, cfg, enc_input: jnp.ndarray, remat: bool = True,
+           remat_groups: int = 0):
+    """Encoder stack over precomputed frame embeddings (stub frontend)."""
+    Se = enc_input.shape[1]
+    pos = jnp.arange(Se)
+    h = enc_input
+
+    def body(hh, xs):
+        (lp,) = xs
+        a = L.attention_apply(lp["attn"], cfg,
+                              L.rms_norm(hh, lp["ln1"], cfg.norm_eps),
+                              pos, causal=False)
+        hh = hh + a
+        hh = hh + L.mlp_apply(lp["mlp"], L.rms_norm(hh, lp["ln2"], cfg.norm_eps))
+        return hh, jnp.zeros((), jnp.float32)
+
+    h, _ = _scan_layers(cfg, h, params["enc_layers"], body, remat=remat,
+                        remat_groups=remat_groups)
+    return L.rms_norm(h, params["enc_final_norm"], cfg.norm_eps)
+
+
+def forward(params, cfg, tokens: jnp.ndarray,
+            enc_input: jnp.ndarray | None = None,
+            remat: bool = True,
+            remat_groups: int = 0) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Full-sequence logits.
+
+    tokens: (B, S) int32 (decoder tokens for encdec).
+    enc_input: (B, Se, d) stub frontend embeddings (encdec only).
+    Returns (logits (B, S, V) fp32, aux_loss scalar).
+    """
+    B, S = tokens.shape
+    h = jnp.take(params["embed"], tokens, axis=0)
+    h = shard_activation(h, ("batch", "seq", "act_embed"))
+
+    n_meta = cfg.n_meta_tokens if cfg.family == "hybrid" else 0
+    if n_meta:
+        meta = jnp.broadcast_to(params["meta_tokens"][None],
+                                (B, n_meta, cfg.d_model)).astype(h.dtype)
+        h = jnp.concatenate([meta, h], axis=1)
+    positions = jnp.arange(h.shape[1])
+    windows = jnp.asarray(layer_windows(cfg))
+
+    if cfg.family == "encdec":
+        assert enc_input is not None
+        enc_out = encode(params, cfg, enc_input, remat=remat,
+                         remat_groups=remat_groups)
+        enc_pos = jnp.arange(enc_out.shape[1])
+
+        def body(hh, xs):
+            (lp,) = xs
+            return _dec_layer_fwd(cfg, hh, lp, positions, enc_out, enc_pos), \
+                jnp.zeros((), jnp.float32)
+
+        h, aux = _scan_layers(cfg, h, params["layers"], body, remat=remat,
+                              remat_groups=remat_groups)
+    else:
+        def body(hh, xs):
+            lp, w = xs
+            return _layer_fwd(cfg, hh, lp, positions, w)
+
+        h, aux = _scan_layers(cfg, h, params["layers"], body,
+                              xs_extra=(windows,), remat=remat,
+                              remat_groups=remat_groups)
+
+    h = L.rms_norm(h, params["final_norm"], cfg.norm_eps)
+    if n_meta:
+        h = h[:, n_meta:]
+    # cast-based fp32 (cotangents convert back to bf16 at the casts)
+    logits = jnp.einsum("bsd,dv->bsv", h.astype(jnp.float32),
+                        params["out_head"].astype(jnp.float32))
+    logits = shard_activation(logits, ("batch", "seq", "act_vocab"))
+    return logits, aux
+
+
+def lm_loss(params, cfg, batch: dict, remat: bool = True,
+            remat_groups: int = 0):
+    """Next-token cross entropy.  batch: tokens (B,S) [+ enc_input]."""
+    tokens = batch["tokens"]
+    logits, aux = forward(params, cfg, tokens,
+                          enc_input=batch.get("enc_input"), remat=remat,
+                          remat_groups=remat_groups)
+    labels = tokens[:, 1:]
+    lg = logits[:, :-1].astype(jnp.float32)
+    logz = jax.nn.logsumexp(lg, axis=-1)
+    gold = jnp.take_along_axis(lg, labels[..., None], axis=-1)[..., 0]
+    ce = jnp.mean(logz - gold)
+    loss = ce + 0.01 * aux
+    return loss, {"ce": ce, "aux": aux}
+
+
+# ---------------------------------------------------------------------------
+# Prefill (populate decode state from a prompt)
+# ---------------------------------------------------------------------------
+def _write_prefix(cache, k, v, positions):
+    """Write full-sequence K/V into cache slots [0, S) (linear layout)."""
+    B = k.shape[0]
+    ck = jax.lax.dynamic_update_slice(cache.k, k.astype(cache.k.dtype),
+                                      (0, 0, 0, 0))
+    cv = jax.lax.dynamic_update_slice(cache.v, v.astype(cache.v.dtype),
+                                      (0, 0, 0, 0))
+    pos_b = jnp.broadcast_to(positions.astype(jnp.int32)[None, :],
+                             (B, positions.shape[0]))
+    cpos = jax.lax.dynamic_update_slice(cache.pos, pos_b, (0, 0))
+    return cache._replace(k=ck, v=cv, pos=cpos)
+
+
+def prefill(params, cfg, tokens: jnp.ndarray, state: "DecodeState",
+            enc_input: jnp.ndarray | None = None):
+    """Process a prompt, populating the decode state.
+
+    tokens: (B, S) prompt (content tokens; hybrid meta tokens are handled
+    internally and occupy cache slots [0, n_meta)).
+    Returns (last-position logits (B, V) fp32, new state).  Decoding then
+    continues from t = S (content position).
+    """
+    B, S = tokens.shape
+    h = jnp.take(params["embed"], tokens, axis=0)
+    n_meta = cfg.n_meta_tokens if cfg.family == "hybrid" else 0
+    if n_meta:
+        meta = jnp.broadcast_to(params["meta_tokens"][None],
+                                (B, n_meta, cfg.d_model)).astype(h.dtype)
+        h = jnp.concatenate([meta, h], axis=1)
+    positions = jnp.arange(h.shape[1])
+    windows = jnp.asarray(layer_windows(cfg))
+
+    if cfg.family == "ssm":
+        def body(hh, xs):
+            lp, cache = xs
+            xn = L.rms_norm(hh, lp["ln1"], cfg.norm_eps)
+            y, new_cache = SSM.ssd_apply(lp["ssm"], cfg, xn,
+                                         chunk=min(128, hh.shape[1]),
+                                         return_state=True)
+            return hh + y, new_cache
+
+        h, new_ssm = jax.lax.scan(lambda c, xs: body(c, xs), h,
+                                  (params["layers"], state.ssm))
+        state = state._replace(ssm=new_ssm)
+
+    elif cfg.family == "hybrid":
+        def body(hh, xs):
+            lp, w, acache, _scache = xs
+            xn = L.rms_norm(hh, lp["ln1"], cfg.norm_eps)
+            a, (k, v) = L.attention_apply(lp["attn"], cfg, xn, positions,
+                                          causal=True, window=w,
+                                          return_kv=True)
+            new_a = _write_prefix(acache, k, v, positions)
+            s, new_s = SSM.ssd_apply(lp["ssm"], cfg, xn,
+                                     chunk=min(128, hh.shape[1]),
+                                     return_state=True)
+            mixed = 0.5 * (L.rms_norm(a, lp["norm_attn"], cfg.norm_eps)
+                           + L.rms_norm(s, lp["norm_ssm"], cfg.norm_eps))
+            hh = hh + mixed
+            hh = hh + L.mlp_apply(lp["mlp"],
+                                  L.rms_norm(hh, lp["ln2"], cfg.norm_eps))
+            return hh, (new_a, new_s)
+
+        h, (new_attn, new_ssm) = jax.lax.scan(
+            lambda c, xs: body(c, xs), h,
+            (params["layers"], windows, state.attn, state.ssm))
+        state = state._replace(attn=new_attn, ssm=new_ssm)
+
+    elif cfg.family == "encdec":
+        assert enc_input is not None
+        enc_out = encode(params, cfg, enc_input, remat=False)
+        enc_pos = jnp.arange(enc_out.shape[1])
+
+        def body(hh, xs):
+            lp, acache = xs
+            xn = L.rms_norm(hh, lp["ln1"], cfg.norm_eps)
+            a, (k, v) = L.attention_apply(lp["attn"], cfg, xn, positions,
+                                          causal=True, return_kv=True)
+            new_a = _write_prefix(acache, k, v, positions)
+            hh = hh + a
+            ck = jnp.einsum("bsd,dhk->bshk", enc_out, lp["cross"]["wk"])
+            cv = jnp.einsum("bsd,dhk->bshk", enc_out, lp["cross"]["wv"])
+            if cfg.qkv_bias:
+                ck, cv = ck + lp["cross"]["bk"], cv + lp["cross"]["bv"]
+            if cfg.qk_norm:
+                ck = L.rms_norm(ck, lp["cross"]["k_norm"], cfg.norm_eps)
+            ck = L.rope(ck, enc_pos, cfg.rope_theta)
+            c = L.attention_apply(lp["cross"], cfg,
+                                  L.rms_norm(hh, lp["ln_cross"], cfg.norm_eps),
+                                  positions, causal=False, kv_x=enc_out,
+                                  kv_positions=enc_pos)
+            hh = hh + c
+            hh = hh + L.mlp_apply(lp["mlp"],
+                                  L.rms_norm(hh, lp["ln2"], cfg.norm_eps))
+            return hh, (new_a, ck.astype(acache.k.dtype),
+                        cv.astype(acache.v.dtype))
+
+        h, (new_attn, cks, cvs) = jax.lax.scan(
+            lambda c, xs: body(c, xs), h, (params["layers"], state.attn))
+        state = state._replace(attn=new_attn, cross_k=cks, cross_v=cvs)
+
+    else:  # dense / moe
+        def body(hh, xs):
+            lp, w, acache = xs
+            xn = L.rms_norm(hh, lp["ln1"], cfg.norm_eps)
+            a, (k, v) = L.attention_apply(lp["attn"], cfg, xn, positions,
+                                          causal=True, window=w,
+                                          return_kv=True)
+            new_a = _write_prefix(acache, k, v, positions)
+            hh = hh + a
+            if cfg.family == "moe":
+                y, _ = MOE.moe_apply(lp["moe"], cfg,
+                                     L.rms_norm(hh, lp["ln2"], cfg.norm_eps))
+                hh = hh + y
+            else:
+                hh = hh + L.mlp_apply(lp["mlp"],
+                                      L.rms_norm(hh, lp["ln2"], cfg.norm_eps))
+            return hh, new_a
+
+        h, new_attn = jax.lax.scan(lambda c, xs: body(c, xs), h,
+                                   (params["layers"], windows, state.attn))
+        state = state._replace(attn=new_attn)
+
+    h = L.rms_norm(h, params["final_norm"], cfg.norm_eps)
+    last = h[:, -1]
+    logits = jnp.einsum("bd,dv->bv", last, params["out_head"],
+                        preferred_element_type=jnp.float32)
+    return logits, state
+
+
+# ---------------------------------------------------------------------------
+# Decode (serving)
+# ---------------------------------------------------------------------------
+class DecodeState(NamedTuple):
+    """Per-model decode state; unused fields are empty pytrees."""
+    attn: Any          # PosCache stacked over layers (or ())
+    ssm: Any           # SSMCache stacked over layers (or ())
+    cross_k: Any       # (L, B, Se, K, Dh) encdec only (or ())
+    cross_v: Any
+
+
+def _stacked_pos_cache(cfg, n_layers, batch, cache_len, dtype):
+    shape = (n_layers, batch, cache_len, cfg.n_kv_heads, cfg.head_dim)
+    return L.PosCache(k=jnp.zeros(shape, dtype), v=jnp.zeros(shape, dtype),
+                      pos=jnp.full((n_layers, batch, cache_len), -1,
+                                   jnp.int32))
+
+
+def _stacked_ssm_cache(cfg, n_layers, batch, dtype=jnp.float32):
+    di = cfg.d_inner
+    nh = di // cfg.ssm_headdim
+    conv_dim = di + 2 * cfg.d_state
+    return SSM.SSMCache(
+        h=jnp.zeros((n_layers, batch, nh, cfg.ssm_headdim, cfg.d_state),
+                    dtype),
+        conv=jnp.zeros((n_layers, batch, cfg.d_conv - 1, conv_dim), dtype))
+
+
+def init_decode_state(cfg, batch: int, cache_len: int,
+                      dtype=jnp.bfloat16, enc_len: int = 0) -> DecodeState:
+    attn: Any = ()
+    ssm: Any = ()
+    ck: Any = ()
+    cv: Any = ()
+    total_len = cache_len + (cfg.n_meta_tokens if cfg.family == "hybrid" else 0)
+    if cfg.family in ("dense", "moe", "hybrid", "encdec"):
+        attn = _stacked_pos_cache(cfg, cfg.n_layers, batch, total_len, dtype)
+    if cfg.family in ("ssm", "hybrid"):
+        ssm = _stacked_ssm_cache(cfg, cfg.n_layers, batch)
+    if cfg.family == "encdec":
+        shape = (cfg.n_layers, batch, enc_len, cfg.n_kv_heads, cfg.head_dim)
+        ck = jnp.zeros(shape, dtype)
+        cv = jnp.zeros(shape, dtype)
+    return DecodeState(attn=attn, ssm=ssm, cross_k=ck, cross_v=cv)
+
+
+def decode_step(params, cfg, tokens: jnp.ndarray, state: DecodeState,
+                t: jnp.ndarray) -> tuple[jnp.ndarray, DecodeState]:
+    """One serving step: tokens (B, 1) at absolute position t (scalar).
+
+    For hybrid models t indexes the *content* stream; the meta-token prefix
+    occupies cache slots [0, n_meta) and position t maps to slot n_meta + t.
+    Returns (logits (B, V) fp32, new state).
+    """
+    B = tokens.shape[0]
+    h = jnp.take(params["embed"], tokens, axis=0)       # (B, 1, d)
+    n_meta = cfg.n_meta_tokens if cfg.family == "hybrid" else 0
+    t_abs = t + n_meta
+    windows = jnp.asarray(layer_windows(cfg))
+
+    if cfg.family == "ssm":
+        def body(hh, xs):
+            lp, cache = xs
+            xn = L.rms_norm(hh, lp["ln1"], cfg.norm_eps)
+            y, new_cache = SSM.ssd_decode_step(lp["ssm"], cfg, xn, cache)
+            return hh + y, new_cache
+
+        h, new_ssm = jax.lax.scan(lambda c, xs: body(c, xs), h,
+                                  (params["layers"], state.ssm))
+        new_state = state._replace(ssm=new_ssm)
+
+    elif cfg.family == "hybrid":
+        def body(hh, xs):
+            lp, w, acache, scache = xs
+            xn = L.rms_norm(hh, lp["ln1"], cfg.norm_eps)
+            a, new_a = L.attention_cached(lp["attn"], cfg, xn, t_abs, acache,
+                                          window=w)
+            s, new_s = SSM.ssd_decode_step(lp["ssm"], cfg, xn, scache)
+            mixed = 0.5 * (L.rms_norm(a, lp["norm_attn"], cfg.norm_eps)
+                           + L.rms_norm(s, lp["norm_ssm"], cfg.norm_eps))
+            hh = hh + mixed
+            hh = hh + L.mlp_apply(lp["mlp"],
+                                  L.rms_norm(hh, lp["ln2"], cfg.norm_eps))
+            return hh, (new_a, new_s)
+
+        h, (new_attn, new_ssm) = jax.lax.scan(
+            lambda c, xs: body(c, xs), h,
+            (params["layers"], windows, state.attn, state.ssm))
+        new_state = state._replace(attn=new_attn, ssm=new_ssm)
+
+    elif cfg.family == "encdec":
+        def body(hh, xs):
+            lp, acache, ek, ev = xs
+            a, new_a = L.attention_cached(lp["attn"], cfg,
+                                          L.rms_norm(hh, lp["ln1"],
+                                                     cfg.norm_eps),
+                                          t_abs, acache)
+            hh = hh + a
+            c = L.cross_attention_cached(lp["cross"], cfg,
+                                         L.rms_norm(hh, lp["ln_cross"],
+                                                    cfg.norm_eps),
+                                         t_abs, ek, ev)
+            hh = hh + c
+            hh = hh + L.mlp_apply(lp["mlp"],
+                                  L.rms_norm(hh, lp["ln2"], cfg.norm_eps))
+            return hh, new_a
+
+        h, new_attn = jax.lax.scan(
+            lambda c, xs: body(c, xs), h,
+            (params["layers"], state.attn, state.cross_k, state.cross_v))
+        new_state = state._replace(attn=new_attn)
+
+    else:  # dense / moe
+        def body(hh, xs):
+            lp, w, acache = xs
+            a, new_a = L.attention_cached(lp["attn"], cfg,
+                                          L.rms_norm(hh, lp["ln1"],
+                                                     cfg.norm_eps),
+                                          t_abs, acache, window=w)
+            hh = hh + a
+            if cfg.family == "moe":
+                y, _ = MOE.moe_apply(lp["moe"], cfg,
+                                     L.rms_norm(hh, lp["ln2"], cfg.norm_eps))
+                hh = hh + y
+            else:
+                hh = hh + L.mlp_apply(lp["mlp"],
+                                      L.rms_norm(hh, lp["ln2"], cfg.norm_eps))
+            return hh, new_a
+
+        h, new_attn = jax.lax.scan(lambda c, xs: body(c, xs), h,
+                                   (params["layers"], windows, state.attn))
+        new_state = state._replace(attn=new_attn)
+
+    h = L.rms_norm(h, params["final_norm"], cfg.norm_eps)
+    logits = jnp.einsum("bsd,dv->bsv", h, params["out_head"],
+                        preferred_element_type=jnp.float32)[:, 0]
+    return logits, new_state

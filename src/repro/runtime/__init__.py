@@ -1,0 +1,1 @@
+"""Runtime: health monitoring, straggler policy, elastic rescale planning."""

@@ -1,0 +1,3 @@
+from repro.sensors.dataset import SensorDataset, berkeley_surrogate, kfold_blocks
+
+__all__ = ["SensorDataset", "berkeley_surrogate", "kfold_blocks"]

@@ -1,0 +1,130 @@
+"""Serving engine: prefill/decode split with continuous batching.
+
+A slot-based engine in the vLLM style, sized for the decode shapes of the
+assigned pool:
+
+* fixed number of **slots** (the decode batch); each slot holds one request;
+* **prefill** runs per-request (padded to the slot's prompt) and writes the
+  slot's region of the decode state;
+* **decode** advances all active slots one token per call (the jitted
+  ``decode_step``), greedy or temperature sampling;
+* finished slots (EOS or max_tokens) are refilled from the queue —
+  continuous batching.
+
+The decode state is the stacked pytree from repro.models.transformer; slot
+management is pure Python (host side), the steps are jitted.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import transformer as T
+
+__all__ = ["Request", "ServeConfig", "Engine"]
+
+
+@dataclasses.dataclass
+class Request:
+    prompt: np.ndarray               # (S,) int32
+    max_new_tokens: int = 32
+    eos_id: int = -1                 # -1: never stops early
+    # filled by the engine:
+    output: list[int] = dataclasses.field(default_factory=list)
+    done: bool = False
+
+
+@dataclasses.dataclass(frozen=True)
+class ServeConfig:
+    slots: int = 8
+    max_len: int = 512
+    dtype: str = "float32"
+
+
+class Engine:
+    def __init__(self, cfg, params, scfg: ServeConfig):
+        self.cfg = cfg
+        self.params = params
+        self.scfg = scfg
+        dt = jnp.dtype(scfg.dtype)
+        self.state = T.init_decode_state(cfg, scfg.slots, scfg.max_len,
+                                         dtype=dt)
+        self.pos = np.zeros(scfg.slots, np.int32)       # next content position
+        self.active: list[Request | None] = [None] * scfg.slots
+        self.queue: list[Request] = []
+
+        self._decode = jax.jit(
+            lambda p, tok, st, t: T.decode_step(p, cfg, tok, st, t))
+        self._prefill = jax.jit(
+            lambda p, tok, st: T.prefill(p, cfg, tok, st))
+        self._last_tok = np.zeros((scfg.slots, 1), np.int32)
+
+    # -- request lifecycle ---------------------------------------------------
+    def submit(self, req: Request) -> None:
+        self.queue.append(req)
+
+    def _admit(self) -> None:
+        """Fill empty slots from the queue (continuous batching)."""
+        for slot in range(self.scfg.slots):
+            if self.active[slot] is None and self.queue:
+                req = self.queue.pop(0)
+                self._prefill_slot(slot, req)
+
+    def _prefill_slot(self, slot: int, req: Request) -> None:
+        """Run prefill for one request and splice its state into the slot.
+
+        Implementation note: prefill is batched over a single row; the
+        resulting caches are written into slot ``slot`` of the engine state.
+        """
+        prompt = jnp.asarray(req.prompt[None, :], jnp.int32)
+        single = T.init_decode_state(self.cfg, 1, self.scfg.max_len,
+                                     dtype=jnp.dtype(self.scfg.dtype))
+        logits, single = self._prefill(self.params, prompt, single)
+
+        def splice(full, one):
+            # every stacked cache leaf has layout (L, B, ...): batch = axis 1
+            return full.at[:, slot:slot + 1].set(one)
+
+        self.state = jax.tree.map(splice, self.state, single)
+        tok = int(np.asarray(jnp.argmax(logits, -1))[0])
+        req.output.append(tok)
+        self._last_tok[slot, 0] = tok
+        self.pos[slot] = len(req.prompt)
+        self.active[slot] = req
+
+    # -- main loop ------------------------------------------------------------
+    def step(self) -> int:
+        """One decode step for all active slots; returns #active."""
+        self._admit()
+        live = [s for s in range(self.scfg.slots) if self.active[s]]
+        if not live:
+            return 0
+        # per-slot positions: unaligned requests decode together (the
+        # PosCache mask is derived from stored positions per row)
+        batch_tok = jnp.asarray(self._last_tok)
+        t_vec = jnp.asarray(self.pos, jnp.int32)
+        logits, self.state = self._decode(self.params, batch_tok, self.state,
+                                          t_vec)
+        next_tok = np.asarray(jnp.argmax(logits, -1))
+        for s in live:
+            req = self.active[s]
+            tok = int(next_tok[s])
+            req.output.append(tok)
+            self._last_tok[s, 0] = tok
+            self.pos[s] += 1
+            if (tok == req.eos_id
+                    or len(req.output) >= req.max_new_tokens
+                    or self.pos[s] >= self.scfg.max_len - 1):
+                req.done = True
+                self.active[s] = None
+        return len(live)
+
+    def run_until_done(self, max_steps: int = 10_000) -> None:
+        for _ in range(max_steps):
+            if self.step() == 0 and not self.queue:
+                return

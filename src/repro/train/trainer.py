@@ -1,0 +1,203 @@
+"""Training loop: step builder with microbatching, mixed precision,
+PCA/power-iteration gradient compression, checkpoint/resume, health hooks.
+
+The step is a pure function jitted once; the Trainer owns the impure parts
+(data cursor, checkpoint IO, heartbeats).  On a mesh, pass shardings for
+params/opt-state and the batch; on one device everything is unsharded.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from functools import partial
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.distributed import compression as GC
+from repro.models import transformer as T
+from repro.train import checkpoint as CKPT
+from repro.train.optimizer import (AdamWConfig, AdamWState, adamw_init,
+                                   adamw_update, warmup_cosine)
+
+__all__ = ["TrainConfig", "TrainState", "make_train_step", "Trainer"]
+
+
+@dataclasses.dataclass(frozen=True)
+class TrainConfig:
+    optimizer: AdamWConfig = AdamWConfig()
+    warmup_steps: int = 100
+    total_steps: int = 1000
+    microbatches: int = 1          # gradient accumulation
+    accum_dtype: str = "float32"   # bf16 for memory-bound giants (405b)
+    compress_rank: int = 0         # 0 = off; >0 enables PowerIter compression
+    remat: bool = True
+    remat_groups: int = 0          # >1: nested (two-level) remat
+    checkpoint_dir: str | None = None
+    checkpoint_every: int = 100
+    keep_checkpoints: int = 3
+
+
+class TrainState:
+    """Mutable bundle: params, optimizer, compressor, step counter."""
+
+    def __init__(self, params, opt_state: AdamWState, comp_state, step: int):
+        self.params = params
+        self.opt_state = opt_state
+        self.comp_state = comp_state
+        self.step = step
+
+    @classmethod
+    def create(cls, cfg, tcfg: TrainConfig, key: jax.Array, dtype=None):
+        params = T.init_params(cfg, key, dtype=dtype)
+        opt = adamw_init(params, tcfg.optimizer)
+        comp = (GC.init_compressor(params, tcfg.compress_rank,
+                                   jax.random.fold_in(key, 1))
+                if tcfg.compress_rank else None)
+        return cls(params, opt, comp, 0)
+
+
+def make_train_step(cfg, tcfg: TrainConfig,
+                    reduce_fn: Callable | None = None,
+                    grad_shardings=None):
+    """Returns step(params, opt_state, comp_state, batch, step) -> (...)
+
+    ``reduce_fn`` is the data-parallel gradient reduction used *inside* the
+    compressor (psum on a mesh axis under shard_map; identity under plain
+    jit where GSPMD inserts the reduction itself).
+
+    ``grad_shardings``: optional pytree of NamedSharding matching params.
+    Constraining each microbatch gradient to the FSDP param sharding lets
+    GSPMD emit reduce-scatters for the dW data-reduction instead of full
+    all-reduces (2x wire for the dominant term of large-model training —
+    EXPERIMENTS.md Sec. Perf hillclimb 2).
+    """
+
+    def constrain_grads(g):
+        if grad_shardings is None:
+            return g
+        return jax.tree.map(jax.lax.with_sharding_constraint, g,
+                            grad_shardings)
+
+    def loss_fn(params, batch):
+        return T.lm_loss(params, cfg, batch, remat=tcfg.remat,
+                         remat_groups=tcfg.remat_groups)
+
+    def step_fn(params, opt_state, comp_state, batch, step):
+        if tcfg.microbatches > 1:
+            tokens = batch["tokens"]
+            B = tokens.shape[0]
+            mb = B // tcfg.microbatches
+            micro = {k: v.reshape(tcfg.microbatches, mb, *v.shape[1:])
+                     for k, v in batch.items()}
+
+            def acc_step(carry, mbatch):
+                gsum, lsum = carry
+                (l, _), g = jax.value_and_grad(loss_fn, has_aux=True)(
+                    params, mbatch)
+                g = constrain_grads(g)
+                gsum = jax.tree.map(jnp.add, gsum, g)
+                return (gsum, lsum + l), None
+
+            accum_dt = jnp.dtype(tcfg.accum_dtype)
+            zeros = jax.tree.map(lambda p: jnp.zeros_like(p, accum_dt),
+                                 params)
+            (gsum, lsum), _ = jax.lax.scan(acc_step, (zeros, 0.0), micro)
+            grads = jax.tree.map(lambda g: g / tcfg.microbatches, gsum)
+            loss = lsum / tcfg.microbatches
+            metrics = {}
+        else:
+            (loss, metrics), grads = jax.value_and_grad(
+                loss_fn, has_aux=True)(params, batch)
+            grads = constrain_grads(grads)
+
+        if comp_state is not None:
+            grads, comp_state = GC.compress_gradients(grads, comp_state,
+                                                      reduce_fn)
+        elif reduce_fn is not None:
+            grads = jax.tree.map(reduce_fn, grads)
+
+        lr = warmup_cosine(step, peak_lr=tcfg.optimizer.lr,
+                           warmup=tcfg.warmup_steps, total=tcfg.total_steps)
+        params, opt_state, opt_metrics = adamw_update(
+            params, grads, opt_state, tcfg.optimizer, lr)
+        out_metrics = {"loss": loss, "lr": lr, **opt_metrics,
+                       **{k: v for k, v in (metrics or {}).items()}}
+        return params, opt_state, comp_state, out_metrics
+
+    return step_fn
+
+
+class Trainer:
+    """Drives the jitted step; owns checkpointing, resume and health hooks."""
+
+    def __init__(self, cfg, tcfg: TrainConfig, pipeline, *,
+                 key: jax.Array | None = None, dtype=None,
+                 health_monitor=None):
+        self.cfg = cfg
+        self.tcfg = tcfg
+        self.pipeline = pipeline
+        self.health = health_monitor
+        key = key if key is not None else jax.random.PRNGKey(0)
+        self.state = TrainState.create(cfg, tcfg, key, dtype=dtype)
+        self._step_fn = jax.jit(make_train_step(cfg, tcfg))
+        self.history: list[dict] = []
+
+    # -- fault tolerance ----------------------------------------------------
+    def save(self, async_: bool = True) -> None:
+        if not self.tcfg.checkpoint_dir:
+            return
+        tree = {"params": self.state.params,
+                "opt": self.state.opt_state,
+                "comp": self.state.comp_state}
+        extra = {"step": self.state.step,
+                 "data": self.pipeline.state_dict()}
+        fn = CKPT.save_async if async_ else CKPT.save
+        fn(self.tcfg.checkpoint_dir, self.state.step, tree, extra=extra,
+           keep=self.tcfg.keep_checkpoints)
+
+    def try_resume(self) -> bool:
+        d = self.tcfg.checkpoint_dir
+        if not d or CKPT.latest_step(d) is None:
+            return False
+        template = {"params": self.state.params,
+                    "opt": self.state.opt_state,
+                    "comp": self.state.comp_state}
+        tree, extra = CKPT.restore(d, template)
+        self.state.params = tree["params"]
+        self.state.opt_state = tree["opt"]
+        self.state.comp_state = tree["comp"]
+        self.state.step = int(extra["step"])
+        self.pipeline.load_state_dict(extra["data"])
+        return True
+
+    # -- loop ----------------------------------------------------------------
+    def run(self, n_steps: int, log_every: int = 10) -> list[dict]:
+        for _ in range(n_steps):
+            t0 = time.perf_counter()
+            tokens = next(self.pipeline)
+            batch = {"tokens": jnp.asarray(tokens)}
+            (self.state.params, self.state.opt_state, self.state.comp_state,
+             metrics) = self._step_fn(self.state.params,
+                                      self.state.opt_state,
+                                      self.state.comp_state, batch,
+                                      jnp.asarray(self.state.step))
+            self.state.step += 1
+            dt = time.perf_counter() - t0
+            if self.health is not None:
+                self.health.heartbeat(step=self.state.step, duration=dt)
+            rec = {k: float(v) for k, v in metrics.items()}
+            rec.update(step=self.state.step, seconds=dt)
+            self.history.append(rec)
+            if log_every and self.state.step % log_every == 0:
+                print(f"step {self.state.step:5d} "
+                      f"loss {rec['loss']:.4f} lr {rec['lr']:.2e} "
+                      f"gnorm {rec['grad_norm']:.2f} {dt*1e3:.0f} ms")
+            if (self.tcfg.checkpoint_dir
+                    and self.state.step % self.tcfg.checkpoint_every == 0):
+                self.save()
+        CKPT.wait_pending()
+        return self.history

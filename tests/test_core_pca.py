@@ -1,0 +1,189 @@
+"""Core PCA behaviour: covariance, PIM, deflation, orthogonal iteration."""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.core import covariance as cov
+from repro.core import power_iteration as pim
+from repro.core.pca import DistributedPCA, retained_variance
+
+
+def _random_spd(p, seed=0, decay=0.6):
+    """SPD matrix with geometrically decaying spectrum (well-separated)."""
+    rng = np.random.default_rng(seed)
+    Q, _ = np.linalg.qr(rng.normal(size=(p, p)))
+    lam = decay ** np.arange(p) * 10.0
+    return (Q * lam) @ Q.T, Q, lam
+
+
+class TestStreamingCovariance:
+    def test_matches_numpy_cov(self):
+        rng = np.random.default_rng(0)
+        x = rng.normal(size=(500, 16)).astype(np.float32)
+        st = cov.cov_init(16)
+        # stream in uneven batches — recursion of Eq. (10)
+        for chunk in np.array_split(x, [50, 120, 333]):
+            st = cov.cov_update(st, jnp.asarray(chunk))
+        c = np.asarray(cov.cov_estimate(st))
+        expected = np.cov(x.T, bias=True)
+        np.testing.assert_allclose(c, expected, rtol=0, atol=5e-4)
+
+    def test_mask_zeroes_out_of_neighborhood(self):
+        rng = np.random.default_rng(1)
+        x = rng.normal(size=(200, 8)).astype(np.float32)
+        mask = np.abs(np.subtract.outer(range(8), range(8))) <= 1
+        st = cov.cov_update(cov.cov_init(8, mask=mask), jnp.asarray(x))
+        c = np.asarray(cov.cov_estimate(st))
+        assert np.all(c[~mask] == 0.0)
+        dense = np.cov(x.T, bias=True)
+        np.testing.assert_allclose(c[mask], dense[mask], atol=5e-4)
+
+    def test_banded_equals_masked_dense(self):
+        rng = np.random.default_rng(2)
+        p, h = 24, 3
+        x = rng.normal(size=(300, p)).astype(np.float32)
+        bst = cov.banded_update(cov.banded_init(p, h), jnp.asarray(x))
+        band = cov.banded_estimate(bst)
+        dense_from_band = np.asarray(cov.band_to_dense(band))
+        mask = cov.mask_from_band(p, h)
+        mst = cov.cov_update(cov.cov_init(p, mask=mask), jnp.asarray(x))
+        dense = np.asarray(cov.cov_estimate(mst))
+        np.testing.assert_allclose(dense_from_band, dense, atol=1e-4)
+
+    def test_band_round_trip(self):
+        rng = np.random.default_rng(3)
+        p, h = 17, 4
+        c = rng.normal(size=(p, p))
+        c = np.where(cov.mask_from_band(p, h), c, 0.0)
+        band = cov.dense_to_band(jnp.asarray(c), h)
+        back = np.asarray(cov.band_to_dense(band))
+        np.testing.assert_allclose(back, c, atol=1e-6)
+
+    def test_banded_matvec_ref(self):
+        rng = np.random.default_rng(4)
+        p, h = 33, 5
+        c = rng.normal(size=(p, p))
+        c = np.where(cov.mask_from_band(p, h), c, 0.0)
+        band = cov.dense_to_band(jnp.asarray(c), h)
+        v = rng.normal(size=(p,))
+        np.testing.assert_allclose(
+            np.asarray(cov.banded_matvec_ref(band, jnp.asarray(v))),
+            c @ v, rtol=1e-5, atol=1e-5)
+
+    def test_banded_matmul_ref(self):
+        rng = np.random.default_rng(5)
+        p, h, q = 29, 4, 6
+        c = rng.normal(size=(p, p))
+        c = np.where(cov.mask_from_band(p, h), c, 0.0)
+        band = cov.dense_to_band(jnp.asarray(c), h)
+        V = rng.normal(size=(p, q))
+        np.testing.assert_allclose(
+            np.asarray(cov.banded_matmul_ref(band, jnp.asarray(V))),
+            c @ V, rtol=1e-5, atol=1e-5)
+
+
+class TestPowerIteration:
+    def test_converges_to_principal_eigenvector(self):
+        C, Q, lam = _random_spd(20, seed=0)
+        res = pim.power_iteration(lambda v: jnp.asarray(C) @ v,
+                                  jnp.ones(20, jnp.float32),
+                                  t_max=200, delta=1e-7)
+        v = np.asarray(res.v)
+        cos = abs(v @ Q[:, 0])
+        assert cos > 0.999
+        assert abs(float(res.eigenvalue) - lam[0]) < 1e-2
+
+    def test_negative_eigenvalue_sign_detection(self):
+        # matrix whose dominant eigenvalue is negative
+        rng = np.random.default_rng(7)
+        Q, _ = np.linalg.qr(rng.normal(size=(10, 10)))
+        lam = np.array([-5.0, 2.0, 1.0] + [0.1] * 7)
+        C = (Q * lam) @ Q.T
+        res = pim.power_iteration(lambda v: jnp.asarray(C, jnp.float32) @ v,
+                                  jnp.asarray(rng.normal(size=10), jnp.float32),
+                                  t_max=300, delta=1e-7)
+        assert float(res.eigenvalue) < 0
+        assert abs(float(res.eigenvalue) + 5.0) < 1e-2
+
+    def test_deflation_recovers_top_q(self):
+        C, Q, lam = _random_spd(30, seed=1)
+        res = pim.deflated_power_iteration(
+            lambda v: jnp.asarray(C, jnp.float32) @ v, 30, 5,
+            jax.random.PRNGKey(0), t_max=300, delta=1e-7)
+        W = np.asarray(res.W)
+        for k in range(5):
+            cos = abs(W[:, k] @ Q[:, k])
+            assert cos > 0.99, f"component {k}: cos={cos}"
+            assert abs(float(res.eigenvalues[k]) - lam[k]) < 0.05 * lam[k]
+        assert bool(res.valid.all())
+
+    def test_deflation_validity_mask_on_indefinite(self):
+        rng = np.random.default_rng(8)
+        Q, _ = np.linalg.qr(rng.normal(size=(12, 12)))
+        lam = np.array([6.0, 3.0, -2.0, 1.0] + [0.05] * 8)  # indefinite
+        C = (Q * lam) @ Q.T
+        res = pim.deflated_power_iteration(
+            lambda v: jnp.asarray(C, jnp.float32) @ v, 12, 5,
+            jax.random.PRNGKey(1), t_max=400, delta=1e-7)
+        lams = np.asarray(res.eigenvalues)
+        valid = np.asarray(res.valid)
+        # first negative eigenvalue invalidates itself and everything after
+        first_neg = int(np.argmax(lams < 0))
+        assert lams[first_neg] < 0
+        assert not valid[first_neg:].any()
+        assert valid[:first_neg].all()
+
+    def test_orthogonal_iteration_matches_deflation(self):
+        C, Q, lam = _random_spd(40, seed=2)
+        res = pim.orthogonal_iteration(
+            lambda V: jnp.asarray(C, jnp.float32) @ V, 40, 6,
+            jax.random.PRNGKey(2), t_max=300, delta=1e-8)
+        W = np.asarray(res.W)
+        # orthonormal
+        np.testing.assert_allclose(W.T @ W, np.eye(6), atol=1e-4)
+        for k in range(6):
+            assert abs(W[:, k] @ Q[:, k]) > 0.99
+            assert abs(float(res.eigenvalues[k]) - lam[k]) < 0.05 * lam[k]
+
+    def test_orthogonal_iteration_jits(self):
+        C, _, _ = _random_spd(16, seed=3)
+        Cj = jnp.asarray(C, jnp.float32)
+
+        @jax.jit
+        def run(key):
+            return pim.orthogonal_iteration(lambda V: Cj @ V, 16, 4, key,
+                                            t_max=100, delta=1e-6).W
+
+        W = run(jax.random.PRNGKey(0))
+        assert W.shape == (16, 4)
+        assert not np.isnan(np.asarray(W)).any()
+
+
+class TestDistributedPCAFacade:
+    def test_eigh_vs_power_vs_ortho_agree(self):
+        rng = np.random.default_rng(9)
+        # correlated data: latent factors
+        z = rng.normal(size=(2000, 3))
+        A = rng.normal(size=(3, 20))
+        x = z @ A + 0.05 * rng.normal(size=(2000, 20))
+        results = {m: DistributedPCA(q=3, method=m, t_max=500, delta=1e-7).fit(x)
+                   for m in ("eigh", "power", "ortho")}
+        for m in ("power", "ortho"):
+            for k in range(3):
+                cos = abs(results[m].components[:, k]
+                          @ results["eigh"].components[:, k])
+                assert cos > 0.99, (m, k, cos)
+
+    def test_retained_variance_increases_with_q(self):
+        rng = np.random.default_rng(10)
+        z = rng.normal(size=(1000, 4))
+        A = rng.normal(size=(4, 12))
+        x = z @ A + 0.1 * rng.normal(size=(1000, 12))
+        fracs = []
+        for q in (1, 2, 4, 8):
+            r = DistributedPCA(q=q, method="eigh").fit(x)
+            fracs.append(retained_variance(x, r.components, r.mean))
+        assert all(b >= a - 1e-9 for a, b in zip(fracs, fracs[1:]))
+        assert fracs[-1] > 0.97  # 4 latent factors -> 8 comps capture ~all

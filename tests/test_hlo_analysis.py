@@ -1,0 +1,123 @@
+"""HLO collective parsing + loop-aware trip-count correction + roofline."""
+
+import numpy as np
+import pytest
+
+from repro.launch import hlo_analysis as H
+
+
+SAMPLE_HLO = """
+%wrapped_add (a: f32[], b: f32[]) -> f32[] {
+  ROOT %add = f32[] add(%a, %b)
+}
+
+%body_spmd (param: (s32[], f32[128,256])) -> (s32[], f32[128,256]) {
+  %p = (s32[], f32[128,256]) parameter(0)
+  %x = f32[128,256] get-tuple-element(%p), index=1
+  %ag = f32[128,1024]{1,0} all-gather(%x), channel_id=1, replica_groups=[64,4]<=[256], dimensions={1}
+  %ar = f32[128,256] all-reduce(%x), channel_id=2, replica_groups=[16,16]<=[256], to_apply=%wrapped_add
+  ROOT %t = (s32[], f32[128,256]) tuple(%x, %ar)
+}
+
+%cond_spmd (param.1: (s32[], f32[128,256])) -> pred[] {
+  %p1 = (s32[], f32[128,256]) parameter(0)
+  %i = s32[] get-tuple-element(%p1), index=0
+  %constant.9 = s32[] constant(12)
+  ROOT %cmp = pred[] compare(%i, %constant.9), direction=LT
+}
+
+ENTRY %main_spmd (a: f32[128,256]) -> f32[128,256] {
+  %a = f32[128,256] parameter(0)
+  %w = (s32[], f32[128,256]) while(%tup), condition=%cond_spmd, body=%body_spmd
+  %cp = f32[128,256] collective-permute(%a), channel_id=3, source_target_pairs={{0,1},{1,2}}
+  ROOT %out = f32[128,256] get-tuple-element(%w), index=1
+}
+"""
+
+
+class TestCollectiveParse:
+    def test_counts(self):
+        st = H.parse_collectives(SAMPLE_HLO, 256, loop_aware=False)
+        assert st.counts["all-gather"] == 1
+        assert st.counts["all-reduce"] == 1
+        assert st.counts["collective-permute"] == 1
+
+    def test_wire_model_naive(self):
+        st = H.parse_collectives(SAMPLE_HLO, 256, loop_aware=False)
+        ag = 128 * 1024 * 4 * (3 / 4)          # result N * (g-1)/g, g=4
+        ar = 2 * 128 * 256 * 4 * (15 / 16)     # 2N(g-1)/g, g=16
+        cp = 128 * 256 * 4
+        assert st.wire_bytes["all-gather"] == pytest.approx(ag)
+        assert st.wire_bytes["all-reduce"] == pytest.approx(ar)
+        assert st.wire_bytes["collective-permute"] == pytest.approx(cp)
+
+    def test_loop_aware_scales_body_by_trip_count(self):
+        naive = H.parse_collectives(SAMPLE_HLO, 256, loop_aware=False)
+        aware = H.parse_collectives(SAMPLE_HLO, 256, loop_aware=True)
+        assert aware.loop_corrected
+        # body collectives x12, top-level permute x1
+        assert aware.wire_bytes["all-gather"] == pytest.approx(
+            12 * naive.wire_bytes["all-gather"])
+        assert aware.wire_bytes["all-reduce"] == pytest.approx(
+            12 * naive.wire_bytes["all-reduce"])
+        assert aware.wire_bytes["collective-permute"] == pytest.approx(
+            naive.wire_bytes["collective-permute"])
+
+    def test_loop_aware_on_real_compile(self):
+        """End-to-end: scan with known trip count on the 1-device mesh."""
+        import jax
+        import jax.numpy as jnp
+        from jax.sharding import NamedSharding, PartitionSpec as P
+        mesh = jax.make_mesh((1,), ("model",))
+
+        def fn(x):
+            def body(c, _):
+                return c * 2.0, None
+            out, _ = jax.lax.scan(body, x, None, length=9)
+            return out.sum()
+
+        x = jax.ShapeDtypeStruct((64,), jnp.float32,
+                                 sharding=NamedSharding(mesh, P(None)))
+        compiled = jax.jit(fn).lower(x).compile()
+        st = H.parse_collectives(compiled.as_text(), 1, loop_aware=True)
+        # single device: no collectives, but the parse must not crash and
+        # must detect loop structure
+        assert st.total_wire_bytes == 0.0
+
+
+class TestRoofline:
+    def test_terms_and_dominance(self):
+        st = H.parse_collectives(SAMPLE_HLO, 256, loop_aware=False)
+        terms = H.roofline_terms({"flops": 1e15, "bytes accessed": 1e9}, st)
+        assert terms.compute_s == pytest.approx(1e15 / H.PEAK_FLOPS)
+        assert terms.memory_s == pytest.approx(1e9 / H.HBM_BW)
+        assert terms.dominant == "compute"
+        assert terms.bound_s == terms.compute_s
+
+    def test_analytic_cell_models(self):
+        from repro.launch.analytic import cell_model
+        # train flops ~ 6ND for a dense model
+        m = cell_model("llama3.2-1b", "train_4k", 256, microbatches=2)
+        from repro import configs
+        n = configs.get("llama3.2-1b").param_count()
+        d = 256 * 4096
+        assert m.flops_global == pytest.approx(6 * n * d, rel=0.25)
+        # decode flops = 2NB + attention over the 32k cache (dominant here)
+        md = cell_model("llama3.2-1b", "decode_32k", 256)
+        attn = 16 * 4 * 128 * 32768 * 32 * 64
+        assert md.flops_global == pytest.approx(2 * n * 128 + attn, rel=0.1)
+        # wsn transform: 2npq
+        mw = cell_model("wsn-1m", "transform", 256)
+        assert mw.flops_global == pytest.approx(2 * 256 * 1_048_576 * 32)
+
+    def test_dryrun_cell_enumeration(self):
+        from repro.launch.dryrun import all_cells, skipped_cells
+        cells = all_cells()
+        skips = skipped_cells()
+        # 40 assigned cells = run cells (LM) + documented skips
+        lm_cells = [c for c in cells if c[0] != "wsn-1m"]
+        assert len(lm_cells) + len(skips) == 40
+        assert len([c for c in cells if c[0] == "wsn-1m"]) == 4
+        for arch, shape, why in skips:
+            assert shape == "long_500k"
+            assert "sub-quadratic" in why

@@ -1,0 +1,144 @@
+"""Per-architecture smoke tests: reduced config, one forward + train-grad +
+decode step on CPU; asserts output shapes and absence of NaNs.
+
+Also checks decode-vs-forward consistency (the cached path must reproduce the
+full-sequence path) for each family.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import configs
+from repro.models import transformer as T
+
+ARCH_NAMES = configs.ASSIGNED
+
+
+def _batch_for(cfg, B=2, S=32, key=jax.random.PRNGKey(0)):
+    k1, k2 = jax.random.split(key)
+    batch = {"tokens": jax.random.randint(k1, (B, S), 0, cfg.vocab_size)}
+    if cfg.family == "encdec":
+        batch["enc_input"] = jax.random.normal(
+            k2, (B, S, cfg.d_model), jnp.float32)
+    return batch
+
+
+@pytest.mark.parametrize("arch", ARCH_NAMES)
+class TestSmoke:
+    def test_forward_and_grad(self, arch):
+        cfg = configs.get(arch).smoke()
+        params = T.init_params(cfg, jax.random.PRNGKey(1))
+        batch = _batch_for(cfg)
+        logits, aux = T.forward(params, cfg, batch["tokens"],
+                                enc_input=batch.get("enc_input"), remat=False)
+        B, S = batch["tokens"].shape
+        assert logits.shape == (B, S, cfg.vocab_size)
+        assert not np.isnan(np.asarray(logits)).any()
+
+        def loss(p):
+            return T.lm_loss(p, cfg, batch, remat=True)[0]
+
+        l, g = jax.value_and_grad(loss)(params)
+        assert np.isfinite(float(l))
+        gnorm = jnp.sqrt(sum(jnp.sum(x.astype(jnp.float32) ** 2)
+                             for x in jax.tree.leaves(g)))
+        assert np.isfinite(float(gnorm)) and float(gnorm) > 0
+
+    def test_prefill_then_decode(self, arch):
+        cfg = configs.get(arch).smoke()
+        params = T.init_params(cfg, jax.random.PRNGKey(2))
+        B, S_prompt, cache_len = 2, 8, 16
+        state = T.init_decode_state(cfg, B, cache_len, dtype=jnp.float32,
+                                    enc_len=8)
+        prompt = jax.random.randint(jax.random.PRNGKey(6), (B, S_prompt), 0,
+                                    cfg.vocab_size)
+        enc_input = None
+        if cfg.family == "encdec":
+            enc_input = jax.random.normal(jax.random.PRNGKey(3),
+                                          (B, 8, cfg.d_model))
+        logits0, state = T.prefill(params, cfg, prompt, state,
+                                   enc_input=enc_input)
+        assert logits0.shape == (B, cfg.vocab_size)
+        tok = jnp.argmax(logits0, -1)[:, None].astype(jnp.int32)
+        logits, state2 = T.decode_step(params, cfg, tok, state,
+                                       jnp.asarray(S_prompt, jnp.int32))
+        assert logits.shape == (B, cfg.vocab_size)
+        assert not np.isnan(np.asarray(logits)).any()
+
+
+@pytest.mark.parametrize("arch", ["llama3.2-1b", "mamba2-2.7b",
+                                  "granite-moe-3b-a800m", "hymba-1.5b"])
+def test_decode_matches_forward(arch):
+    """Greedy decode over a short sequence must reproduce the full forward
+    logits position by position (cache-path correctness)."""
+    cfg = configs.get(arch).smoke()
+    if cfg.family == "moe":
+        # capacity dropping is a train-time batch effect that single-token
+        # decode cannot reproduce; disable drops for the consistency check
+        import dataclasses
+        cfg = dataclasses.replace(cfg, capacity_factor=8.0)
+    params = T.init_params(cfg, jax.random.PRNGKey(4))
+    B, S = 1, 8
+    tokens = jax.random.randint(jax.random.PRNGKey(5), (B, S), 0,
+                                cfg.vocab_size)
+    full_logits, _ = T.forward(params, cfg, tokens, remat=False)
+
+    # prefill the first token (hybrid: also populates the meta prefix),
+    # then decode the rest step by step
+    state = T.init_decode_state(cfg, B, S, dtype=jnp.float32)
+    lg0, state = T.prefill(params, cfg, tokens[:, :1], state)
+    step_logits = [np.asarray(lg0)]
+    for t in range(1, S):
+        lg, state = T.decode_step(params, cfg, tokens[:, t:t + 1], state,
+                                  jnp.asarray(t, jnp.int32))
+        step_logits.append(np.asarray(lg))
+    step_logits = np.stack(step_logits, axis=1)       # (B, S, V)
+    np.testing.assert_allclose(step_logits, np.asarray(full_logits),
+                               rtol=2e-2, atol=2e-2)
+
+
+def test_config_exactness():
+    """Every assigned config matches the spec numbers."""
+    expect = {
+        "mamba2-2.7b": dict(n_layers=64, d_model=2560, vocab_size=50280,
+                            d_state=128),
+        "chameleon-34b": dict(n_layers=48, d_model=8192, n_heads=64,
+                              n_kv_heads=8, d_ff=22016, vocab_size=65536),
+        "qwen2-7b": dict(n_layers=28, d_model=3584, n_heads=28, n_kv_heads=4,
+                         d_ff=18944, vocab_size=152064, qkv_bias=True),
+        "llama3-405b": dict(n_layers=126, d_model=16384, n_heads=128,
+                            n_kv_heads=8, d_ff=53248, vocab_size=128256),
+        "llama3.2-1b": dict(n_layers=16, d_model=2048, n_heads=32,
+                            n_kv_heads=8, d_ff=8192, vocab_size=128256),
+        "phi3-medium-14b": dict(n_layers=40, d_model=5120, n_heads=40,
+                                n_kv_heads=10, d_ff=17920, vocab_size=100352),
+        "granite-moe-3b-a800m": dict(n_layers=32, d_model=1536, n_heads=24,
+                                     n_kv_heads=8, d_ff=512, vocab_size=49155,
+                                     n_experts=40, top_k=8),
+        "moonshot-v1-16b-a3b": dict(n_layers=48, d_model=2048, n_heads=16,
+                                    n_kv_heads=16, d_ff=1408,
+                                    vocab_size=163840, n_experts=64, top_k=6),
+        "seamless-m4t-medium": dict(n_layers=12, enc_layers=12, d_model=1024,
+                                    n_heads=16, n_kv_heads=16, d_ff=4096,
+                                    vocab_size=256206),
+        "hymba-1.5b": dict(n_layers=32, d_model=1600, n_heads=25,
+                           n_kv_heads=5, d_ff=5504, vocab_size=32001,
+                           d_state=16),
+    }
+    for name, fields in expect.items():
+        cfg = configs.get(name)
+        for f, val in fields.items():
+            assert getattr(cfg, f) == val, (name, f, getattr(cfg, f), val)
+
+
+def test_param_counts_plausible():
+    """Sanity-check approximate parameter counts against the arch names."""
+    tol = 0.45
+    expect = {"llama3-405b": 405e9, "qwen2-7b": 7.6e9, "llama3.2-1b": 1.2e9,
+              "phi3-medium-14b": 14e9, "mamba2-2.7b": 2.7e9,
+              "chameleon-34b": 34e9, "hymba-1.5b": 1.5e9}
+    for name, n in expect.items():
+        got = configs.get(name).param_count()
+        assert abs(got - n) / n < tol, (name, got, n)

@@ -1,0 +1,133 @@
+"""Validation of the paper's experimental claims (Sec. 4) on the surrogate.
+
+Claims checked (paper Sec. 4.3-4.6):
+* Fig 7: PC1 retains ~80 % of variance; >=90 % by ~4-5 comps; >=95 % by ~10.
+* Fig 11: the local covariance hypothesis loses accuracy as the radio range
+  shrinks, but stays far above a random basis; loss shrinks with more comps.
+* Fig 13: PIM with few iterations converges for PC1; later components need
+  more iterations; ~20 iterations matches the centralized QR solution.
+* Sec. 4.6: with large radio ranges the masked matrix can go indefinite and
+  the sign criterion stops the extraction early — yet retained variance of
+  the kept components stays high.
+"""
+
+import numpy as np
+import pytest
+
+from repro.core.pca import DistributedPCA, retained_variance
+from repro.core.topology import build_topology
+from repro.sensors.dataset import berkeley_surrogate, kfold_blocks
+
+
+@pytest.fixture(scope="module")
+def data():
+    # half resolution (7200 epochs) keeps the test fast; stats are unchanged
+    return berkeley_surrogate(p=52, n_epochs=7200, seed=0)
+
+
+@pytest.fixture(scope="module")
+def split(data):
+    tr, te = kfold_blocks(data.n_epochs, k=10)[0]
+    return data.measurements[tr], data.measurements[te]
+
+
+class TestFig7RetainedVariance:
+    def test_pc1_dominates(self, split):
+        train, test = split
+        r = DistributedPCA(q=1, method="eigh").fit(train)
+        frac = retained_variance(test, r.components, r.mean)
+        assert frac > 0.70, f"PC1 retains {frac:.2%}, paper reports ~80%"
+
+    def test_90_percent_by_5_components(self, split):
+        train, test = split
+        r = DistributedPCA(q=5, method="eigh").fit(train)
+        frac = retained_variance(test, r.components, r.mean)
+        assert frac > 0.90
+
+    def test_95_percent_by_10_components(self, split):
+        train, test = split
+        r = DistributedPCA(q=10, method="eigh").fit(train)
+        frac = retained_variance(test, r.components, r.mean)
+        assert frac > 0.93  # paper: ~95 +/- 5%
+
+    def test_train_upper_bounds_test(self, split):
+        train, test = split
+        r = DistributedPCA(q=5, method="eigh").fit(train)
+        frac_test = retained_variance(test, r.components, r.mean)
+        r_te = DistributedPCA(q=5, method="eigh").fit(test)
+        frac_upper = retained_variance(test, r_te.components, r_te.mean)
+        assert frac_upper >= frac_test - 1e-6
+
+
+class TestFig11LocalCovariance:
+    @pytest.mark.parametrize("radio_range", [8.0, 15.0, 30.0])
+    def test_masked_beats_random_basis(self, data, split, radio_range):
+        train, test = split
+        topo = build_topology(data.positions, radio_range=radio_range)
+        r = DistributedPCA(q=5, method="eigh", cov_mode="masked",
+                           mask=np.asarray(topo.covariance_mask())).fit(train)
+        frac = retained_variance(test, r.components[:, r.valid], r.mean)
+        rng = np.random.default_rng(0)
+        Wr = np.linalg.qr(rng.normal(size=(52, 5)))[0]
+        frac_rand = retained_variance(test, Wr, train.mean(axis=0))
+        assert frac > frac_rand + 0.2
+        assert frac > 0.6
+
+    def test_accuracy_improves_with_radio_range(self, data, split):
+        train, test = split
+        fracs = []
+        for r_m in (8.0, 30.0):
+            topo = build_topology(data.positions, radio_range=r_m)
+            r = DistributedPCA(q=5, method="eigh", cov_mode="masked",
+                               mask=np.asarray(topo.covariance_mask())).fit(train)
+            fracs.append(retained_variance(test, r.components[:, r.valid], r.mean))
+        assert fracs[1] >= fracs[0] - 0.02  # larger range >= smaller range
+
+
+class TestFig13PIMConvergence:
+    def test_few_iterations_suffice_for_pc1(self, split):
+        train, test = split
+        exact = DistributedPCA(q=1, method="eigh").fit(train)
+        approx = DistributedPCA(q=1, method="power", t_max=5, delta=0.0).fit(train)
+        f_exact = retained_variance(test, exact.components, exact.mean)
+        f_approx = retained_variance(test, approx.components, approx.mean)
+        assert abs(f_exact - f_approx) < 0.02  # paper: 5 iters enough for PC1
+
+    def test_20_iterations_match_centralized(self, split):
+        train, test = split
+        exact = DistributedPCA(q=5, method="eigh").fit(train)
+        approx = DistributedPCA(q=5, method="power", t_max=20,
+                                delta=1e-3).fit(train)
+        f_exact = retained_variance(test, exact.components, exact.mean)
+        f_approx = retained_variance(
+            test, approx.components[:, approx.valid], approx.mean)
+        assert f_approx > f_exact - 0.03  # paper: ~20 iters ≈ centralized
+
+    def test_under_iterated_later_components_degrade(self, split):
+        """Paper: 5 iterations is NOT enough from the 2nd component on."""
+        train, test = split
+        full = DistributedPCA(q=5, method="power", t_max=50, delta=1e-4).fit(train)
+        starved = DistributedPCA(q=5, method="power", t_max=2, delta=0.0).fit(train)
+        f_full = retained_variance(test, full.components[:, full.valid], full.mean)
+        f_starved = retained_variance(
+            test, starved.components[:, starved.valid], starved.mean)
+        assert f_full >= f_starved - 0.01
+
+
+class TestSec46EarlyStop:
+    def test_indefinite_masked_cov_stops_early_but_retains(self, data, split):
+        """Large radio ranges can make the masked matrix indefinite; the sign
+        criterion stops extraction (Sec. 4.6) while retained variance of the
+        valid components stays high (paper: >90 %)."""
+        train, test = split
+        topo = build_topology(data.positions, radio_range=30.0)
+        r = DistributedPCA(q=15, method="power", t_max=60, delta=1e-4,
+                           cov_mode="masked",
+                           mask=np.asarray(topo.covariance_mask())).fit(train)
+        kept = r.components[:, r.valid]
+        # the stop point is data-dependent (paper: 5-10 comps on its trace;
+        # the surrogate's masked spectrum goes indefinite earlier) — the
+        # claim under test is early stop + high retained variance.
+        assert 2 <= kept.shape[1] < 15
+        frac = retained_variance(test, kept, r.mean)
+        assert frac > 0.90  # paper Sec. 4.6: 'more than 90% of the variance'

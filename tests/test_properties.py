@@ -1,0 +1,74 @@
+"""Hypothesis property tests on system invariants."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import costs
+from repro.core.pca import DistributedPCA, retained_variance
+from repro.core.spatiotemporal import stack_windows
+from repro.data.tokens import TokenPipeline
+
+
+@settings(max_examples=15, deadline=None)
+@given(seed=st.integers(0, 2**16), p=st.integers(4, 24),
+       n=st.integers(40, 200))
+def test_eigh_pca_invariants(seed, p, n):
+    """Orthonormal basis, non-negative descending eigenvalues, retained
+    variance in [0, 1] and monotone in q."""
+    rng = np.random.default_rng(seed)
+    x = rng.normal(size=(n, p)) @ rng.normal(size=(p, p))
+    q = min(4, p)
+    res = DistributedPCA(q=q, method="eigh").fit(x)
+    W = res.components
+    np.testing.assert_allclose(W.T @ W, np.eye(q), atol=1e-3)
+    lam = res.eigenvalues
+    assert np.all(np.diff(lam) <= 1e-5)
+    assert np.all(lam >= -1e-4)
+    f = retained_variance(x, W, res.mean)
+    assert -1e-6 <= f <= 1 + 1e-6
+    f1 = retained_variance(x, W[:, :1], res.mean)
+    assert f >= f1 - 1e-9
+
+
+@settings(max_examples=15, deadline=None)
+@given(seed=st.integers(0, 2**16))
+def test_projection_idempotent(seed):
+    """Projecting a reconstruction changes nothing (P^2 = P)."""
+    rng = np.random.default_rng(seed)
+    x = rng.normal(size=(100, 10))
+    res = DistributedPCA(q=3, method="eigh").fit(x)
+    z = DistributedPCA.transform(res, x)
+    xh = DistributedPCA.inverse_transform(res, z)
+    z2 = DistributedPCA.transform(res, xh)
+    np.testing.assert_allclose(np.asarray(z2), np.asarray(z),
+                               atol=1e-4, rtol=1e-4)
+
+
+@settings(max_examples=20, deadline=None)
+@given(q=st.integers(1, 30), c_max=st.integers(1, 20), p=st.integers(8, 200))
+def test_eq7_consistency(q, c_max, p):
+    """Eq. (7) is exactly the crossover of the two load formulas."""
+    wins = costs.pcag_beats_default(q, c_max, p)
+    assert wins == (costs.pcag_epoch_load(q, c_max)
+                    <= costs.default_epoch_load(p))
+
+
+@settings(max_examples=10, deadline=None)
+@given(w=st.integers(1, 5), seed=st.integers(0, 2**16))
+def test_stack_windows_preserves_lag0(w, seed):
+    rng = np.random.default_rng(seed)
+    x = rng.normal(size=(20, 3))
+    s = stack_windows(x, w)
+    np.testing.assert_array_equal(s[:, 0::w], x[w - 1:])
+
+
+@settings(max_examples=8, deadline=None)
+@given(idx=st.integers(0, 50), seed=st.integers(0, 2**10))
+def test_token_pipeline_pure_function_of_index(idx, seed):
+    p1 = TokenPipeline(vocab_size=64, seq_len=32, global_batch=2, seed=seed)
+    p2 = TokenPipeline(vocab_size=64, seq_len=32, global_batch=2, seed=seed)
+    np.testing.assert_array_equal(p1.batch_at(idx), p2.batch_at(idx))
+    assert p1.batch_at(idx).min() >= 0
+    assert p1.batch_at(idx).max() < 64

@@ -1,0 +1,164 @@
+"""Topology, routing tree, aggregation service + cost-model validation.
+
+Validates the closed-form cost models (paper Sec. 2.1.3 / Table 1) against
+actual packet counts from the routing-tree simulator, and reproduces the
+paper's headline numbers for a 52-node network (Sec. 4.4):
+* default scheme: root sustains 2p-1 = 103 packets/epoch,
+* PCAg q=1 on the 10 m tree: highest load = C*+1 (= 7 in the paper),
+* crossover near q ~ 15.
+"""
+
+import numpy as np
+import pytest
+
+from repro.core import costs
+from repro.core.aggregation import NORM_PRIMITIVES, aggregate_tree
+from repro.core.compression import pcag_primitives, scores_in_network
+from repro.core.topology import (berkeley_like_layout, build_topology,
+                                 bandwidth_reduce, graph_bandwidth, grid_layout)
+
+
+@pytest.fixture(scope="module")
+def topo10():
+    pos = berkeley_like_layout(p=52, seed=7)
+    return build_topology(pos, radio_range=10.0)
+
+
+class TestRoutingTree:
+    def test_tree_is_valid(self, topo10):
+        t = topo10.tree
+        assert t.parent[t.root] == -1
+        # every non-root has a parent with depth-1
+        for i in range(t.p):
+            if i != t.root:
+                assert t.parent[i] >= 0
+                assert t.depth[i] == t.depth[t.parent[i]] + 1
+
+    def test_subtree_sizes_sum(self, topo10):
+        t = topo10.tree
+        sizes = t.subtree_sizes()
+        assert sizes[t.root] == t.p
+        assert sizes.min() >= 1
+
+    def test_default_load_root_is_2p_minus_1(self, topo10):
+        """Paper Sec. 4.4: root processes 2p-1 = 103 packets for p=52."""
+        t = topo10.tree
+        load = t.load_default()
+        assert load[t.root] == 2 * 52 - 1 == 103
+        assert load.max() == load[t.root]
+
+    def test_pcag_load_formula(self, topo10):
+        t = topo10.tree
+        c_max = int(t.children_counts().max())
+        load = t.load_aggregation(q=1)
+        assert load.max() == c_max + 1
+        # paper's Eq. 7 regime: q=1 always beats default
+        assert costs.pcag_beats_default(1, c_max, 52)
+
+    def test_crossover_matches_eq7(self, topo10):
+        """PCAg stops winning when q(C*+1) > 2p-1 (paper: ~15 comps @ 10 m)."""
+        t = topo10.tree
+        c_max = int(t.children_counts().max())
+        qs = np.arange(1, 53)
+        wins = np.array([costs.pcag_beats_default(q, c_max, 52) for q in qs])
+        crossover = int(qs[~wins][0]) if (~wins).any() else 53
+        assert 8 <= crossover <= 30  # paper: ~15 for its tree (C*=6)
+
+    def test_radio_range_shrinks_depth(self):
+        pos = berkeley_like_layout(p=52, seed=7)
+        depths = []
+        for r in (8.0, 15.0, 50.0):
+            topo = build_topology(pos, radio_range=r)
+            depths.append(int(topo.tree.depth.max()))
+        assert depths[0] > depths[1] > depths[2] == 1  # 50 m: all root children
+
+    def test_disconnected_raises(self):
+        pos = np.array([[0.0, 0.0], [100.0, 100.0], [0.0, 1.0]])
+        with pytest.raises(ValueError, match="disconnected"):
+            build_topology(pos, radio_range=5.0)
+
+
+class TestAggregationService:
+    def test_norm_example(self, topo10):
+        """Sec. 2.1.2's Euclidean-norm service returns the exact norm."""
+        rng = np.random.default_rng(0)
+        x = rng.normal(size=52)
+        res = aggregate_tree(topo10.tree, list(x), NORM_PRIMITIVES)
+        assert abs(res.value - np.linalg.norm(x)) < 1e-9
+
+    def test_packet_counts_match_formula(self, topo10):
+        """Actual simulator packets == q*(C_i+1) for scalar records."""
+        rng = np.random.default_rng(1)
+        x = rng.normal(size=52)
+        res = aggregate_tree(topo10.tree, list(x), NORM_PRIMITIVES)
+        np.testing.assert_array_equal(res.packets,
+                                      topo10.tree.load_aggregation(q=1))
+
+    def test_pcag_in_network_scores_exact(self, topo10):
+        """In-network PCAg == centralized W^T x (Sec. 2.3)."""
+        rng = np.random.default_rng(2)
+        W = np.linalg.qr(rng.normal(size=(52, 5)))[0]
+        x = rng.normal(size=52)
+        z_net, packets = scores_in_network(topo10.tree, W, x)
+        np.testing.assert_allclose(z_net, W.T @ x, atol=1e-10)
+        np.testing.assert_array_equal(packets,
+                                      topo10.tree.load_aggregation(q=5))
+
+    def test_vector_record_packets_scale_with_q(self, topo10):
+        rng = np.random.default_rng(3)
+        x = rng.normal(size=52)
+        loads = []
+        for q in (1, 5, 15):
+            W = np.linalg.qr(rng.normal(size=(52, q)))[0]
+            _, packets = scores_in_network(topo10.tree, W, x)
+            loads.append(packets.max())
+        assert loads[1] == 5 * loads[0]
+        assert loads[2] == 15 * loads[0]
+
+
+class TestCostModels:
+    def test_distributed_cov_load_matches_neighborhoods(self, topo10):
+        n = topo10.neighborhood_sizes()
+        load = topo10.load_covariance_update()
+        np.testing.assert_array_equal(load, n + 1)
+        rep = costs.distributed_covariance(int(n.max()), T=100)
+        assert rep.communication == 100 * (int(n.max()) + 1)
+
+    def test_table1_orders(self):
+        rep = costs.table1(p=52, T=1440, q=5, n_max=10, c_max=6)
+        # centralized cov comm O(pT) >> distributed O(n_max T)
+        assert rep["covariance/centralized"].communication > \
+            rep["covariance/distributed"].communication
+        # centralized eig comp O(p^3) >> distributed per-node
+        assert rep["eigenvectors/centralized"].computation > \
+            rep["eigenvectors/distributed"].computation
+
+    def test_pim_load_quadratic_in_q(self, topo10):
+        """Paper Fig. 14: network load grows ~quadratically with q."""
+        iters = [20] * 15
+        l5 = topo10.load_pim_total(5, iters[:5]).max()
+        l10 = topo10.load_pim_total(10, iters[:10]).max()
+        l15 = topo10.load_pim_total(15, iters).max()
+        # superlinear growth
+        assert l10 > 1.9 * l5
+        assert l15 > 1.4 * l10
+
+
+class TestBandwidthReduction:
+    def test_rcm_reduces_bandwidth(self):
+        pos = grid_layout(8, 8, spacing=1.0, jitter=0.2, seed=0)
+        # shuffle labels to destroy locality
+        rng = np.random.default_rng(0)
+        perm0 = rng.permutation(64)
+        topo = build_topology(pos[perm0], radio_range=1.6)
+        bw_before = graph_bandwidth(topo.adjacency)
+        perm = bandwidth_reduce(topo.adjacency)
+        bw_after = graph_bandwidth(topo.adjacency, perm)
+        assert bw_after < bw_before
+        assert bw_after <= 20  # grid graphs reorder to ~2*cols
+
+    def test_rcm_is_permutation(self):
+        pos = grid_layout(5, 5)
+        topo = build_topology(pos, radio_range=1.5)
+        perm = bandwidth_reduce(topo.adjacency)
+        assert sorted(perm.tolist()) == list(range(25))
