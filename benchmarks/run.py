@@ -15,7 +15,7 @@ def main() -> None:
 
     from benchmarks import (fig7_retained_variance, fig9_comm_costs,
                             fig11_local_cov, fig13_pim_convergence,
-                            fig14_load_vs_q, kernels_bench,
+                            fig14_load_vs_q, kernels_bench, streaming_bench,
                             table1_complexity)
 
     modules = {
@@ -27,6 +27,7 @@ def main() -> None:
         "fig14": fig14_load_vs_q.run,
         "table1": table1_complexity.run,
         "kernels": kernels_bench.run,
+        "streaming": streaming_bench.run,
     }
 
     print("name,us_per_call,derived")

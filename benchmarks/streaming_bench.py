@@ -1,0 +1,77 @@
+"""Streaming fleet benchmark: rounds/s and the accuracy-vs-comm frontier.
+
+Times the jitted vmap+scan fleet driver at a few fleet sizes (the serving
+hot path) and sweeps the drift threshold to chart the scheduler's
+communication-vs-retained-variance tradeoff — the streaming analogue of the
+paper's Fig. 9/14 load curves.  CSV derived column:
+
+* ``stream/fleet{B}`` — network-rounds per second at fleet size B
+* ``stream/threshold{t}`` — "retained@end|refreshes|packets" per network
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import row, timed
+from repro.streaming import StreamConfig, batched_stream_run, stream_init
+
+P, Q, H = 32, 3, 4
+N_PER_ROUND = 8
+
+
+def _fleet(key, n_networks: int, n_rounds: int, shift_at: int) -> jnp.ndarray:
+    base = jnp.linspace(4.0, 1.0, P)
+    x = jax.random.normal(key, (n_networks, n_rounds, N_PER_ROUND, P))
+    rounds = jnp.arange(n_rounds)[None, :, None, None]
+    scale = jnp.where(rounds >= shift_at, base[::-1][None, None, None, :],
+                      base[None, None, None, :])
+    return x * scale
+
+
+def _states(cfg, n_networks: int):
+    keys = jax.random.split(jax.random.PRNGKey(1), n_networks)
+    return jax.vmap(lambda k: stream_init(cfg, k))(keys)
+
+
+def run():
+    out = []
+    n_rounds = 40
+
+    # -- throughput vs fleet size ------------------------------------------
+    cfg = StreamConfig(p=P, q=Q, halfwidth=H, forgetting=0.9,
+                       drift_threshold=0.1, warmup_rounds=5)
+    for B in (8, 32, 64):
+        xs = _fleet(jax.random.PRNGKey(0), B, n_rounds, shift_at=n_rounds // 2)
+        states = _states(cfg, B)
+        batched_stream_run(cfg, states, xs)          # compile outside timing
+        _, us = timed(
+            lambda s=states, x=xs: jax.block_until_ready(
+                batched_stream_run(cfg, s, x)[1].rho))
+        rps = B * n_rounds / (us / 1e6)
+        out.append(row(f"stream/fleet{B}", us, f"{rps:.0f} rounds/s"))
+
+    # -- accuracy vs communication frontier --------------------------------
+    B = 16
+    xs = _fleet(jax.random.PRNGKey(0), B, n_rounds, shift_at=n_rounds // 2)
+    def _run(c, s):
+        res = batched_stream_run(c, s, xs)
+        jax.block_until_ready(res[1].rho)
+        return res
+
+    for thr in (0.02, 0.1, 0.3):
+        cfg_t = StreamConfig(p=P, q=Q, halfwidth=H, forgetting=0.9,
+                             drift_threshold=thr, warmup_rounds=5)
+        states = _states(cfg_t, B)
+        _run(cfg_t, states)                          # compile outside timing
+        (final, m), us = timed(_run, cfg_t, states)
+        rho_end = float(np.asarray(m.rho)[:, -1].mean())
+        refreshes = float(np.asarray(final.sched.refreshes).mean())
+        packets = float(np.asarray(final.sched.comm_packets).mean())
+        out.append(row(
+            f"stream/threshold{thr}", us,
+            f"retained {rho_end:.3f}|{refreshes:.1f} refreshes|"
+            f"{packets:.0f} packets"))
+    return out

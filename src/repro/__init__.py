@@ -1,8 +1,8 @@
 """repro — Distributed PCA for Wireless Sensor Networks (Le Borgne et al.)
 as a production-grade multi-pod JAX training/inference framework.
 
-Packages: core (the paper), sensors, models, kernels, distributed, train,
-serve, data, configs, launch, runtime.
+Packages: core (the paper), sensors, models, kernels, distributed,
+streaming, train, serve, data, configs, launch, runtime.
 """
 
 __version__ = "0.1.0"

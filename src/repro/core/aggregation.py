@@ -165,7 +165,9 @@ def halo_exchange(block: jnp.ndarray, halo: int, axis_name: str,
     (left_halo, right_halo): the ``halo`` elements received from the left and
     right neighbors, shaped (..., halo).
     """
-    n = jax.lax.axis_size(axis_name)
+    # jax.lax.axis_size is not available on this jax version; psum of a
+    # unit per participant gives the axis size as a compile-time constant
+    n = int(jax.lax.psum(1, axis_name))
     right_edge = block[..., -halo:]
     left_edge = block[..., :halo]
 

@@ -21,6 +21,7 @@ import dataclasses
 
 __all__ = ["CostReport", "centralized_covariance", "distributed_covariance",
            "centralized_eigenvectors", "distributed_eigenvectors",
+           "streaming_round_cost", "streaming_refresh_cost",
            "pcag_epoch_load", "default_epoch_load", "table1"]
 
 
@@ -61,6 +62,41 @@ def distributed_eigenvectors(p: int, q: int, n_max: int, c_max: int,
     comp = iters * q * (n_max + q * c_max)
     mem = q + n_max
     return CostReport(communication=comm, computation=comp, memory=mem)
+
+
+def streaming_round_cost(n_max: int, q: int, c_max: int) -> CostReport:
+    """One streaming round (DESIGN.md Sec. 8.3): covariance fold + drift probe.
+
+    Per round each node performs the Sec.-3.3 covariance exchange (1 send +
+    |N_i| receives) and contributes to ONE aggregation of the drift statistic
+    ``(trace(W^T C W), trace(C))`` — a (q+1)-element record up the tree plus
+    the scalar verdict flooded back.
+    """
+    return CostReport(
+        communication=(n_max + 1) + (q + 1) * (c_max + 1) + 1,
+        computation=n_max + q * n_max,        # band fold + banded C W rows
+        memory=2 * n_max + 1 + q,
+    )
+
+
+def streaming_refresh_cost(p: int, q: int, n_max: int, c_max: int,
+                           iters: int) -> CostReport:
+    """One scheduled basis refresh by blocked orthogonal iteration.
+
+    Per iteration: CV for all q columns (q sends + q n_max receives, the
+    neighbor broadcast carries the full q-vector), the Gram matrix as ONE
+    aggregation of a q^2-element record (vs. Algorithm 2's k separate A/F
+    rounds), and the flood of the q x q factor back down.  After convergence
+    the new basis is flooded to the network: q p feedback packets total,
+    q (C*+1) at the highest-loaded node (the PCAg feedback path, Eq. 7).
+    """
+    per_iter = q * (n_max + 1) + q * q * (c_max + 1) + q * q
+    feedback = q * (c_max + 1)
+    return CostReport(
+        communication=iters * per_iter + feedback,
+        computation=iters * q * (n_max + q * c_max) + q * q * p,
+        memory=2 * q + n_max,
+    )
 
 
 def default_epoch_load(p: int) -> int:

@@ -34,7 +34,7 @@ def pipeline_apply(layer_fn: Callable, stage_params, x: jnp.ndarray,
     x: (B, ...) stage-0 input (other stages receive via permute); B must be
     divisible by n_microbatches.
     """
-    n_stages = jax.lax.axis_size(axis_name)
+    n_stages = int(jax.lax.psum(1, axis_name))
     stage = jax.lax.axis_index(axis_name)
     B = x.shape[0]
     assert B % n_microbatches == 0
@@ -64,7 +64,14 @@ def pipeline_apply(layer_fn: Callable, stage_params, x: jnp.ndarray,
         nxt = jax.lax.ppermute(y, axis_name, fwd_perm)
         return (nxt, out), None
 
-    buf0 = jax.lax.pvary(jnp.zeros_like(micro[0]), (axis_name,))
-    out0 = jax.lax.pvary(jnp.zeros_like(micro), (axis_name,))
+    buf0 = jnp.zeros_like(micro[0])
+    out0 = jnp.zeros_like(micro)
+    # newer jax requires the scan carry to be marked device-varying along
+    # the manual axis before it meets the ppermute output; older versions
+    # (<= 0.4.x) have no pvary and need no marking
+    pvary = getattr(jax.lax, "pvary", None)
+    if pvary is not None:
+        buf0 = pvary(buf0, (axis_name,))
+        out0 = pvary(out0, (axis_name,))
     (_, out), _ = jax.lax.scan(tick, (buf0, out0), jnp.arange(n_ticks))
     return out.reshape(B, *x.shape[1:])

@@ -26,6 +26,7 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec
 __all__ = [
     "PARAM_RULES", "ACT_RULES", "param_rules", "act_rules",
     "activation_sharding", "shard_activation", "logical_to_pspec",
+    "network_axis_spec", "shard_networks",
 ]
 
 # -- parameter logical axes -------------------------------------------------
@@ -120,6 +121,25 @@ def logical_to_pspec(axes: Sequence[str | None], rules: dict,
 def current_mesh() -> Mesh | None:
     """The mesh of the active activation_sharding context (None outside)."""
     return _CTX.mesh
+
+
+def network_axis_spec(mesh: Mesh, axis: str = "data") -> PartitionSpec:
+    """PartitionSpec sharding the leading *networks* axis of a streaming batch.
+
+    The streaming subsystem (DESIGN.md Sec. 8.3) is embarrassingly parallel
+    across simulated sensor networks, so the batch axis maps onto the mesh
+    data axis; every per-network pytree leaf (covariance band, basis, metrics)
+    carries the networks axis first and shares this spec.
+    """
+    if axis not in mesh.axis_names:
+        raise ValueError(f"mesh has no axis {axis!r}: {mesh.axis_names}")
+    return PartitionSpec(axis)
+
+
+def shard_networks(mesh: Mesh, tree, axis: str = "data"):
+    """Device_put a networks-leading pytree with the streaming sharding."""
+    sharding = NamedSharding(mesh, network_axis_spec(mesh, axis))
+    return jax.tree.map(lambda x: jax.device_put(x, sharding), tree)
 
 
 def shard_activation(x: jax.Array, axes: Sequence[str | None]) -> jax.Array:

@@ -18,7 +18,7 @@ from repro.kernels.cov_update import cov_band_update_pallas
 from repro.kernels.pca_project import pca_project_pallas, pca_reconstruct_pallas
 
 __all__ = ["banded_matvec", "banded_matmul", "cov_band_update",
-           "pca_project", "pca_reconstruct"]
+           "cov_band_update_batched", "pca_project", "pca_reconstruct"]
 
 
 def _auto_interpret(interpret: bool | None) -> bool:
@@ -88,6 +88,31 @@ def cov_band_update(x: jnp.ndarray, halfwidth: int,
     bp = block_p or _pick_block(p)
     bn = block_n or _pick_block(n, target=128)
     return _cov_band_update(x, halfwidth, bp, bn, _auto_interpret(interpret))
+
+
+def cov_band_update_batched(x: jnp.ndarray, halfwidth: int,
+                            block_p: int | None = None,
+                            block_n: int | None = None,
+                            interpret: bool | None = None) -> jnp.ndarray:
+    """Per-network delta bands (B, 2h+1, p) from a fleet batch x (B, n, p).
+
+    The networks axis is independent (no cross-network products), so the
+    batched form is a ``vmap`` of the single-network kernel: Pallas turns the
+    batch dimension into an extra outer grid axis, keeping the per-network
+    tiling identical to :func:`cov_band_update`.  The streaming fleet driver
+    reaches the same composition implicitly (``vmap`` over
+    ``online_update``); this explicit wrapper is for callers that hold a
+    (networks, n, p) block outside the driver — fleet-wide preprocessing,
+    benchmarks, ad-hoc analysis.
+    """
+    if x.ndim != 3:
+        raise ValueError(f"expected (networks, n, p), got {x.shape}")
+    _, n, p = x.shape
+    bp = block_p or _pick_block(p)
+    bn = block_n or _pick_block(n, target=128)
+    itp = _auto_interpret(interpret)
+    return jax.vmap(
+        lambda xi: _cov_band_update(xi, halfwidth, bp, bn, itp))(x)
 
 
 @functools.partial(jax.jit,

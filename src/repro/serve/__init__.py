@@ -1,1 +1,2 @@
-"""Serving substrate: KV-cache engine with continuous batching."""
+"""Serving substrate: KV-cache LM engine + streaming-PCA fleet engine,
+both with continuous batching over a fixed device batch."""

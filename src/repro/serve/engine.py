@@ -1,15 +1,18 @@
-"""Serving engine: prefill/decode split with continuous batching.
+"""Serving engines: LM decode + streaming-PCA fleets, continuous batching.
 
-A slot-based engine in the vLLM style, sized for the decode shapes of the
-assigned pool:
+Two slot-based engines in the vLLM style share the pattern *fixed device
+batch, host-side slot management, jitted steps*:
 
-* fixed number of **slots** (the decode batch); each slot holds one request;
-* **prefill** runs per-request (padded to the slot's prompt) and writes the
-  slot's region of the decode state;
-* **decode** advances all active slots one token per call (the jitted
-  ``decode_step``), greedy or temperature sampling;
-* finished slots (EOS or max_tokens) are refilled from the queue —
-  continuous batching.
+* :class:`Engine` — the LM path: **prefill** runs per-request and writes the
+  slot's region of the decode state; **decode** advances all active slots one
+  token per call; finished slots (EOS or max_tokens) are refilled from the
+  queue.
+* :class:`StreamingPCAEngine` — the sensor path (DESIGN.md Sec. 8.4): each
+  slot holds one live sensor network; every engine step folds one measurement
+  round per slot through the jitted batched streaming step
+  (:func:`repro.streaming.driver.stream_step` under ``vmap``), drift-triggered
+  basis refreshes happen inside the step, and exhausted streams retire with
+  their final basis + Table-1 communication bill.
 
 The decode state is the stacked pytree from repro.models.transformer; slot
 management is pure Python (host side), the steps are jitted.
@@ -25,8 +28,11 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.models import transformer as T
+from repro.streaming.driver import (StreamConfig, StreamState, stream_init,
+                                    stream_step)
 
-__all__ = ["Request", "ServeConfig", "Engine"]
+__all__ = ["Request", "ServeConfig", "Engine",
+           "StreamRequest", "StreamResult", "StreamingPCAEngine"]
 
 
 @dataclasses.dataclass
@@ -125,6 +131,134 @@ class Engine:
         return len(live)
 
     def run_until_done(self, max_steps: int = 10_000) -> None:
+        for _ in range(max_steps):
+            if self.step() == 0 and not self.queue:
+                return
+
+
+# ===========================================================================
+# Streaming-PCA fleet engine
+# ===========================================================================
+@dataclasses.dataclass
+class StreamRequest:
+    """One live sensor network: a finite stream of measurement rounds."""
+
+    rounds: np.ndarray               # (R, n, p) float32 measurement rounds
+    # filled by the engine:
+    result: "StreamResult | None" = None
+    done: bool = False
+
+
+@dataclasses.dataclass(frozen=True)
+class StreamResult:
+    """Final per-network summary returned when a stream retires."""
+
+    components: np.ndarray           # (p, q) final basis
+    retained: float                  # rho of the final basis on the live cov
+    refreshes: int                   # scheduled basis recomputations
+    comm_packets: float              # Table-1 communication bill (packets)
+    rounds: int                      # rounds streamed
+
+
+class StreamingPCAEngine:
+    """Continuous batching over sensor-network streams.
+
+    Parameters
+    ----------
+    cfg: the per-network :class:`~repro.streaming.driver.StreamConfig`
+        (every slot shares p, n, band half-width and scheduler policy —
+        the fleet is shape-homogeneous like a decode batch).
+    slots: device batch size (networks streamed concurrently).
+    """
+
+    def __init__(self, cfg: StreamConfig, slots: int = 8, seed: int = 0):
+        self.cfg = cfg
+        self.slots = slots
+        key = jax.random.PRNGKey(seed)
+        self._slot_keys = jax.random.split(key, slots)
+        self.states: StreamState = jax.vmap(
+            lambda k: stream_init(cfg, k))(self._slot_keys)
+        self.active: list[StreamRequest | None] = [None] * slots
+        self.cursor = np.zeros(slots, np.int64)     # next round per slot
+        self.queue: list[StreamRequest] = []
+        self._step_fn = jax.jit(jax.vmap(lambda s, x: stream_step(cfg, s, x)))
+        self._n: int | None = None       # epochs/round, fixed fleet-wide
+
+    # -- request lifecycle ---------------------------------------------------
+    def submit(self, req: StreamRequest) -> None:
+        r, n, p = req.rounds.shape
+        if p != self.cfg.p:
+            raise ValueError(f"stream p={p} != engine p={self.cfg.p}")
+        if r == 0:
+            raise ValueError("stream has no rounds")
+        # the device batch is shape-homogeneous: every stream must share the
+        # epochs-per-round of the first submitted stream
+        if self._n is None:
+            self._n = n
+        elif n != self._n:
+            raise ValueError(f"stream n={n} != engine n={self._n}")
+        self.queue.append(req)
+
+    def _splice_reset(self, slot: int) -> None:
+        """Re-init slot ``slot`` of the stacked state (fresh network)."""
+        fresh = stream_init(self.cfg, self._slot_keys[slot])
+
+        def splice(full, one):
+            return full.at[slot].set(one)
+
+        self.states = jax.tree.map(splice, self.states, fresh)
+
+    def _admit(self) -> None:
+        for slot in range(self.slots):
+            if self.active[slot] is None and self.queue:
+                self.active[slot] = self.queue.pop(0)
+                self.cursor[slot] = 0
+                self._splice_reset(slot)
+
+    def _retire(self, slot: int) -> None:
+        req = self.active[slot]
+        state_i = jax.tree.map(lambda a: a[slot], self.states)
+        from repro.streaming.online_cov import (online_estimate,
+                                                online_total_variance)
+        from repro.streaming.scheduler import retained_fraction
+        rho = retained_fraction(online_estimate(state_i.cov),
+                                state_i.sched.W,
+                                online_total_variance(state_i.cov))
+        req.result = StreamResult(
+            components=np.asarray(state_i.sched.W),
+            retained=float(rho),
+            refreshes=int(state_i.sched.refreshes),
+            comm_packets=float(state_i.sched.comm_packets),
+            rounds=int(state_i.rounds),
+        )
+        req.done = True
+        self.active[slot] = None
+
+    # -- main loop ------------------------------------------------------------
+    def step(self) -> int:
+        """Fold one measurement round for every active slot; returns #active.
+
+        Idle slots process a zero round (masked out at retirement — their
+        state is re-initialized on admission), keeping the device batch
+        static like the decode path.
+        """
+        self._admit()
+        live = [s for s in range(self.slots) if self.active[s]]
+        if not live:
+            return 0
+        zeros_round = np.zeros((self._n, self.cfg.p), np.float32)
+        batch = np.stack([
+            np.asarray(self.active[s].rounds[self.cursor[s]], np.float32)
+            if self.active[s] is not None else zeros_round
+            for s in range(self.slots)])
+        self.states, _ = self._step_fn(self.states, jnp.asarray(batch))
+        for s in live:
+            self.cursor[s] += 1
+            if self.cursor[s] >= self.active[s].rounds.shape[0]:
+                self._retire(s)
+        return len(live)
+
+    def run_until_done(self, max_steps: int = 100_000) -> None:
         for _ in range(max_steps):
             if self.step() == 0 and not self.queue:
                 return

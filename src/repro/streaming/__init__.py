@@ -1,0 +1,39 @@
+"""Streaming distributed PCA: online covariance + drift-triggered refreshes.
+
+The paper computes principal components from a covariance snapshot; this
+package is the *online* continuation (DESIGN.md Sec. 8): sensor rounds arrive
+continuously, the banded sufficient statistics are folded in place with an
+exponential forgetting factor, and the basis is recomputed only when the
+retained variance of the current components drifts past a threshold — the
+accuracy-vs-communication tradeoff of the paper's Secs. 3-4 replayed in time.
+
+Submodules
+----------
+online_cov   OnlineCovariance state + forgetting-factor updates (Pallas
+             cov-update kernel on the hot path) and the ``lax.scan`` driver
+scheduler    RecomputeScheduler: retained-variance drift monitor +
+             orthogonal-iteration basis refresh with Table-1 cost accounting
+driver       single-network stream loop, ``jax.vmap`` batched multi-network
+             driver and the ``shard_map`` sharded runner
+"""
+
+from repro.streaming.online_cov import (
+    OnlineCovariance, online_init, online_update, online_estimate,
+    stream_covariance,
+)
+from repro.streaming.scheduler import (
+    RecomputeScheduler, SchedulerState, retained_fraction, ortho_refresh,
+)
+from repro.streaming.driver import (
+    StreamConfig, StreamState, RoundMetrics, stream_init, stream_step,
+    stream_run, batched_stream_run, sharded_stream_run,
+)
+
+__all__ = [
+    "OnlineCovariance", "online_init", "online_update", "online_estimate",
+    "stream_covariance",
+    "RecomputeScheduler", "SchedulerState", "retained_fraction",
+    "ortho_refresh",
+    "StreamConfig", "StreamState", "RoundMetrics", "stream_init",
+    "stream_step", "stream_run", "batched_stream_run", "sharded_stream_run",
+]

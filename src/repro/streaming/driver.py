@@ -1,0 +1,163 @@
+"""Stream drivers: single network, vmap-batched fleet, shard_map-sharded fleet.
+
+Layering (DESIGN.md Sec. 8.3):
+
+* :func:`stream_step` — one round for ONE network: fold the round's
+  measurements into the online covariance (Pallas cov-update kernel), then
+  one scheduler decision (drift probe + possible basis refresh).
+* :func:`stream_run` — ``lax.scan`` of the step over a (rounds, n, p) stream;
+  this is the jittable single-network driver.
+* :func:`batched_stream_run` — ``jax.vmap`` of the run over a leading
+  networks axis: hundreds of independent sensor networks stream concurrently
+  in one program — the serving shape.  The scheduler's ``lax.cond`` lowers to
+  a select, so each round costs one (masked) refresh for the whole batch
+  while the *booked* WSN cost stays per-network exact.
+* :func:`sharded_stream_run` — the batched run inside ``shard_map`` with the
+  networks axis split over the mesh data axis
+  (:func:`repro.distributed.sharding.network_axis_spec`); per-network state
+  never crosses devices, so the fleet scales linearly with chips.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.streaming.online_cov import (OnlineCovariance, online_init,
+                                        online_update)
+from repro.streaming.scheduler import RecomputeScheduler, SchedulerState
+
+__all__ = ["StreamConfig", "StreamState", "RoundMetrics", "stream_init",
+           "stream_step", "stream_run", "batched_stream_run",
+           "sharded_stream_run"]
+
+
+@dataclasses.dataclass(frozen=True)
+class StreamConfig:
+    """Static configuration shared by every network of a fleet."""
+
+    p: int                          # sensors per network
+    q: int                          # principal components maintained
+    halfwidth: int                  # covariance band half-width
+    forgetting: float = 1.0         # per-round exponential forgetting factor
+    drift_threshold: float = 0.02   # refresh trigger (retained-variance drop)
+    refresh_iters: int = 8          # orthogonal-iteration length per refresh
+    warmup_rounds: int = 10         # rounds before the first refresh
+    n_max: int = 8                  # |N_i*| for the cost model
+    c_max: int = 4                  # C_i* for the cost model
+    interpret: bool | None = None   # Pallas interpret override (None = auto)
+
+    def scheduler(self) -> RecomputeScheduler:
+        return RecomputeScheduler(
+            q=self.q, drift_threshold=self.drift_threshold,
+            refresh_iters=self.refresh_iters,
+            warmup_rounds=self.warmup_rounds,
+            n_max=self.n_max, c_max=self.c_max)
+
+
+class StreamState(NamedTuple):
+    cov: OnlineCovariance
+    sched: SchedulerState
+    rounds: jnp.ndarray             # () int32 rounds streamed so far
+
+
+class RoundMetrics(NamedTuple):
+    """Per-round observability record (stacked by scan over time)."""
+
+    rho: jnp.ndarray                # retained fraction before any refresh
+    did_refresh: jnp.ndarray        # bool — scheduler fired this round
+    refreshes: jnp.ndarray          # cumulative refresh count
+    comm_packets: jnp.ndarray       # cumulative communication (packets)
+
+
+def stream_init(cfg: StreamConfig, key: jax.Array,
+                dtype=jnp.float32) -> StreamState:
+    return StreamState(
+        cov=online_init(cfg.p, cfg.halfwidth, dtype=dtype),
+        sched=cfg.scheduler().init(cfg.p, key, dtype=dtype),
+        rounds=jnp.zeros((), jnp.int32),
+    )
+
+
+def stream_step(cfg: StreamConfig, state: StreamState,
+                x_round: jnp.ndarray) -> tuple[StreamState, RoundMetrics]:
+    """One round for one network: covariance fold + scheduling decision."""
+    cov = online_update(state.cov, x_round, forgetting=cfg.forgetting,
+                        interpret=cfg.interpret)
+    sched, rho, fired = cfg.scheduler().step(state.sched, cov, state.rounds)
+    new = StreamState(cov=cov, sched=sched, rounds=state.rounds + 1)
+    metrics = RoundMetrics(rho=rho, did_refresh=fired,
+                           refreshes=sched.refreshes,
+                           comm_packets=sched.comm_packets)
+    return new, metrics
+
+
+@functools.partial(jax.jit, static_argnums=0)
+def stream_run(cfg: StreamConfig, state: StreamState,
+               xs: jnp.ndarray) -> tuple[StreamState, RoundMetrics]:
+    """Jittable scan driver: stream ``xs`` of shape (rounds, n, p)."""
+
+    def step(carry, x_round):
+        return stream_step(cfg, carry, x_round)
+
+    return jax.lax.scan(step, state, xs)
+
+
+def batched_stream_init(cfg: StreamConfig, key: jax.Array, n_networks: int,
+                        dtype=jnp.float32) -> StreamState:
+    """Per-network states stacked on a leading networks axis."""
+    keys = jax.random.split(key, n_networks)
+    return jax.vmap(lambda k: stream_init(cfg, k, dtype=dtype))(keys)
+
+
+@functools.partial(jax.jit, static_argnums=0)
+def batched_stream_run(cfg: StreamConfig, states: StreamState,
+                       xs: jnp.ndarray) -> tuple[StreamState, RoundMetrics]:
+    """vmap the scan over a fleet: ``xs`` is (networks, rounds, n, p).
+
+    Metrics come back as (networks, rounds) leaves.
+    """
+    return jax.vmap(lambda s, x: stream_run(cfg, s, x))(states, xs)
+
+
+def sharded_stream_run(cfg: StreamConfig, mesh, states: StreamState,
+                       xs: jnp.ndarray, axis: str = "data",
+                       ) -> tuple[StreamState, RoundMetrics]:
+    """The batched run with the networks axis sharded over ``axis``.
+
+    Each device streams its local slice of the fleet; no collective touches
+    per-network state (checked with ``check_rep=False`` because the body is
+    collective-free by construction).  Requires the number of networks to be
+    divisible by the axis size.
+    """
+    from jax.experimental.shard_map import shard_map
+    from jax.sharding import PartitionSpec
+
+    from repro.distributed.sharding import network_axis_spec
+
+    spec = network_axis_spec(mesh, axis)
+    n_networks = xs.shape[0]
+    axis_size = dict(zip(mesh.axis_names, mesh.devices.shape))[axis]
+    if n_networks % axis_size != 0:
+        raise ValueError(
+            f"{n_networks} networks not divisible by axis {axis!r} "
+            f"of size {axis_size}")
+
+    def local_run(states_l, xs_l):
+        return batched_stream_run(cfg, states_l, xs_l)
+
+    fm = shard_map(
+        local_run, mesh=mesh,
+        in_specs=(jax.tree.map(lambda _: spec, states),
+                  spec),
+        out_specs=(jax.tree.map(lambda _: spec, states),
+                   jax.tree.map(lambda _: spec,
+                                RoundMetrics(rho=0, did_refresh=0,
+                                             refreshes=0, comm_packets=0))),
+        check_rep=False,
+    )
+    return fm(states, xs)

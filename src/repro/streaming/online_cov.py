@@ -1,0 +1,122 @@
+"""Online banded covariance with exponential forgetting (DESIGN.md Sec. 8.1).
+
+The batch estimator (:mod:`repro.core.covariance`) keeps the plain sums of
+Eq. (9)-(10); here the sufficient statistics decay by a forgetting factor
+``beta`` each round so the estimate tracks a drifting distribution:
+
+    t    <- beta * t    + n
+    S_i  <- beta * S_i  + sum_tau x_i[tau]
+    S_ij <- beta * S_ij + sum_tau x_i[tau] x_j[tau]     (band entries only)
+
+``beta = 1`` recovers the batch statistics exactly (the equivalence test in
+tests/test_streaming.py); ``beta < 1`` gives an effective window of
+``n / (1 - beta)`` epochs.  The rank-n band update is the hot path and runs
+through the :func:`repro.kernels.ops.cov_band_update` Pallas kernel; the decay
+and mean terms are elementwise VPU work.
+
+All functions are jit/vmap/scan-compatible: the state carries only arrays
+(the band half-width is recovered from the band's leading dimension), so the
+same code serves the single-network ``lax.scan`` driver and the batched
+multi-network path (driver.py).
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import covariance as cov
+from repro.kernels import ops
+
+__all__ = ["OnlineCovariance", "online_init", "online_update",
+           "online_estimate", "online_total_variance", "stream_covariance"]
+
+
+class OnlineCovariance(NamedTuple):
+    """Decayed banded sufficient statistics (all-array pytree)."""
+
+    t: jnp.ndarray          # () effective epoch count sum_r beta^(R-r) n_r
+    s: jnp.ndarray          # (p,) decayed per-sensor sums
+    band: jnp.ndarray       # (2h+1, p) decayed products, band[k,i] ~ S_{i,i+k-h}
+
+    @property
+    def halfwidth(self) -> int:
+        return (self.band.shape[0] - 1) // 2
+
+    @property
+    def p(self) -> int:
+        return self.s.shape[0]
+
+
+def online_init(p: int, halfwidth: int, dtype=jnp.float32) -> OnlineCovariance:
+    return OnlineCovariance(
+        t=jnp.zeros((), dtype=dtype),
+        s=jnp.zeros((p,), dtype=dtype),
+        band=jnp.zeros((2 * halfwidth + 1, p), dtype=dtype),
+    )
+
+
+def online_update(state: OnlineCovariance, x: jnp.ndarray,
+                  forgetting: float = 1.0,
+                  interpret: bool | None = None) -> OnlineCovariance:
+    """Fold one round ``x`` of shape (n, p) into the decayed statistics.
+
+    The decay is applied per *round* (not per row): every row of the round
+    carries the same weight, matching the paper's epoch-synchronous model
+    where a round is one aggregation epoch of the network.
+    """
+    x = jnp.asarray(x, dtype=state.s.dtype)
+    n = x.shape[0]
+    h = state.halfwidth
+    beta = jnp.asarray(forgetting, dtype=state.s.dtype)
+    delta_band = ops.cov_band_update(x, h, interpret=interpret)
+    return OnlineCovariance(
+        t=beta * state.t + n,
+        s=beta * state.s + x.sum(axis=0),
+        band=beta * state.band + delta_band.astype(state.band.dtype),
+    )
+
+
+def online_estimate(state: OnlineCovariance) -> jnp.ndarray:
+    """Banded covariance diagonals c_band[k,i] = C[i, i+k-h] (Eq. 9, decayed).
+
+    Normalizing the decayed sums by the decayed count makes ``beta`` cancel
+    out of the weights: the estimate is the exponentially weighted sample
+    covariance over the effective window.
+    """
+    return cov.banded_estimate(
+        cov.BandedCovState(t=state.t, s=state.s, band=state.band,
+                           halfwidth=state.halfwidth))
+
+
+def online_total_variance(state: OnlineCovariance) -> jnp.ndarray:
+    """trace(C) of the live estimate — the denominator of retained variance.
+
+    The center row of the band holds the per-sensor variances, so the trace
+    needs no reconstruction (one A op of a scalar in the WSN reading).
+    """
+    h = state.halfwidth
+    t = jnp.maximum(state.t, 1.0)
+    variances = state.band[h] / t - (state.s / t) ** 2
+    return jnp.sum(variances)
+
+
+def stream_covariance(state: OnlineCovariance, xs: jnp.ndarray,
+                      forgetting: float = 1.0,
+                      interpret: bool | None = None,
+                      ) -> tuple[OnlineCovariance, jnp.ndarray]:
+    """Jittable ``lax.scan`` driver: fold ``xs`` of shape (rounds, n, p).
+
+    Returns the final state and the per-round total-variance trace (a cheap
+    scalar probe of distribution drift, used by the Fig.-style streaming
+    benchmark).
+    """
+
+    def step(carry, x_round):
+        nxt = online_update(carry, x_round, forgetting=forgetting,
+                            interpret=interpret)
+        return nxt, online_total_variance(nxt)
+
+    return jax.lax.scan(step, state, xs)

@@ -1,0 +1,167 @@
+"""Recompute scheduler: drift-triggered basis refreshes (DESIGN.md Sec. 8.2).
+
+The paper refreshes principal components by rerunning the whole PIM pipeline;
+on a live stream that is the single most expensive decision the system makes
+(Table 1: the eigenvector phase dominates communication).  The scheduler
+amortizes it: every round it evaluates the *retained-variance drift* of the
+current basis against the live covariance estimate,
+
+    rho(W, C) = trace(W^T C W) / trace(C)            (Eq. 4 on the live C)
+    drift     = rho_at_last_refresh - rho(W, C_now)
+
+and only past a configurable threshold recomputes the basis — a fixed-length
+blocked orthogonal iteration (EXPERIMENTS.md Sec. Beyond-paper) warm-started
+from the stale basis.  Each refresh books its paper-style communication cost
+through :func:`repro.core.costs.streaming_refresh_cost` so benchmarks can
+report accuracy-vs-communication exactly like Fig. 9/14.
+
+Everything is branch-free jittable: the refresh is a ``lax.cond`` whose
+batched (vmap) lowering evaluates both branches and selects per network —
+the cost model, not XLA, is the source of truth for what a WSN would pay.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import costs
+from repro.core.covariance import banded_matmul_ref
+from repro.streaming.online_cov import (OnlineCovariance, online_estimate,
+                                        online_total_variance)
+
+__all__ = ["RecomputeScheduler", "SchedulerState", "retained_fraction",
+           "ortho_refresh"]
+
+
+def retained_fraction(band_est: jnp.ndarray, W: jnp.ndarray,
+                      total_variance: jnp.ndarray) -> jnp.ndarray:
+    """rho = trace(W^T C W) / trace(C) for an orthonormal basis W.
+
+    In the WSN reading this is one aggregation of a (q+1)-element record
+    (per-node partial trace + partial variance); the cost is booked by
+    :func:`repro.core.costs.streaming_round_cost`.
+    """
+    cw = banded_matmul_ref(band_est, W)
+    num = jnp.sum(W * cw)
+    return num / jnp.maximum(total_variance, 1e-30)
+
+
+def ortho_refresh(band_est: jnp.ndarray, W0: jnp.ndarray,
+                  iters: int, eps: float = 1e-8) -> jnp.ndarray:
+    """Fixed-length blocked orthogonal iteration, warm-started from W0.
+
+    A ``fori_loop`` (static trip count) rather than the convergence
+    ``while_loop`` of :func:`repro.core.power_iteration.orthogonal_iteration`:
+    the scheduler's refresh must be vmappable across networks with a
+    deterministic per-refresh cost, and the warm start means a handful of
+    iterations track a slowly rotating subspace (EXPERIMENTS.md Sec.
+    Streaming).  Orthonormalization is the replicated-Cholesky ``inv(L)^T``
+    form (EXPERIMENTS.md Sec. Perf hillclimb 1).
+    """
+    q = W0.shape[1]
+    eye = eps * jnp.eye(q, dtype=W0.dtype)
+
+    def orthonormalize(V):
+        G = V.T @ V
+        L = jnp.linalg.cholesky(G + eye)
+        return V @ jnp.linalg.inv(L).T
+
+    def body(_, V):
+        return orthonormalize(banded_matmul_ref(band_est, V))
+
+    V = jax.lax.fori_loop(0, iters, body, orthonormalize(W0))
+    # order by Rayleigh quotient (replicated q x q solve)
+    H = V.T @ banded_matmul_ref(band_est, V)
+    evals, U = jnp.linalg.eigh(H)
+    order = jnp.argsort(-evals)
+    return V @ U[:, order]
+
+
+class SchedulerState(NamedTuple):
+    W: jnp.ndarray            # (p, q) current orthonormal basis
+    rho_ref: jnp.ndarray      # () retained fraction measured at last refresh
+    refreshes: jnp.ndarray    # () int32 — number of refreshes triggered
+    comm_packets: jnp.ndarray  # () accumulated communication (packets)
+
+
+@dataclasses.dataclass(frozen=True)
+class RecomputeScheduler:
+    """Policy + cost parameters (static; the state is the pytree above).
+
+    Parameters
+    ----------
+    q: number of principal components maintained.
+    drift_threshold: refresh when retained variance has dropped this much
+        (absolute fraction) since the last refresh.
+    refresh_iters: orthogonal-iteration length per refresh (fixed).
+    warmup_rounds: no refresh before this many rounds (the covariance needs
+        an effective window before the estimate is meaningful); the FIRST
+        refresh after warmup is unconditional (the initial basis is random).
+    n_max, c_max: WSN topology constants for the Table-1 cost model.
+    """
+
+    q: int
+    drift_threshold: float = 0.02
+    refresh_iters: int = 8
+    warmup_rounds: int = 10
+    n_max: int = 8
+    c_max: int = 4
+
+    def init(self, p: int, key: jax.Array, dtype=jnp.float32) -> SchedulerState:
+        W0 = jnp.linalg.qr(jax.random.normal(key, (p, self.q), dtype))[0]
+        return SchedulerState(
+            W=W0,
+            rho_ref=jnp.zeros((), dtype),
+            refreshes=jnp.zeros((), jnp.int32),
+            comm_packets=jnp.zeros((), dtype),
+        )
+
+    def round_cost(self) -> float:
+        return costs.streaming_round_cost(
+            self.n_max, self.q, self.c_max).communication
+
+    def refresh_cost(self, p: int) -> float:
+        return costs.streaming_refresh_cost(
+            p, self.q, self.n_max, self.c_max, self.refresh_iters
+        ).communication
+
+    def step(self, state: SchedulerState, cov_state: OnlineCovariance,
+             round_index: jnp.ndarray,
+             ) -> tuple[SchedulerState, jnp.ndarray, jnp.ndarray]:
+        """One scheduling decision against the live covariance.
+
+        Returns ``(new_state, rho, did_refresh)`` where ``rho`` is the
+        retained fraction of the basis in effect *before* any refresh (the
+        quantity the trigger saw).
+        """
+        p = state.W.shape[0]
+        band_est = online_estimate(cov_state)
+        total_var = online_total_variance(cov_state)
+        rho = retained_fraction(band_est, state.W, total_var)
+
+        past_warmup = round_index >= self.warmup_rounds
+        never_fit = state.refreshes == 0
+        drifted = (state.rho_ref - rho) > self.drift_threshold
+        trigger = past_warmup & (never_fit | drifted)
+
+        def do_refresh(_):
+            W_new = ortho_refresh(band_est, state.W, self.refresh_iters)
+            rho_new = retained_fraction(band_est, W_new, total_var)
+            return SchedulerState(
+                W=W_new,
+                rho_ref=rho_new,
+                refreshes=state.refreshes + 1,
+                comm_packets=state.comm_packets + self.refresh_cost(p),
+            )
+
+        def keep(_):
+            return state
+
+        new_state = jax.lax.cond(trigger, do_refresh, keep, operand=None)
+        new_state = new_state._replace(
+            comm_packets=new_state.comm_packets + self.round_cost())
+        return new_state, rho, trigger

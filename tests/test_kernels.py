@@ -9,7 +9,23 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ModuleNotFoundError:        # optional dev dependency (requirements-dev)
+    # no-op stand-ins so the module still imports; the property tests
+    # themselves are skipped by the importorskip fixture below
+    def given(*args, **kwargs):
+        return lambda f: f
+
+    def settings(*args, **kwargs):
+        return lambda f: f
+
+    class _StubStrategies:
+        def integers(self, *args, **kwargs):
+            return None
+
+    st = _StubStrategies()
 
 from repro.kernels import ops, ref
 
@@ -145,6 +161,10 @@ class TestPcaProject:
 
 class TestKernelProperties:
     """Hypothesis sweeps over irregular (but block-divisible) shapes."""
+
+    @pytest.fixture(autouse=True)
+    def _require_hypothesis(self):
+        pytest.importorskip("hypothesis")
 
     @settings(max_examples=20, deadline=None)
     @given(pb=st.integers(1, 8), h=st.integers(0, 6), seed=st.integers(0, 2**16))

@@ -1,9 +1,16 @@
-"""Hypothesis property tests on system invariants."""
+"""Hypothesis property tests on system invariants.
+
+The whole module is hypothesis-driven, so it skips as a unit when the
+optional dev dependency (requirements-dev.txt) is absent.
+"""
 
 import jax
 import jax.numpy as jnp
 import numpy as np
-from hypothesis import given, settings, strategies as st
+import pytest
+
+pytest.importorskip("hypothesis")
+from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from repro.core import costs
 from repro.core.pca import DistributedPCA, retained_variance

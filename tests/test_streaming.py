@@ -1,0 +1,266 @@
+"""Streaming subsystem: online covariance, scheduler, batched driver, engine.
+
+The three acceptance properties from the subsystem spec:
+1. the online covariance with forgetting=1 matches the batch estimator on a
+   static stream (the decayed sums reduce to the plain Eq. 9-10 sums),
+2. the recompute scheduler stays quiet on a stationary stream and fires on an
+   injected distribution shift,
+3. the vmap-batched fleet driver (and the shard_map-sharded runner) agree
+   with the per-network python loop.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import costs
+from repro.core import covariance as cov
+from repro.kernels import ops
+from repro.streaming import (
+    RecomputeScheduler, StreamConfig, batched_stream_run, online_estimate,
+    online_init, online_update, retained_fraction, sharded_stream_run,
+    stream_covariance, stream_init, stream_run,
+)
+from repro.streaming.driver import batched_stream_init
+from repro.streaming.online_cov import online_total_variance
+
+P, H, Q = 32, 4, 3
+
+
+def _rounds(key, n_rounds, n, p=P, scales=None):
+    """Rounds of sensor measurements with a per-sensor variance profile."""
+    x = jax.random.normal(key, (n_rounds, n, p))
+    if scales is not None:
+        x = x * jnp.asarray(scales)[None, None, :]
+    return x
+
+
+def _shifted_profile():
+    """Two variance profiles concentrating energy at opposite ends.
+
+    Strictly decreasing scales keep the top-q eigenvalues simple (no ties),
+    so the tracked subspace is well defined and the retained fraction is
+    stable on a stationary stream.
+    """
+    a = np.linspace(4.0, 1.0, P).astype(np.float32)
+    b = a[::-1].copy()
+    return a, b
+
+
+class TestOnlineCovariance:
+    def test_static_stream_matches_batch(self):
+        """forgetting=1.0: streaming fold == one-shot batch statistics."""
+        xs = _rounds(jax.random.PRNGKey(0), 6, 16)
+        state, _ = stream_covariance(online_init(P, H), xs, forgetting=1.0,
+                                     interpret=True)
+        flat = xs.reshape(-1, P)
+        batch = cov.banded_update(cov.banded_init(P, H), flat)
+        np.testing.assert_allclose(np.asarray(state.band),
+                                   np.asarray(batch.band), rtol=1e-4,
+                                   atol=1e-3)
+        np.testing.assert_allclose(np.asarray(online_estimate(state)),
+                                   np.asarray(cov.banded_estimate(batch)),
+                                   rtol=1e-4, atol=1e-4)
+
+    def test_forgetting_discounts_history(self):
+        """With beta<1 the estimate tracks the recent distribution."""
+        key = jax.random.PRNGKey(1)
+        a, b = _shifted_profile()
+        old = _rounds(key, 30, 16, scales=a)
+        new = _rounds(jax.random.PRNGKey(2), 30, 16, scales=b)
+        st = online_init(P, H)
+        st, _ = stream_covariance(st, old, forgetting=0.7, interpret=True)
+        st, _ = stream_covariance(st, new, forgetting=0.7, interpret=True)
+        est = np.asarray(online_estimate(st))
+        variances = est[H]                  # center diagonal
+        # energy must now sit on the second half of the sensors
+        assert variances[P // 2:].mean() > 3 * variances[: P // 2].mean()
+
+    def test_total_variance_matches_estimate_trace(self):
+        xs = _rounds(jax.random.PRNGKey(3), 4, 16)
+        st, _ = stream_covariance(online_init(P, H), xs, interpret=True)
+        tr = float(online_total_variance(st))
+        assert tr == pytest.approx(float(np.trace(
+            np.asarray(cov.band_to_dense(online_estimate(st))))), rel=1e-5)
+
+
+class TestBatchedKernelWrapper:
+    def test_matches_per_network_kernel(self):
+        x = jax.random.normal(jax.random.PRNGKey(0), (5, 16, P))
+        out = ops.cov_band_update_batched(x, H, interpret=True)
+        for i in range(5):
+            np.testing.assert_allclose(
+                np.asarray(out[i]),
+                np.asarray(ops.cov_band_update(x[i], H, interpret=True)),
+                rtol=1e-5, atol=1e-5)
+
+    def test_rejects_unbatched_input(self):
+        with pytest.raises(ValueError):
+            ops.cov_band_update_batched(jnp.zeros((16, P)), H)
+
+
+class TestScheduler:
+    def _stream(self, cfg, xs):
+        state = stream_init(cfg, jax.random.PRNGKey(7))
+        return stream_run(cfg, state, xs)
+
+    def test_stationary_stream_single_refresh(self):
+        """Only the warmup refresh fires when the distribution is static."""
+        cfg = StreamConfig(p=P, q=Q, halfwidth=H, forgetting=0.95,
+                           drift_threshold=0.1, warmup_rounds=8,
+                           interpret=True)
+        a, _ = _shifted_profile()
+        xs = _rounds(jax.random.PRNGKey(0), 60, 16, scales=a)
+        final, metrics = self._stream(cfg, xs)
+        assert int(final.sched.refreshes) == 1
+        assert bool(metrics.did_refresh[cfg.warmup_rounds])
+
+    def test_injected_shift_triggers_refresh(self):
+        """A variance shift to new sensors must fire a second refresh."""
+        cfg = StreamConfig(p=P, q=Q, halfwidth=H, forgetting=0.9,
+                           drift_threshold=0.1, warmup_rounds=8,
+                           interpret=True)
+        a, b = _shifted_profile()
+        xs = jnp.concatenate([
+            _rounds(jax.random.PRNGKey(0), 30, 16, scales=a),
+            _rounds(jax.random.PRNGKey(1), 30, 16, scales=b),
+        ])
+        final, metrics = self._stream(cfg, xs)
+        fired = np.asarray(metrics.did_refresh)
+        assert int(final.sched.refreshes) >= 2
+        # the post-shift refresh happens after the shift round, not before
+        assert fired[30:].any() and not fired[cfg.warmup_rounds + 1:30].any()
+        # each refresh recovers retained variance: rho (measured pre-refresh)
+        # jumps between the trigger round and the following round
+        rho = np.asarray(metrics.rho)
+        last = int(np.where(fired)[0][-1])
+        assert rho[last + 1] > rho[last]
+
+    def test_refresh_books_table1_cost(self):
+        cfg = StreamConfig(p=P, q=Q, halfwidth=H, warmup_rounds=2,
+                           interpret=True)
+        xs = _rounds(jax.random.PRNGKey(0), 6, 16)
+        final, metrics = self._stream(cfg, xs)
+        sched = cfg.scheduler()
+        expected = (6 * sched.round_cost()
+                    + int(final.sched.refreshes) * sched.refresh_cost(P))
+        assert float(final.sched.comm_packets) == pytest.approx(expected)
+
+    def test_refresh_recovers_eigh_subspace(self):
+        """ortho_refresh from a stale basis lands on the eigh subspace."""
+        from repro.streaming.scheduler import ortho_refresh
+        rng = np.random.default_rng(0)
+        x = jnp.asarray(rng.normal(size=(512, P)).astype(np.float32)
+                        * np.linspace(3.0, 0.5, P)[None, :])
+        st = online_update(online_init(P, H), x, interpret=True)
+        band = online_estimate(st)
+        W0 = jnp.linalg.qr(jax.random.normal(jax.random.PRNGKey(0), (P, Q)))[0]
+        W = ortho_refresh(band, W0, iters=50)
+        dense = np.asarray(cov.band_to_dense(band))
+        evals, evecs = np.linalg.eigh(dense)
+        top = evecs[:, np.argsort(-evals)[:Q]]
+        # principal angles ~ 0: |top^T W| has singular values ~ 1
+        sv = np.linalg.svd(top.T @ np.asarray(W), compute_uv=False)
+        assert sv.min() > 0.99
+
+
+class TestBatchedDriver:
+    def _cfg(self):
+        return StreamConfig(p=P, q=Q, halfwidth=H, forgetting=0.9,
+                            drift_threshold=0.05, warmup_rounds=5,
+                            interpret=True)
+
+    def test_batched_agrees_with_per_network_loop(self):
+        cfg = self._cfg()
+        B = 4
+        key = jax.random.PRNGKey(0)
+        states = batched_stream_init(cfg, key, B)
+        xsb = jax.random.normal(jax.random.PRNGKey(1), (B, 15, 8, P))
+        finb, mb = batched_stream_run(cfg, states, xsb)
+        for i in range(B):
+            st_i = jax.tree.map(lambda a: a[i], states)
+            fin_i, m_i = stream_run(cfg, st_i, xsb[i])
+            np.testing.assert_allclose(np.asarray(fin_i.sched.W),
+                                       np.asarray(finb.sched.W[i]),
+                                       rtol=1e-4, atol=1e-4)
+            assert int(fin_i.sched.refreshes) == int(finb.sched.refreshes[i])
+            np.testing.assert_allclose(np.asarray(m_i.rho),
+                                       np.asarray(mb.rho[i]),
+                                       rtol=1e-4, atol=1e-4)
+
+    def test_sharded_agrees_with_batched(self):
+        cfg = self._cfg()
+        B = 4
+        states = batched_stream_init(cfg, jax.random.PRNGKey(0), B)
+        xsb = jax.random.normal(jax.random.PRNGKey(1), (B, 12, 8, P))
+        mesh = jax.make_mesh((1, 1), ("data", "model"))
+        fin_v, m_v = batched_stream_run(cfg, states, xsb)
+        fin_s, m_s = sharded_stream_run(cfg, mesh, states, xsb)
+        np.testing.assert_allclose(np.asarray(fin_v.sched.W),
+                                   np.asarray(fin_s.sched.W),
+                                   rtol=1e-5, atol=1e-5)
+        np.testing.assert_allclose(np.asarray(m_v.comm_packets),
+                                   np.asarray(m_s.comm_packets))
+
+    def test_network_axis_spec_rejects_unknown_axis(self):
+        from repro.distributed.sharding import network_axis_spec
+        mesh = jax.make_mesh((1, 1), ("data", "model"))
+        with pytest.raises(ValueError):
+            network_axis_spec(mesh, "nonexistent")
+
+
+class TestServeEngine:
+    def test_continuous_batching_retires_all_streams(self):
+        from repro.serve.engine import StreamingPCAEngine, StreamRequest
+        cfg = StreamConfig(p=P, q=Q, halfwidth=H, forgetting=0.95,
+                           drift_threshold=0.05, warmup_rounds=4,
+                           interpret=True)
+        eng = StreamingPCAEngine(cfg, slots=3, seed=0)
+        rng = np.random.default_rng(0)
+        reqs = [StreamRequest(rounds=rng.normal(
+            size=(10 + 2 * i, 8, P)).astype(np.float32)) for i in range(5)]
+        for r in reqs:
+            eng.submit(r)
+        eng.run_until_done()
+        assert all(r.done for r in reqs)
+        for r in reqs:
+            assert r.result is not None
+            assert r.result.refreshes >= 1          # warmup refresh at least
+            assert r.result.comm_packets > 0
+            assert r.result.components.shape == (P, Q)
+            assert r.result.rounds == r.rounds.shape[0]
+
+    def test_rejects_mismatched_network_size(self):
+        from repro.serve.engine import StreamingPCAEngine, StreamRequest
+        cfg = StreamConfig(p=P, q=Q, halfwidth=H, interpret=True)
+        eng = StreamingPCAEngine(cfg, slots=2)
+        with pytest.raises(ValueError):
+            eng.submit(StreamRequest(rounds=np.zeros((4, 8, P + 1),
+                                                     np.float32)))
+
+    def test_rejects_heterogeneous_round_shape_and_empty_stream(self):
+        """The device batch is shape-homogeneous: n is fixed by the first
+        stream, and empty streams never enter a slot."""
+        from repro.serve.engine import StreamingPCAEngine, StreamRequest
+        cfg = StreamConfig(p=P, q=Q, halfwidth=H, interpret=True)
+        eng = StreamingPCAEngine(cfg, slots=2)
+        eng.submit(StreamRequest(rounds=np.zeros((3, 8, P), np.float32)))
+        with pytest.raises(ValueError):
+            eng.submit(StreamRequest(rounds=np.zeros((3, 16, P), np.float32)))
+        with pytest.raises(ValueError):
+            eng.submit(StreamRequest(rounds=np.zeros((0, 8, P), np.float32)))
+
+
+class TestStreamingCosts:
+    def test_round_cost_positive_and_scales_with_q(self):
+        c1 = costs.streaming_round_cost(8, 1, 4)
+        c5 = costs.streaming_round_cost(8, 5, 4)
+        assert 0 < c1.communication < c5.communication
+
+    def test_refresh_dominates_round(self):
+        """The design premise: a refresh costs >> one round (else scheduling
+        would be pointless)."""
+        round_c = costs.streaming_round_cost(8, 5, 4).communication
+        refresh_c = costs.streaming_refresh_cost(52, 5, 8, 4, 8).communication
+        assert refresh_c > 20 * round_c
