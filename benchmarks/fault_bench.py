@@ -1,0 +1,114 @@
+"""Fault benchmark: accuracy and packet overhead vs. per-hop loss rate.
+
+Two sweeps, the fault-tolerant analogue of the paper's Fig. 9/14 frontier:
+
+* ``fault/tree@{loss}`` — the routing-tree simulator under lossy links with
+  ARQ: delivered-record fraction and measured packet overhead vs. the
+  reliable epoch (overhead converges to ``expected_transmissions`` as the
+  retry budget absorbs the loss);
+* ``fault/stream@{loss}`` — the streaming fleet under faults scaled by the
+  loss rate: measurement dropout in the data, a mid-stream death wave
+  killing a ``loss`` fraction of each network's sensors (per-round liveness
+  masks through the driver, i.e. the masked Pallas cov-update path + the
+  churn-triggered refresh), and lossy Table-1 booking.  Reports
+  end-of-stream retained variance and the booked packet bill per network.
+
+CSV derived column: ``delivered|overhead`` for the tree rows,
+``retained|packets`` for the streaming rows.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import row, timed, topo
+from repro.core import costs
+from repro.core.aggregation import (NORM_PRIMITIVES, aggregate_tree,
+                                    lossy_aggregate_tree)
+from repro.core.faults import FaultModel, dropout_mask
+
+LOSS_RATES = (0.0, 0.05, 0.1, 0.2, 0.3)
+P, Q, H = 32, 3, 4
+N_PER_ROUND = 8
+
+
+def _tree_sweep(n_epochs: int):
+    out = []
+    t = topo(10.0)
+    rng_x = np.random.default_rng(0)
+    values = rng_x.normal(size=(n_epochs, t.p))
+    reliable = aggregate_tree(t.tree, list(values[0]), NORM_PRIMITIVES)
+    base_packets = int(reliable.packets.sum())
+    for loss in LOSS_RATES:
+        fm = FaultModel(link_loss=loss, max_retries=3)
+        rng = np.random.default_rng(42)
+
+        def epoch():
+            delivered = 0
+            packets = 0
+            for e in range(n_epochs):
+                res = lossy_aggregate_tree(t.tree, list(values[e]),
+                                           NORM_PRIMITIVES, fm, rng)
+                delivered += res.delivered[res.active].mean()
+                packets += res.packets.sum()
+            return delivered / n_epochs, packets / n_epochs
+
+        (dfrac, packets), us = timed(epoch, repeat=1)
+        out.append(row(f"fault/tree@{loss}", us / n_epochs,
+                       f"delivered {dfrac:.3f}|{packets / base_packets:.2f}x"))
+    return out
+
+
+def _stream_sweep(n_rounds: int, n_networks: int):
+    import jax
+    import jax.numpy as jnp
+
+    from repro.streaming import StreamConfig, batched_stream_run, stream_init
+
+    from repro.core.faults import death_wave
+
+    out = []
+    scale = np.concatenate([[4.0, 3.4, 2.8], np.linspace(1.2, 0.8, P - 3)])
+    xs_np = (np.random.default_rng(0)
+             .normal(size=(n_networks, n_rounds, N_PER_ROUND, P)) * scale)
+    for loss in LOSS_RATES:
+        # measurement dropout at the loss rate (a lost D packet is a
+        # missing reading) ...
+        keep = dropout_mask(np.random.default_rng(7), xs_np.shape, loss)
+        xs = jnp.asarray((xs_np * keep).astype(np.float32))
+        # ... plus a mid-stream death wave killing a `loss` fraction of each
+        # network's sensors — per-round liveness masks through the driver,
+        # exercising the masked kernel and the churn trigger
+        masks = np.ones((n_networks, n_rounds, P), np.float32)
+        if loss > 0:
+            mrng = np.random.default_rng(11)
+            for b in range(n_networks):
+                churn = death_wave(mrng, P, round=n_rounds // 2,
+                                   fraction=loss)
+                masks[b] = churn.liveness(P, n_rounds).astype(np.float32)
+        masks = jnp.asarray(masks)
+        cfg = StreamConfig(p=P, q=Q, halfwidth=H, forgetting=0.95,
+                           drift_threshold=0.08, warmup_rounds=5,
+                           link_loss=loss, max_retries=3)
+        states = jax.vmap(lambda k: stream_init(cfg, k))(
+            jax.random.split(jax.random.PRNGKey(1), n_networks))
+
+        def _run(c=cfg, s=states, x=xs, m=masks):
+            res = batched_stream_run(c, s, x, m)
+            jax.block_until_ready(res[1].rho)
+            return res
+
+        _run()                                   # compile outside timing
+        (final, m), us = timed(_run)
+        rho_end = float(np.asarray(m.rho)[:, -1].mean())
+        packets = float(np.asarray(final.sched.comm_packets).mean())
+        out.append(row(f"fault/stream@{loss}", us,
+                       f"retained {rho_end:.3f}|{packets:.0f} packets"))
+    return out
+
+
+def run(smoke: bool = False):
+    n_epochs = 20 if smoke else 200
+    n_rounds = 10 if smoke else 40
+    n_networks = 4 if smoke else 8
+    return _tree_sweep(n_epochs) + _stream_sweep(n_rounds, n_networks)

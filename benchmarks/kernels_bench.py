@@ -22,12 +22,14 @@ def _tpu_bound_us(flops: float, bytes_moved: float) -> float:
     return max(flops / PEAK_FLOPS, bytes_moved / HBM_BW) * 1e6
 
 
-def run() -> list[dict]:
+def run(smoke: bool = False) -> list[dict]:
+    """``smoke`` shrinks every shape ~8-16x: same code paths, seconds-scale
+    (the CI entrypoint guard; timings are not comparable to the full run)."""
     rows = []
     key = jax.random.PRNGKey(0)
 
     # banded matvec: p=64k local shard, h=128
-    p, h = 65_536, 128
+    p, h = (8192, 32) if smoke else (65_536, 128)
     nb = 2 * h + 1
     band = jax.random.normal(key, (nb, p), jnp.float32)
     v = jax.random.normal(key, (p,), jnp.float32)
@@ -36,7 +38,7 @@ def run() -> list[dict]:
     _, us = timed(lambda: fn(band, v).block_until_ready(), repeat=5)
     flops = 2.0 * nb * p
     byts = (nb * p + 2 * p) * 4
-    rows.append(row("kernel/banded_matvec/p64k_h128", us,
+    rows.append(row(f"kernel/banded_matvec/p{p // 1024}k_h{h}", us,
                     f"tpu_bound_us={_tpu_bound_us(flops, byts):.1f}"))
     out_k = ops.banded_matvec(band[:, :4096], v[:4096], interpret=True)
     ok = np.allclose(np.asarray(out_k),
@@ -45,7 +47,7 @@ def run() -> list[dict]:
     rows.append(row("kernel/banded_matvec/validated", 0.0, ok))
 
     # cov update: n=256 epochs, p=16k shard, h=128
-    n, p2, h2 = 256, 16_384, 128
+    n, p2, h2 = (64, 2048, 32) if smoke else (256, 16_384, 128)
     x = jax.random.normal(key, (n, p2), jnp.float32)
     fn2 = jax.jit(lambda xx: ref.cov_band_update(xx, h2))
     fn2(x).block_until_ready()
@@ -53,11 +55,11 @@ def run() -> list[dict]:
     nb2 = 2 * h2 + 1
     flops = 2.0 * n * nb2 * p2
     byts = (n * p2 + nb2 * p2) * 4
-    rows.append(row("kernel/cov_update/n256_p16k_h128", us,
+    rows.append(row(f"kernel/cov_update/n{n}_p{p2 // 1024}k_h{h2}", us,
                     f"tpu_bound_us={_tpu_bound_us(flops, byts):.1f}"))
 
     # pca project: n=4096 rows, p=16k, q=32
-    n3, p3, q3 = 4096, 16_384, 32
+    n3, p3, q3 = (512, 2048, 32) if smoke else (4096, 16_384, 32)
     x3 = jax.random.normal(key, (n3, p3), jnp.float32)
     w3 = jax.random.normal(key, (p3, q3), jnp.float32)
     fn3 = jax.jit(ref.pca_project)
@@ -65,6 +67,6 @@ def run() -> list[dict]:
     _, us = timed(lambda: fn3(x3, w3).block_until_ready(), repeat=3)
     flops = 2.0 * n3 * p3 * q3
     byts = (n3 * p3 + p3 * q3 + n3 * q3) * 4
-    rows.append(row("kernel/pca_project/n4k_p16k_q32", us,
+    rows.append(row(f"kernel/pca_project/n{n3}_p{p3 // 1024}k_q{q3}", us,
                     f"tpu_bound_us={_tpu_bound_us(flops, byts):.1f}"))
     return rows

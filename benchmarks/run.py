@@ -1,35 +1,43 @@
 # One function per paper table/figure. Prints ``name,us_per_call,derived``
-# CSV rows; --full widens the CV folds and range sweeps to paper scale.
+# CSV rows; --full widens the CV folds and range sweeps to paper scale;
+# --smoke shrinks every sweep to a seconds-scale pass AND makes any
+# benchmark error fatal (exit 1) — the CI bit-rot guard for entrypoints.
 from __future__ import annotations
 
 import argparse
 import sys
 
 
-def main() -> None:
+def main() -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", help="substring filter on benchmark module")
     ap.add_argument("--full", action="store_true",
                     help="paper-scale settings (10-fold CV, all ranges)")
+    ap.add_argument("--smoke", action="store_true",
+                    help="minimal settings, errors are fatal (CI mode)")
     args = ap.parse_args()
+    if args.full and args.smoke:
+        ap.error("--full and --smoke are mutually exclusive")
 
-    from benchmarks import (fig7_retained_variance, fig9_comm_costs,
-                            fig11_local_cov, fig13_pim_convergence,
-                            fig14_load_vs_q, kernels_bench, streaming_bench,
-                            table1_complexity)
+    from benchmarks import (fault_bench, fig7_retained_variance,
+                            fig9_comm_costs, fig11_local_cov,
+                            fig13_pim_convergence, fig14_load_vs_q,
+                            kernels_bench, streaming_bench, table1_complexity)
 
     modules = {
         "fig7": lambda: fig7_retained_variance.run(
-            k_folds=10 if args.full else 3),
+            k_folds=10 if args.full else (2 if args.smoke else 3)),
         "fig9": fig9_comm_costs.run,
         "fig11": fig11_local_cov.run,
         "fig13": fig13_pim_convergence.run,
         "fig14": fig14_load_vs_q.run,
         "table1": table1_complexity.run,
-        "kernels": kernels_bench.run,
-        "streaming": streaming_bench.run,
+        "kernels": lambda: kernels_bench.run(smoke=args.smoke),
+        "streaming": lambda: streaming_bench.run(smoke=args.smoke),
+        "fault": lambda: fault_bench.run(smoke=args.smoke),
     }
 
+    failed = 0
     print("name,us_per_call,derived")
     for name, fn in modules.items():
         if args.only and args.only not in name:
@@ -38,9 +46,11 @@ def main() -> None:
             for r in fn():
                 print(f"{r['name']},{r['us_per_call']},{r['derived']}")
         except Exception as e:  # noqa: BLE001 — report and continue
+            failed += 1
             print(f"{name}/ERROR,0,{type(e).__name__}: {e}", file=sys.stdout)
     sys.stdout.flush()
+    return 1 if (args.smoke and failed) else 0
 
 
 if __name__ == "__main__":
-    main()
+    sys.exit(main())

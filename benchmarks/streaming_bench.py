@@ -36,14 +36,16 @@ def _states(cfg, n_networks: int):
     return jax.vmap(lambda k: stream_init(cfg, k))(keys)
 
 
-def run():
+def run(smoke: bool = False):
+    """``smoke`` shrinks the fleets and round counts to a seconds-scale
+    pass over the same code paths (the CI entrypoint guard)."""
     out = []
-    n_rounds = 40
+    n_rounds = 10 if smoke else 40
 
     # -- throughput vs fleet size ------------------------------------------
     cfg = StreamConfig(p=P, q=Q, halfwidth=H, forgetting=0.9,
                        drift_threshold=0.1, warmup_rounds=5)
-    for B in (8, 32, 64):
+    for B in (4, 8) if smoke else (8, 32, 64):
         xs = _fleet(jax.random.PRNGKey(0), B, n_rounds, shift_at=n_rounds // 2)
         states = _states(cfg, B)
         batched_stream_run(cfg, states, xs)          # compile outside timing
@@ -54,14 +56,14 @@ def run():
         out.append(row(f"stream/fleet{B}", us, f"{rps:.0f} rounds/s"))
 
     # -- accuracy vs communication frontier --------------------------------
-    B = 16
+    B = 4 if smoke else 16
     xs = _fleet(jax.random.PRNGKey(0), B, n_rounds, shift_at=n_rounds // 2)
     def _run(c, s):
         res = batched_stream_run(c, s, xs)
         jax.block_until_ready(res[1].rho)
         return res
 
-    for thr in (0.02, 0.1, 0.3):
+    for thr in ((0.1,) if smoke else (0.02, 0.1, 0.3)):
         cfg_t = StreamConfig(p=P, q=Q, halfwidth=H, forgetting=0.9,
                              drift_threshold=thr, warmup_rounds=5)
         states = _states(cfg_t, B)

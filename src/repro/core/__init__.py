@@ -9,7 +9,8 @@ power_iteration  Algorithms 1-3 (+ beyond-paper blocked orthogonal iteration)
 pca              fit/transform orchestrator
 compression      PCAg scores + supervised (+/- eps) compression
 events           low-variance-component event detection
-costs            Table-1 cost models
+costs            Table-1 cost models (+ lossy-link booking)
+faults           fault models: lossy links, node churn, measurement dropout
 """
 
 from repro.core.pca import DistributedPCA, PCAResult, retained_variance

@@ -36,7 +36,8 @@ from repro.core.topology import RoutingTree
 
 __all__ = [
     "AggregationPrimitives", "NORM_PRIMITIVES", "aggregate_tree",
-    "TreeAggregationResult", "a_op", "d_op", "f_op", "halo_exchange",
+    "TreeAggregationResult", "LossyAggregationResult", "lossy_aggregate_tree",
+    "a_op", "d_op", "f_op", "halo_exchange",
     "tree_aggregate_fn",
 ]
 
@@ -97,6 +98,103 @@ def aggregate_tree(tree: RoutingTree, values: Sequence[Any],
         value=primitives.evaluate(records[tree.root]),
         packets=rx + tx,
         record_sizes=sizes,
+    )
+
+
+# --------------------------------------------------------------------------
+# Lossy links: the same epoch under per-hop Bernoulli loss + ARQ
+# --------------------------------------------------------------------------
+@dataclasses.dataclass(frozen=True)
+class LossyAggregationResult:
+    """One lossy epoch: value, packets (incl. retransmissions), delivery map.
+
+    ``attempts[i]`` is the number of transmissions node i spent on its
+    parent hop (0 for the root and for inactive nodes); ``delivered[i]``
+    marks whether its record arrived within the retry budget.  A failed hop
+    loses the node's *merged subtree record* — exactly the blast radius a
+    real TAG epoch suffers.
+    """
+
+    value: Any
+    packets: np.ndarray           # (p,) rx + tx per node, retransmissions incl.
+    record_sizes: np.ndarray      # (p,) size of the record each node sent
+    delivered: np.ndarray         # (p,) bool — record reached the parent
+    attempts: np.ndarray          # (p,) transmissions spent on the parent hop
+    active: np.ndarray            # (p,) bool — nodes that took part
+
+
+def lossy_aggregate_tree(tree: RoutingTree, values: Sequence[Any],
+                         primitives: AggregationPrimitives,
+                         fault, rng: np.random.Generator,
+                         active: np.ndarray | None = None,
+                         ) -> LossyAggregationResult:
+    """One epoch of the aggregation service over lossy links.
+
+    Same deepest-first schedule as :func:`aggregate_tree`; every parent hop
+    runs the :class:`repro.core.faults.FaultModel` ARQ policy
+    (``fault.transmit``): each attempt books ``record_size`` tx packets at
+    the sender, only the delivered attempt books rx packets at the parent
+    (a lost packet never reaches the radio on the other side; acks are not
+    counted).  ``active`` masks out dead / detached nodes — pass the
+    ``attached`` mask from :func:`repro.core.topology.repair_tree` after a
+    node-death wave, with the tree being the *repaired* tree.
+
+    At ``fault.link_loss == 0`` and full ``active`` this is **bit-identical**
+    to :func:`aggregate_tree` in value and packet counts (no randomness is
+    consumed), which is the differential anchor in tests/test_faults.py.
+    The root's uplink to the base station is wired, hence reliable.
+    """
+    p = tree.p
+    if active is None:
+        active = np.ones(p, dtype=bool)
+    active = np.asarray(active, dtype=bool)
+    if not active[tree.root]:
+        raise ValueError("the root must be active")
+    # fail fast on an inconsistent mask: an active node routing through a
+    # dead/detached parent means the caller passed a raw alive mask where
+    # the tree needs repair_tree's `attached` mask
+    parents = tree.parent
+    for i in range(p):
+        if active[i] and i != tree.root and (
+                parents[i] < 0 or not active[parents[i]]):
+            raise ValueError(
+                f"active node {i} has a dead or detached parent; repair the "
+                f"tree first and pass repair_tree's `attached` mask")
+
+    records: list[Any] = [primitives.init(values[i]) if active[i] else None
+                          for i in range(p)]
+    rx = np.zeros(p, dtype=np.int64)
+    tx = np.zeros(p, dtype=np.int64)
+    sizes = np.zeros(p, dtype=np.int64)
+    delivered = np.zeros(p, dtype=bool)
+    attempts = np.zeros(p, dtype=np.int64)
+
+    order = np.argsort(-tree.depth)          # deepest first
+    for i in order:
+        i = int(i)
+        if not active[i]:
+            continue
+        par = int(tree.parent[i])
+        size = primitives.record_size(records[i])
+        sizes[i] = size
+        if par >= 0:
+            ok, n_tries = fault.transmit(rng)
+            attempts[i] = n_tries
+            tx[i] += size * n_tries
+            if ok:
+                delivered[i] = True
+                rx[par] += size
+                records[par] = primitives.merge(records[par], records[i])
+    # the root transmits the final record to the base station (wired uplink)
+    delivered[tree.root] = True
+    tx[tree.root] += sizes[tree.root]
+    return LossyAggregationResult(
+        value=primitives.evaluate(records[tree.root]),
+        packets=rx + tx,
+        record_sizes=sizes,
+        delivered=delivered,
+        attempts=attempts,
+        active=active,
     )
 
 

@@ -22,6 +22,7 @@ import dataclasses
 __all__ = ["CostReport", "centralized_covariance", "distributed_covariance",
            "centralized_eigenvectors", "distributed_eigenvectors",
            "streaming_round_cost", "streaming_refresh_cost",
+           "lossy_round_cost", "lossy_refresh_cost", "lossy_epoch_load",
            "pcag_epoch_load", "default_epoch_load", "table1"]
 
 
@@ -97,6 +98,64 @@ def streaming_refresh_cost(p: int, q: int, n_max: int, c_max: int,
         computation=iters * q * (n_max + q * c_max) + q * q * p,
         memory=2 * q + n_max,
     )
+
+
+def _scale(report: CostReport, factor: float) -> CostReport:
+    """Communication scaled by a retransmission factor; compute/memory keep
+    their reliable-path order (ARQ costs radio, not flops)."""
+    return CostReport(communication=report.communication * factor,
+                      computation=report.computation,
+                      memory=report.memory)
+
+
+def lossy_round_cost(n_max: int, q: int, c_max: int, link_loss: float,
+                     max_retries: int) -> CostReport:
+    """Expected streaming-round cost over lossy links.
+
+    Every data packet of the reliable round (:func:`streaming_round_cost`)
+    is retransmitted per-hop until delivered or the retry budget runs out,
+    so the expected bill is the reliable bill times
+    ``E[transmissions] = (1 - loss^(r+1)) / (1 - loss)``
+    (:func:`repro.core.faults.expected_transmissions`).  At ``loss == 0``
+    this is exactly the reliable cost — the differential anchor.
+    """
+    from repro.core.faults import expected_transmissions
+    return _scale(streaming_round_cost(n_max, q, c_max),
+                  expected_transmissions(link_loss, max_retries))
+
+
+def lossy_refresh_cost(p: int, q: int, n_max: int, c_max: int, iters: int,
+                       link_loss: float, max_retries: int) -> CostReport:
+    """Expected basis-refresh cost over lossy links (see lossy_round_cost)."""
+    from repro.core.faults import expected_transmissions
+    return _scale(streaming_refresh_cost(p, q, n_max, c_max, iters),
+                  expected_transmissions(link_loss, max_retries))
+
+
+def lossy_epoch_load(tree, record_sizes, attempts, delivered,
+                     active) -> "np.ndarray":
+    """Exact per-node packets of one lossy A epoch from its transcript.
+
+    Books, per node: ``size_i * attempts_i`` transmissions on the parent hop
+    plus ``size_c`` received packets for each *delivered* child ``c`` (failed
+    attempts never reach the parent's radio), plus the root's wired uplink.
+    By construction this equals the packet counts the simulator
+    (:func:`repro.core.aggregation.lossy_aggregate_tree`) reports — the
+    booked-equals-counted property in tests/test_properties.py; at zero loss
+    with scalar records it collapses to ``q (C_i + 1)`` (Sec. 2.1.3).
+    """
+    import numpy as np
+    record_sizes = np.asarray(record_sizes, dtype=np.int64)
+    attempts = np.asarray(attempts, dtype=np.int64)
+    delivered = np.asarray(delivered, dtype=bool)
+    active = np.asarray(active, dtype=bool)
+    load = record_sizes * attempts                       # tx on the parent hop
+    for i in range(tree.p):
+        par = int(tree.parent[i])
+        if par >= 0 and active[i] and delivered[i]:
+            load[par] += record_sizes[i]                 # rx at the parent
+    load[tree.root] += record_sizes[tree.root]           # wired sink uplink
+    return load
 
 
 def default_epoch_load(p: int) -> int:

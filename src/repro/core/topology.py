@@ -31,6 +31,7 @@ __all__ = [
     "berkeley_like_layout",
     "build_topology",
     "bandwidth_reduce",
+    "repair_tree",
 ]
 
 
@@ -233,6 +234,48 @@ def build_topology(positions: np.ndarray, radio_range: float,
     tree = RoutingTree(parent=parent, root=root, depth=depth)
     return SensorTopology(positions=positions, radio_range=float(radio_range),
                           adjacency=adj, tree=tree)
+
+
+def repair_tree(topo: SensorTopology,
+                alive: np.ndarray) -> tuple[RoutingTree, np.ndarray]:
+    """Rebuild the routing tree on the alive subgraph (Sec. 4.2 re-run).
+
+    When nodes die, the subtrees they carried are orphaned.  Repair re-applies
+    the paper's tree-construction rule on the subgraph induced by ``alive``:
+    BFS depths from the root over alive nodes only, then every alive node
+    re-attaches to the in-range *alive* parent one hop closer to the root,
+    ties broken by Euclidean distance to the root — exactly how the original
+    tree was built, so a fault-free repair is a no-op.
+
+    Returns ``(tree, attached)``.  ``attached[i]`` marks alive nodes with a
+    radio path to the root; alive-but-unreachable nodes (their only routes
+    ran through dead nodes) are *network-dead*: ``parent == -2``,
+    ``depth == -1``, and they take no part in aggregation until a revival
+    reconnects them.  Raises if the root itself is dead — there is no tree
+    to repair, the network is gone.
+    """
+    alive = np.asarray(alive, dtype=bool)
+    if alive.shape != (topo.p,):
+        raise ValueError(f"alive mask shape {alive.shape} != ({topo.p},)")
+    root = topo.tree.root
+    if not alive[root]:
+        raise ValueError("root (sink-connected node) is dead; no repair possible")
+
+    adj = topo.adjacency & alive[None, :] & alive[:, None]
+    depth = _bfs_depths(adj, root)
+    attached = depth >= 0
+
+    parent = np.full(topo.p, -2, dtype=np.int64)
+    parent[root] = -1
+    droot = ((topo.positions - topo.positions[root]) ** 2).sum(axis=1)
+    for i in range(topo.p):
+        if i == root or not attached[i]:
+            continue
+        nbrs = np.nonzero(adj[i])[0]
+        up = nbrs[depth[nbrs] == depth[i] - 1]
+        parent[i] = int(up[np.argmin(droot[up])])
+
+    return RoutingTree(parent=parent, root=root, depth=depth), attached
 
 
 def bandwidth_reduce(adjacency: np.ndarray) -> np.ndarray:

@@ -19,7 +19,7 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
-__all__ = ["cov_band_update_pallas"]
+__all__ = ["cov_band_update_pallas", "cov_band_update_masked_pallas"]
 
 
 def _kernel(x_ref, xpad_ref, out_ref, *, nb: int, block_p: int):
@@ -60,3 +60,60 @@ def cov_band_update_pallas(x: jnp.ndarray, x_padded: jnp.ndarray,
         out_shape=jax.ShapeDtypeStruct((nb, p), jnp.float32),
         interpret=interpret,
     )(x, x_padded)
+
+
+def _masked_kernel(x_ref, xpad_ref, m_ref, mpad_ref, out_ref,
+                   *, nb: int, block_p: int):
+    i = pl.program_id(0)
+    j = pl.program_id(1)
+    base = i * block_p
+
+    @pl.when(j == 0)
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    # the mask multiply is fused into the tile load: a dead sensor (or a
+    # dropped reading) contributes an exact 0 to every product it touches
+    x = (x_ref[...] * m_ref[...]).astype(jnp.float32)   # (bn, block_p)
+    rows = []
+    for k in range(nb):
+        sl = pl.dslice(base + k, block_p)
+        xs = (xpad_ref[:, sl] * mpad_ref[:, sl]).astype(jnp.float32)
+        rows.append(jnp.sum(x * xs, axis=0))            # (block_p,)
+    out_ref[...] = out_ref[...] + jnp.stack(rows, axis=0).astype(out_ref.dtype)
+
+
+def cov_band_update_masked_pallas(x: jnp.ndarray, x_padded: jnp.ndarray,
+                                  mask: jnp.ndarray, mask_padded: jnp.ndarray,
+                                  *, halfwidth: int, block_p: int,
+                                  block_n: int,
+                                  interpret: bool = False) -> jnp.ndarray:
+    """Masked variant: delta[k, i] = sum_t m[t,i] x[t,i] m[t,i'] x[t,i'].
+
+    ``mask`` is an (n, p) 0/1 validity matrix (sensor liveness broadcast over
+    the batch, or per-reading measurement dropout); masked entries contribute
+    nothing to any band product.  Same tiling as the unmasked kernel — the
+    mask rides the existing BlockSpecs, so with an all-ones mask the grid
+    schedule (and hence the float accumulation order) is identical, which is
+    what makes the differential test in tests/test_faults.py exact.
+    """
+    n, p = x.shape
+    h = halfwidth
+    nb = 2 * h + 1
+    assert p % block_p == 0 and n % block_n == 0, (n, p, block_n, block_p)
+    assert x_padded.shape == (n, p + 2 * h)
+    assert mask.shape == (n, p) and mask_padded.shape == (n, p + 2 * h)
+    grid = (p // block_p, n // block_n)                 # batch axis innermost
+    return pl.pallas_call(
+        functools.partial(_masked_kernel, nb=nb, block_p=block_p),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_n, block_p), lambda i, j: (j, i)),
+            pl.BlockSpec((block_n, p + 2 * h), lambda i, j: (j, 0)),
+            pl.BlockSpec((block_n, block_p), lambda i, j: (j, i)),
+            pl.BlockSpec((block_n, p + 2 * h), lambda i, j: (j, 0)),
+        ],
+        out_specs=pl.BlockSpec((nb, block_p), lambda i, j: (0, i)),
+        out_shape=jax.ShapeDtypeStruct((nb, p), jnp.float32),
+        interpret=interpret,
+    )(x, x_padded, mask, mask_padded)

@@ -14,11 +14,13 @@ import jax
 import jax.numpy as jnp
 
 from repro.kernels.banded_matvec import banded_matvec_pallas, banded_matmul_pallas
-from repro.kernels.cov_update import cov_band_update_pallas
+from repro.kernels.cov_update import (cov_band_update_pallas,
+                                      cov_band_update_masked_pallas)
 from repro.kernels.pca_project import pca_project_pallas, pca_reconstruct_pallas
 
 __all__ = ["banded_matvec", "banded_matmul", "cov_band_update",
-           "cov_band_update_batched", "pca_project", "pca_reconstruct"]
+           "cov_band_update_masked", "cov_band_update_batched",
+           "pca_project", "pca_reconstruct"]
 
 
 def _auto_interpret(interpret: bool | None) -> bool:
@@ -88,6 +90,46 @@ def cov_band_update(x: jnp.ndarray, halfwidth: int,
     bp = block_p or _pick_block(p)
     bn = block_n or _pick_block(n, target=128)
     return _cov_band_update(x, halfwidth, bp, bn, _auto_interpret(interpret))
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("halfwidth", "block_p", "block_n",
+                                    "interpret"))
+def _cov_band_update_masked(x, mask, halfwidth, block_p, block_n, interpret):
+    h = halfwidth
+    xpad = jnp.pad(x, ((0, 0), (h, h)))
+    mpad = jnp.pad(mask, ((0, 0), (h, h)))
+    return cov_band_update_masked_pallas(x, xpad, mask, mpad, halfwidth=h,
+                                         block_p=block_p, block_n=block_n,
+                                         interpret=interpret)
+
+
+def cov_band_update_masked(x: jnp.ndarray, mask: jnp.ndarray, halfwidth: int,
+                           block_p: int | None = None,
+                           block_n: int | None = None,
+                           interpret: bool | None = None) -> jnp.ndarray:
+    """Masked delta band: products where either entry is masked contribute 0.
+
+    ``mask`` is a 0/1 validity array, either (p,) — a sensor-liveness mask
+    broadcast over the batch (dead motes) — or (n, p) for per-reading
+    measurement dropout.  The multiply is fused into the kernel's tile
+    loads: no masked copy of ``x`` is materialized in HBM, though the mask
+    itself streams alongside ``x`` (a (p,) mask is broadcast to the batch
+    shape first, so the masked update reads roughly twice the input bytes
+    of the unmasked kernel — acceptable for a VPU-bound kernel, and the
+    ``mask=None`` fast path in callers keeps the fault-free fleet at
+    unmasked cost).
+    """
+    n, p = x.shape
+    mask = jnp.asarray(mask, dtype=x.dtype)
+    if mask.ndim == 1:
+        mask = jnp.broadcast_to(mask[None, :], (n, p))
+    if mask.shape != (n, p):
+        raise ValueError(f"mask shape {mask.shape} incompatible with {(n, p)}")
+    bp = block_p or _pick_block(p)
+    bn = block_n or _pick_block(n, target=128)
+    return _cov_band_update_masked(x, mask, halfwidth, bp, bn,
+                                   _auto_interpret(interpret))
 
 
 def cov_band_update_batched(x: jnp.ndarray, halfwidth: int,

@@ -14,7 +14,7 @@ from __future__ import annotations
 import jax.numpy as jnp
 
 __all__ = ["banded_matvec", "banded_matmul", "cov_band_update",
-           "pca_project", "pca_reconstruct"]
+           "cov_band_update_masked", "pca_project", "pca_reconstruct"]
 
 
 def _shifted_cols(x: jnp.ndarray, offset: int) -> jnp.ndarray:
@@ -53,6 +53,15 @@ def cov_band_update(x: jnp.ndarray, halfwidth: int) -> jnp.ndarray:
     for k in range(2 * h + 1):
         rows.append(jnp.sum(x * _shifted_cols(x, k - h), axis=0))
     return jnp.stack(rows, axis=0)
+
+
+def cov_band_update_masked(x: jnp.ndarray, mask: jnp.ndarray,
+                           halfwidth: int) -> jnp.ndarray:
+    """Masked Eq. 10: entries with mask 0 contribute to no band product."""
+    mask = jnp.asarray(mask, dtype=x.dtype)
+    if mask.ndim == 1:
+        mask = jnp.broadcast_to(mask[None, :], x.shape)
+    return cov_band_update(x * mask, halfwidth)
 
 
 def pca_project(x: jnp.ndarray, w: jnp.ndarray) -> jnp.ndarray:

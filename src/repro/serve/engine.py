@@ -14,6 +14,16 @@ batch, host-side slot management, jitted steps*:
   basis refreshes happen inside the step, and exhausted streams retire with
   their final basis + Table-1 communication bill.
 
+The streaming engine is fault-aware (DESIGN.md Sec. 9): each slot carries a
+:class:`repro.runtime.health.HealthMonitor` driven by a *logical* clock (one
+tick per engine step, so verdicts are deterministic).  A slot whose network
+reports too few alive sensors stops heartbeating; once the monitor rules the
+slot stalled, the network is **retired dead** — and if its liveness schedule
+shows a later revival, a continuation request is re-queued from the revival
+round.  Whenever the live-network count changes, the engine re-plans its
+device mesh through :func:`repro.runtime.elastic.plan_mesh` (the WSN-fleet
+analogue of elastic rescale after host death).
+
 The decode state is the stacked pytree from repro.models.transformer; slot
 management is pure Python (host side), the steps are jitted.
 """
@@ -28,6 +38,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.models import transformer as T
+from repro.runtime.elastic import RescalePlan, plan_mesh
+from repro.runtime.health import HealthMonitor, StragglerPolicy
 from repro.streaming.driver import (StreamConfig, StreamState, stream_init,
                                     stream_step)
 
@@ -139,14 +151,25 @@ class Engine:
 # ===========================================================================
 # Streaming-PCA fleet engine
 # ===========================================================================
-@dataclasses.dataclass
+@dataclasses.dataclass(eq=False)       # identity equality: requests hold arrays
 class StreamRequest:
-    """One live sensor network: a finite stream of measurement rounds."""
+    """One live sensor network: a finite stream of measurement rounds.
+
+    ``liveness`` is an optional (R, p) per-round sensor-liveness schedule
+    (1 = alive), e.g. from :meth:`repro.core.faults.NodeChurn.liveness`;
+    ``None`` means every sensor is alive for the whole stream.
+    """
 
     rounds: np.ndarray               # (R, n, p) float32 measurement rounds
+    liveness: np.ndarray | None = None   # (R, p) per-round sensor liveness
     # filled by the engine:
     result: "StreamResult | None" = None
     done: bool = False
+    # early (dead-network) retirements collected before the final result;
+    # each entry covers the rounds streamed up to that retirement
+    retirements: list = dataclasses.field(default_factory=list)
+    # engine-internal: round to resume from after a revival re-admission
+    resume_at: int = 0
 
 
 @dataclasses.dataclass(frozen=True)
@@ -158,10 +181,11 @@ class StreamResult:
     refreshes: int                   # scheduled basis recomputations
     comm_packets: float              # Table-1 communication bill (packets)
     rounds: int                      # rounds streamed
+    reason: str = "completed"        # "completed" | "dead"
 
 
 class StreamingPCAEngine:
-    """Continuous batching over sensor-network streams.
+    """Continuous batching over sensor-network streams, fault-aware.
 
     Parameters
     ----------
@@ -169,11 +193,22 @@ class StreamingPCAEngine:
         (every slot shares p, n, band half-width and scheduler policy —
         the fleet is shape-homogeneous like a decode batch).
     slots: device batch size (networks streamed concurrently).
+    health_policy: per-slot :class:`~repro.runtime.health.StragglerPolicy`;
+        ``stall_timeout`` is measured in *engine steps* (the logical clock
+        ticks once per step, keeping verdicts deterministic).
+    min_alive_fraction: a slot heartbeats only while at least this fraction
+        of its sensors is alive; below it the network is considered
+        unresponsive and the monitor's stall verdict retires it.
     """
 
-    def __init__(self, cfg: StreamConfig, slots: int = 8, seed: int = 0):
+    def __init__(self, cfg: StreamConfig, slots: int = 8, seed: int = 0,
+                 health_policy: StragglerPolicy | None = None,
+                 min_alive_fraction: float = 0.25):
         self.cfg = cfg
         self.slots = slots
+        self.min_alive_fraction = min_alive_fraction
+        self.health_policy = health_policy or StragglerPolicy(
+            stall_timeout=2.5)          # logical steps, not seconds
         key = jax.random.PRNGKey(seed)
         self._slot_keys = jax.random.split(key, slots)
         self.states: StreamState = jax.vmap(
@@ -181,8 +216,28 @@ class StreamingPCAEngine:
         self.active: list[StreamRequest | None] = [None] * slots
         self.cursor = np.zeros(slots, np.int64)     # next round per slot
         self.queue: list[StreamRequest] = []
-        self._step_fn = jax.jit(jax.vmap(lambda s, x: stream_step(cfg, s, x)))
+        # two jitted steps: the masked one only runs when some active
+        # request actually carries a liveness schedule — fault-free fleets
+        # stay on the unmasked kernel (ops.py's mask=None fast path); the
+        # two are bit-identical under an all-ones mask, so the switch is
+        # invisible to results
+        self._step_fn = jax.jit(
+            jax.vmap(lambda s, x: stream_step(cfg, s, x)))
+        self._step_fn_masked = jax.jit(
+            jax.vmap(lambda s, x, m: stream_step(cfg, s, x, m)))
         self._n: int | None = None       # epochs/round, fixed fleet-wide
+        # fault machinery: logical clock, per-slot monitors, retirement log
+        self._clock = 0
+        self.health: list[HealthMonitor | None] = [None] * slots
+        self.retired_log: list[tuple[StreamRequest, str]] = []
+        # elastic fleet mesh: one virtual device per live network; re-planned
+        # through runtime.elastic whenever the live count changes (the
+        # initial plan assumes a full fleet, so a first step at full
+        # occupancy appends nothing)
+        self._last_live = slots
+        self.plan: RescalePlan = plan_mesh(max(1, slots), prefer_model=1,
+                                           global_batch=max(1, slots))
+        self.plan_history: list[RescalePlan] = [self.plan]
 
     # -- request lifecycle ---------------------------------------------------
     def submit(self, req: StreamRequest) -> None:
@@ -191,6 +246,9 @@ class StreamingPCAEngine:
             raise ValueError(f"stream p={p} != engine p={self.cfg.p}")
         if r == 0:
             raise ValueError("stream has no rounds")
+        if req.liveness is not None and req.liveness.shape != (r, p):
+            raise ValueError(
+                f"liveness shape {req.liveness.shape} != {(r, p)}")
         # the device batch is shape-homogeneous: every stream must share the
         # epochs-per-round of the first submitted stream
         if self._n is None:
@@ -211,12 +269,21 @@ class StreamingPCAEngine:
     def _admit(self) -> None:
         for slot in range(self.slots):
             if self.active[slot] is None and self.queue:
-                self.active[slot] = self.queue.pop(0)
-                self.cursor[slot] = 0
+                req = self.queue.pop(0)
+                self.active[slot] = req
+                self.cursor[slot] = req.resume_at
                 self._splice_reset(slot)
+                monitor = HealthMonitor(self.health_policy,
+                                        clock=lambda: float(self._clock))
+                monitor.heartbeat(step=self._clock, duration=1.0)
+                self.health[slot] = monitor
 
-    def _retire(self, slot: int) -> None:
-        req = self.active[slot]
+    def _mask_at(self, req: StreamRequest, r: int) -> np.ndarray:
+        if req.liveness is None:
+            return np.ones(self.cfg.p, np.float32)
+        return np.asarray(req.liveness[r], np.float32)
+
+    def _result(self, slot: int, reason: str) -> StreamResult:
         state_i = jax.tree.map(lambda a: a[slot], self.states)
         from repro.streaming.online_cov import (online_estimate,
                                                 online_total_variance)
@@ -224,15 +291,61 @@ class StreamingPCAEngine:
         rho = retained_fraction(online_estimate(state_i.cov),
                                 state_i.sched.W,
                                 online_total_variance(state_i.cov))
-        req.result = StreamResult(
+        return StreamResult(
             components=np.asarray(state_i.sched.W),
             retained=float(rho),
             refreshes=int(state_i.sched.refreshes),
             comm_packets=float(state_i.sched.comm_packets),
             rounds=int(state_i.rounds),
+            reason=reason,
         )
+
+    def _retire(self, slot: int) -> None:
+        req = self.active[slot]
+        req.result = self._result(slot, "completed")
         req.done = True
+        self.retired_log.append((req, "completed"))
         self.active[slot] = None
+        self.health[slot] = None
+
+    def _retire_dead(self, slot: int) -> None:
+        """Stall verdict: retire the network; re-queue it if it revives.
+
+        The partial result (basis, bill, rounds streamed before death) is
+        appended to ``req.retirements``.  If the liveness schedule shows the
+        network healthy again at a later round, a continuation resumes from
+        there with fresh per-slot state — the covariance re-warms over the
+        forgetting window, exactly like a rebooted deployment.
+        """
+        req = self.active[slot]
+        partial = self._result(slot, "dead")
+        self.retired_log.append((req, "dead"))
+        self.active[slot] = None
+        self.health[slot] = None
+        revive = None
+        if req.liveness is not None:
+            frac = req.liveness[int(self.cursor[slot]):].mean(axis=1)
+            ahead = np.nonzero(frac >= self.min_alive_fraction)[0]
+            if ahead.size:
+                revive = int(self.cursor[slot]) + int(ahead[0])
+        if revive is not None:
+            # a continuation will follow: this segment is an early retirement
+            req.retirements.append(partial)
+            req.resume_at = revive
+            self.queue.append(req)
+        else:
+            # no revival ahead: the partial IS the final result (kept out of
+            # retirements so segment bills sum without double-counting)
+            req.result = partial
+            req.done = True
+
+    def _replan(self, n_live: int) -> None:
+        """Elastic fleet mesh: one virtual device per live network."""
+        if n_live != self._last_live and n_live > 0:
+            self.plan = plan_mesh(n_live, prefer_model=1,
+                                  global_batch=n_live)
+            self.plan_history.append(self.plan)
+        self._last_live = n_live
 
     # -- main loop ------------------------------------------------------------
     def step(self) -> int:
@@ -240,22 +353,43 @@ class StreamingPCAEngine:
 
         Idle slots process a zero round (masked out at retirement — their
         state is re-initialized on admission), keeping the device batch
-        static like the decode path.
+        static like the decode path.  Per step, each live slot heartbeats
+        its HealthMonitor iff enough of its sensors are alive this round;
+        slots ruled stalled afterwards are retired dead (and re-queued from
+        their revival round, if any).
         """
         self._admit()
+        self._clock += 1
         live = [s for s in range(self.slots) if self.active[s]]
+        self._replan(len(live))
         if not live:
             return 0
         zeros_round = np.zeros((self._n, self.cfg.p), np.float32)
+        ones_mask = np.ones(self.cfg.p, np.float32)
         batch = np.stack([
             np.asarray(self.active[s].rounds[self.cursor[s]], np.float32)
             if self.active[s] is not None else zeros_round
             for s in range(self.slots)])
-        self.states, _ = self._step_fn(self.states, jnp.asarray(batch))
+        masks = np.stack([
+            self._mask_at(self.active[s], int(self.cursor[s]))
+            if self.active[s] is not None else ones_mask
+            for s in range(self.slots)])
+        any_schedule = any(self.active[s] is not None
+                           and self.active[s].liveness is not None
+                           for s in live)
+        if any_schedule:
+            self.states, _ = self._step_fn_masked(
+                self.states, jnp.asarray(batch), jnp.asarray(masks))
+        else:
+            self.states, _ = self._step_fn(self.states, jnp.asarray(batch))
         for s in live:
+            if masks[s].mean() >= self.min_alive_fraction:
+                self.health[s].heartbeat(step=self._clock, duration=1.0)
             self.cursor[s] += 1
             if self.cursor[s] >= self.active[s].rounds.shape[0]:
                 self._retire(s)
+            elif self.health[s].stalled():
+                self._retire_dead(s)
         return len(live)
 
     def run_until_done(self, max_steps: int = 100_000) -> None:

@@ -49,6 +49,8 @@ class StreamConfig:
     warmup_rounds: int = 10         # rounds before the first refresh
     n_max: int = 8                  # |N_i*| for the cost model
     c_max: int = 4                  # C_i* for the cost model
+    link_loss: float = 0.0          # per-hop packet loss (cost booking)
+    max_retries: int = 3            # ARQ retransmission budget per packet
     interpret: bool | None = None   # Pallas interpret override (None = auto)
 
     def scheduler(self) -> RecomputeScheduler:
@@ -56,13 +58,15 @@ class StreamConfig:
             q=self.q, drift_threshold=self.drift_threshold,
             refresh_iters=self.refresh_iters,
             warmup_rounds=self.warmup_rounds,
-            n_max=self.n_max, c_max=self.c_max)
+            n_max=self.n_max, c_max=self.c_max,
+            link_loss=self.link_loss, max_retries=self.max_retries)
 
 
 class StreamState(NamedTuple):
     cov: OnlineCovariance
     sched: SchedulerState
     rounds: jnp.ndarray             # () int32 rounds streamed so far
+    alive: jnp.ndarray              # (p,) 0/1 liveness seen last round
 
 
 class RoundMetrics(NamedTuple):
@@ -80,16 +84,38 @@ def stream_init(cfg: StreamConfig, key: jax.Array,
         cov=online_init(cfg.p, cfg.halfwidth, dtype=dtype),
         sched=cfg.scheduler().init(cfg.p, key, dtype=dtype),
         rounds=jnp.zeros((), jnp.int32),
+        alive=jnp.ones((cfg.p,), dtype=dtype),
     )
 
 
-def stream_step(cfg: StreamConfig, state: StreamState,
-                x_round: jnp.ndarray) -> tuple[StreamState, RoundMetrics]:
-    """One round for one network: covariance fold + scheduling decision."""
-    cov = online_update(state.cov, x_round, forgetting=cfg.forgetting,
-                        interpret=cfg.interpret)
-    sched, rho, fired = cfg.scheduler().step(state.sched, cov, state.rounds)
-    new = StreamState(cov=cov, sched=sched, rounds=state.rounds + 1)
+def stream_step(cfg: StreamConfig, state: StreamState, x_round: jnp.ndarray,
+                mask: jnp.ndarray | None = None,
+                ) -> tuple[StreamState, RoundMetrics]:
+    """One round for one network: covariance fold + scheduling decision.
+
+    ``mask`` is the round's (p,) sensor-liveness vector (1 = alive).  Dead
+    sensors contribute no outer products and no mean sums (the masked Pallas
+    path in :func:`repro.streaming.online_cov.online_update`), and a change
+    of liveness between consecutive rounds — a death or a revival, i.e.
+    topology churn — is reported to the scheduler as an unconditional drift
+    trigger.  ``mask=None`` is the fault-free path, bit-identical to the
+    pre-fault behavior.
+    """
+    if mask is None:
+        cov = online_update(state.cov, x_round, forgetting=cfg.forgetting,
+                            interpret=cfg.interpret)
+        churn = jnp.zeros((), bool)
+        alive = state.alive
+    else:
+        mask = jnp.asarray(mask, dtype=state.alive.dtype)
+        cov = online_update(state.cov, x_round, forgetting=cfg.forgetting,
+                            mask=mask, interpret=cfg.interpret)
+        churn = jnp.any(mask != state.alive)
+        alive = mask
+    sched, rho, fired = cfg.scheduler().step(state.sched, cov, state.rounds,
+                                             churn=churn)
+    new = StreamState(cov=cov, sched=sched, rounds=state.rounds + 1,
+                      alive=alive)
     metrics = RoundMetrics(rho=rho, did_refresh=fired,
                            refreshes=sched.refreshes,
                            comm_packets=sched.comm_packets)
@@ -97,14 +123,24 @@ def stream_step(cfg: StreamConfig, state: StreamState,
 
 
 @functools.partial(jax.jit, static_argnums=0)
-def stream_run(cfg: StreamConfig, state: StreamState,
-               xs: jnp.ndarray) -> tuple[StreamState, RoundMetrics]:
-    """Jittable scan driver: stream ``xs`` of shape (rounds, n, p)."""
+def stream_run(cfg: StreamConfig, state: StreamState, xs: jnp.ndarray,
+               masks: jnp.ndarray | None = None,
+               ) -> tuple[StreamState, RoundMetrics]:
+    """Jittable scan driver: stream ``xs`` of shape (rounds, n, p).
 
-    def step(carry, x_round):
-        return stream_step(cfg, carry, x_round)
+    ``masks`` (rounds, p), if given, carries the per-round sensor-liveness
+    schedule (e.g. from :meth:`repro.core.faults.NodeChurn.liveness`).
+    """
+    if masks is None:
+        def step(carry, x_round):
+            return stream_step(cfg, carry, x_round)
+        return jax.lax.scan(step, state, xs)
 
-    return jax.lax.scan(step, state, xs)
+    def step(carry, xm):
+        x_round, mask = xm
+        return stream_step(cfg, carry, x_round, mask)
+
+    return jax.lax.scan(step, state, (xs, masks))
 
 
 def batched_stream_init(cfg: StreamConfig, key: jax.Array, n_networks: int,
@@ -116,12 +152,18 @@ def batched_stream_init(cfg: StreamConfig, key: jax.Array, n_networks: int,
 
 @functools.partial(jax.jit, static_argnums=0)
 def batched_stream_run(cfg: StreamConfig, states: StreamState,
-                       xs: jnp.ndarray) -> tuple[StreamState, RoundMetrics]:
+                       xs: jnp.ndarray,
+                       masks: jnp.ndarray | None = None,
+                       ) -> tuple[StreamState, RoundMetrics]:
     """vmap the scan over a fleet: ``xs`` is (networks, rounds, n, p).
 
-    Metrics come back as (networks, rounds) leaves.
+    ``masks`` (networks, rounds, p), if given, is the per-network liveness
+    schedule.  Metrics come back as (networks, rounds) leaves.
     """
-    return jax.vmap(lambda s, x: stream_run(cfg, s, x))(states, xs)
+    if masks is None:
+        return jax.vmap(lambda s, x: stream_run(cfg, s, x))(states, xs)
+    return jax.vmap(lambda s, x, m: stream_run(cfg, s, x, m))(
+        states, xs, masks)
 
 
 def sharded_stream_run(cfg: StreamConfig, mesh, states: StreamState,

@@ -60,21 +60,37 @@ def online_init(p: int, halfwidth: int, dtype=jnp.float32) -> OnlineCovariance:
 
 def online_update(state: OnlineCovariance, x: jnp.ndarray,
                   forgetting: float = 1.0,
+                  mask: jnp.ndarray | None = None,
                   interpret: bool | None = None) -> OnlineCovariance:
     """Fold one round ``x`` of shape (n, p) into the decayed statistics.
 
     The decay is applied per *round* (not per row): every row of the round
     carries the same weight, matching the paper's epoch-synchronous model
     where a round is one aggregation epoch of the network.
+
+    ``mask`` is an optional 0/1 validity array — (p,) sensor liveness (dead
+    motes) or (n, p) measurement dropout.  Masked entries are absent: they
+    join no outer product (the masked Pallas kernel) and no mean sum, so a
+    dead sensor's statistics simply decay toward zero instead of being
+    poisoned by phantom readings.  ``mask=None`` takes the unmasked kernel
+    path and is bit-identical to the pre-fault-model behavior.
     """
     x = jnp.asarray(x, dtype=state.s.dtype)
     n = x.shape[0]
     h = state.halfwidth
     beta = jnp.asarray(forgetting, dtype=state.s.dtype)
-    delta_band = ops.cov_band_update(x, h, interpret=interpret)
+    if mask is None:
+        delta_band = ops.cov_band_update(x, h, interpret=interpret)
+        delta_s = x.sum(axis=0)
+    else:
+        mask = jnp.asarray(mask, dtype=state.s.dtype)
+        delta_band = ops.cov_band_update_masked(x, mask, h,
+                                                interpret=interpret)
+        xm = x * (mask[None, :] if mask.ndim == 1 else mask)
+        delta_s = xm.sum(axis=0)
     return OnlineCovariance(
         t=beta * state.t + n,
-        s=beta * state.s + x.sum(axis=0),
+        s=beta * state.s + delta_s,
         band=beta * state.band + delta_band.astype(state.band.dtype),
     )
 

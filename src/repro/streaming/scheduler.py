@@ -102,6 +102,10 @@ class RecomputeScheduler:
         an effective window before the estimate is meaningful); the FIRST
         refresh after warmup is unconditional (the initial basis is random).
     n_max, c_max: WSN topology constants for the Table-1 cost model.
+    link_loss, max_retries: per-hop packet-loss model — every booked packet
+        is scaled by the expected ARQ transmissions
+        (:func:`repro.core.costs.lossy_round_cost`); zero loss books the
+        reliable Table-1 figures exactly.
     """
 
     q: int
@@ -110,6 +114,8 @@ class RecomputeScheduler:
     warmup_rounds: int = 10
     n_max: int = 8
     c_max: int = 4
+    link_loss: float = 0.0
+    max_retries: int = 3
 
     def init(self, p: int, key: jax.Array, dtype=jnp.float32) -> SchedulerState:
         W0 = jnp.linalg.qr(jax.random.normal(key, (p, self.q), dtype))[0]
@@ -121,22 +127,30 @@ class RecomputeScheduler:
         )
 
     def round_cost(self) -> float:
-        return costs.streaming_round_cost(
-            self.n_max, self.q, self.c_max).communication
+        return costs.lossy_round_cost(
+            self.n_max, self.q, self.c_max,
+            self.link_loss, self.max_retries).communication
 
     def refresh_cost(self, p: int) -> float:
-        return costs.streaming_refresh_cost(
-            p, self.q, self.n_max, self.c_max, self.refresh_iters
-        ).communication
+        return costs.lossy_refresh_cost(
+            p, self.q, self.n_max, self.c_max, self.refresh_iters,
+            self.link_loss, self.max_retries).communication
 
     def step(self, state: SchedulerState, cov_state: OnlineCovariance,
              round_index: jnp.ndarray,
+             churn: jnp.ndarray | bool = False,
              ) -> tuple[SchedulerState, jnp.ndarray, jnp.ndarray]:
         """One scheduling decision against the live covariance.
 
         Returns ``(new_state, rho, did_refresh)`` where ``rho`` is the
         retained fraction of the basis in effect *before* any refresh (the
         quantity the trigger saw).
+
+        ``churn`` flags a topology change this round (node death/revival,
+        see DESIGN.md Sec. 9): the live covariance's support just moved, so
+        drift is certain — the scheduler treats churn as an unconditional
+        trigger (after warmup) instead of waiting for the retained-variance
+        estimate to catch up over the forgetting window.
         """
         p = state.W.shape[0]
         band_est = online_estimate(cov_state)
@@ -146,7 +160,7 @@ class RecomputeScheduler:
         past_warmup = round_index >= self.warmup_rounds
         never_fit = state.refreshes == 0
         drifted = (state.rho_ref - rho) > self.drift_threshold
-        trigger = past_warmup & (never_fit | drifted)
+        trigger = past_warmup & (never_fit | drifted | jnp.asarray(churn))
 
         def do_refresh(_):
             W_new = ortho_refresh(band_est, state.W, self.refresh_iters)

@@ -1,0 +1,277 @@
+"""Fault-injection layer: differential anchors + recovery behavior.
+
+The two differential tests are the trust anchors of the whole fault layer
+(ISSUE 2): at zero loss the lossy simulator must be *bit-identical* to the
+reliable path, and with an all-ones mask the masked Pallas cov-update must
+be *bit-identical* to the unmasked kernel — faults are strictly additive,
+never a behavioral fork.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import costs
+from repro.core.aggregation import (NORM_PRIMITIVES, aggregate_tree,
+                                    lossy_aggregate_tree)
+from repro.core.faults import (FaultModel, NodeChurn, death_wave,
+                               dropout_mask, expected_transmissions)
+from repro.core.topology import berkeley_like_layout, build_topology, repair_tree
+from repro.kernels import ops, ref
+
+P, H = 32, 4
+
+
+@pytest.fixture(scope="module")
+def topo10():
+    return build_topology(berkeley_like_layout(p=52, seed=7), radio_range=10.0)
+
+
+class TestLossyTreeDifferential:
+    def test_zero_loss_bit_identical(self, topo10):
+        """loss=0.0: same value bits, same packet counts, no rng consumed."""
+        x = np.random.default_rng(0).normal(size=52)
+        rel = aggregate_tree(topo10.tree, list(x), NORM_PRIMITIVES)
+        rng = np.random.default_rng(123)
+        state_before = rng.bit_generator.state
+        lossy = lossy_aggregate_tree(topo10.tree, list(x), NORM_PRIMITIVES,
+                                     FaultModel(link_loss=0.0), rng)
+        assert lossy.value == rel.value          # bitwise, not allclose
+        np.testing.assert_array_equal(lossy.packets, rel.packets)
+        np.testing.assert_array_equal(lossy.record_sizes, rel.record_sizes)
+        assert lossy.delivered.all() and (lossy.attempts <= 1).all()
+        assert rng.bit_generator.state == state_before
+
+    def test_lossy_attempts_bounded_and_overhead_positive(self, topo10):
+        x = np.random.default_rng(1).normal(size=52)
+        fm = FaultModel(link_loss=0.3, max_retries=2)
+        res = lossy_aggregate_tree(topo10.tree, list(x), NORM_PRIMITIVES,
+                                   fm, np.random.default_rng(5))
+        nonroot = np.arange(52) != topo10.tree.root
+        assert (res.attempts[nonroot] >= 1).all()
+        assert (res.attempts <= fm.max_retries + 1).all()
+        rel = aggregate_tree(topo10.tree, list(x), NORM_PRIMITIVES)
+        assert res.packets.sum() >= rel.packets.sum()
+        # without retries, 30% loss over 51 hops loses some record w.h.p.
+        res0 = lossy_aggregate_tree(topo10.tree, list(x), NORM_PRIMITIVES,
+                                    FaultModel(link_loss=0.3, max_retries=0),
+                                    np.random.default_rng(5))
+        assert not res0.delivered.all()
+
+    def test_lost_subtree_drops_from_value(self):
+        """A failed hop loses exactly the sender's merged subtree."""
+        # 3-node chain: 2 -> 1 -> 0(root); kill every transmission
+        pos = np.array([[2.0, 0.0], [1.0, 0.0], [0.0, 0.0]])
+        topo = build_topology(pos, radio_range=1.5, root=2)
+        fm = FaultModel(link_loss=0.999999, max_retries=0)
+        rng = np.random.default_rng(0)
+        res = lossy_aggregate_tree(topo.tree, [3.0, 4.0, 12.0],
+                                   NORM_PRIMITIVES, fm, rng)
+        # only the root's own measurement survives
+        assert res.value == pytest.approx(12.0)
+
+    def test_unrepaired_alive_mask_fails_fast(self, topo10):
+        """A raw alive mask (dead interior node, children not re-homed) is
+        rejected instead of merging into a dead parent's record."""
+        x = np.random.default_rng(4).normal(size=52)
+        counts = topo10.tree.children_counts()
+        victim = int(np.argmax(counts))
+        if victim == topo10.tree.root:
+            victim = int(np.argsort(-counts)[1])
+        alive = np.ones(52, dtype=bool)
+        alive[victim] = False
+        with pytest.raises(ValueError, match="repair"):
+            lossy_aggregate_tree(topo10.tree, list(x), NORM_PRIMITIVES,
+                                 FaultModel(), np.random.default_rng(0),
+                                 active=alive)
+
+    def test_active_mask_excludes_dead_nodes(self, topo10):
+        x = np.random.default_rng(2).normal(size=52)
+        alive = np.ones(52, dtype=bool)
+        dead = [i for i in range(52) if i != topo10.tree.root][:5]
+        alive[dead] = False
+        tree2, attached = repair_tree(topo10, alive)
+        res = lossy_aggregate_tree(tree2, list(x), NORM_PRIMITIVES,
+                                   FaultModel(), np.random.default_rng(3),
+                                   active=attached)
+        assert res.packets[dead].sum() == 0
+        expected = np.linalg.norm(x[attached])
+        assert res.value == pytest.approx(expected, abs=1e-9)
+
+
+class TestMaskedKernelDifferential:
+    @pytest.mark.parametrize("n,p,h,bp,bn", [
+        (64, 128, 2, 64, 32), (128, 256, 8, 128, 64), (32, 512, 4, 256, 32),
+        (96, 384, 1, 128, 32), (64, 128, 3, 32, 16),
+    ])
+    def test_all_ones_mask_bit_identical(self, n, p, h, bp, bn):
+        """All-alive mask: identical grid schedule => identical float bits."""
+        x = jax.random.normal(jax.random.PRNGKey(n + p), (n, p), jnp.float32)
+        unmasked = ops.cov_band_update(x, h, block_p=bp, block_n=bn,
+                                       interpret=True)
+        masked = ops.cov_band_update_masked(x, jnp.ones((p,)), h, block_p=bp,
+                                            block_n=bn, interpret=True)
+        np.testing.assert_array_equal(np.asarray(masked), np.asarray(unmasked))
+        oracle = ref.cov_band_update(x, h)
+        np.testing.assert_allclose(np.asarray(masked), np.asarray(oracle),
+                                   rtol=1e-5, atol=1e-4)
+
+    @pytest.mark.parametrize("mask_kind", ["sensor", "per_reading"])
+    def test_random_mask_matches_oracle(self, mask_kind):
+        n, p, h = 64, 128, 3
+        k1, k2 = jax.random.split(jax.random.PRNGKey(0))
+        x = jax.random.normal(k1, (n, p), jnp.float32)
+        shape = (p,) if mask_kind == "sensor" else (n, p)
+        mask = (jax.random.uniform(k2, shape) > 0.3).astype(jnp.float32)
+        out = ops.cov_band_update_masked(x, mask, h, block_p=64, block_n=32,
+                                         interpret=True)
+        oracle = ref.cov_band_update_masked(x, mask, h)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(oracle),
+                                   rtol=1e-5, atol=1e-4)
+
+    def test_dead_sensor_contributes_nothing(self):
+        """Masking sensor j zeroes every band entry whose product touches j."""
+        n, p, h = 32, 64, 2
+        x = jax.random.normal(jax.random.PRNGKey(1), (n, p), jnp.float32)
+        mask = jnp.ones((p,)).at[10].set(0.0)
+        out = np.asarray(ops.cov_band_update_masked(x, mask, h,
+                                                    interpret=True))
+        for k in range(2 * h + 1):
+            assert out[k, 10] == 0.0                     # row i = 10
+            j = 10 - (k - h)
+            if 0 <= j < p:
+                assert out[k, j] == 0.0                  # partner i+k-h = 10
+
+    def test_mask_shape_rejected(self):
+        x = jnp.zeros((16, 32))
+        with pytest.raises(ValueError):
+            ops.cov_band_update_masked(x, jnp.ones((16, 31)), 2,
+                                       interpret=True)
+
+
+class TestFaultModel:
+    def test_expected_transmissions(self):
+        assert expected_transmissions(0.0, 3) == 1.0
+        assert expected_transmissions(0.5, 1) == pytest.approx(1.5)
+        # unbounded retries limit: 1 / (1 - loss)
+        assert expected_transmissions(0.1, 200) == pytest.approx(1 / 0.9)
+
+    def test_validation(self):
+        with pytest.raises(ValueError):
+            FaultModel(link_loss=1.0)
+        with pytest.raises(ValueError):
+            FaultModel(max_retries=-1)
+        with pytest.raises(ValueError):
+            expected_transmissions(-0.1, 3)
+
+    def test_churn_liveness_schedule(self):
+        churn = NodeChurn(deaths=((3, 1), (5, 2)), revivals=((7, 1),))
+        live = churn.liveness(p=4, n_rounds=9)
+        assert live[:3].all()
+        assert not live[3:7, 1].any() and live[7:, 1].all()
+        assert not live[5:, 2].any()
+        assert live[:, 0].all() and live[:, 3].all()
+
+    def test_death_wave_spares_and_revives(self):
+        rng = np.random.default_rng(0)
+        churn = death_wave(rng, 20, round=4, fraction=0.5, spare=[0],
+                           revive_round=8)
+        live = churn.liveness(20, 10)
+        assert live[:, 0].all()                    # spared
+        assert (~live[4]).sum() == 10              # ceil(0.5 * 20)
+        assert live[8:].all()                      # everyone back
+
+    def test_dropout_mask_rate(self):
+        m = dropout_mask(np.random.default_rng(0), (2000, 10), 0.2)
+        assert 0.75 < m.mean() < 0.85
+        assert dropout_mask(np.random.default_rng(0), (5, 5), 0.0).all()
+
+
+class TestRepair:
+    def test_fault_free_repair_is_noop(self, topo10):
+        tree2, attached = repair_tree(topo10, np.ones(52, dtype=bool))
+        np.testing.assert_array_equal(tree2.parent, topo10.tree.parent)
+        np.testing.assert_array_equal(tree2.depth, topo10.tree.depth)
+        assert attached.all()
+
+    def test_orphans_reattach(self, topo10):
+        """Killing an internal node re-homes its subtree, not just its kids."""
+        counts = topo10.tree.children_counts()
+        victim = int(np.argmax(counts))            # busiest internal node
+        if victim == topo10.tree.root:
+            victim = int(np.argsort(-counts)[1])
+        alive = np.ones(52, dtype=bool)
+        alive[victim] = False
+        tree2, attached = repair_tree(topo10, alive)
+        assert not attached[victim] and tree2.parent[victim] == -2
+        for i in np.nonzero(attached)[0]:
+            if i == tree2.root:
+                continue
+            par = tree2.parent[i]
+            assert par >= 0 and attached[par]
+            assert tree2.depth[i] == tree2.depth[par] + 1
+            assert topo10.adjacency[i, par]        # only radio-range links
+
+    def test_dead_root_raises(self, topo10):
+        alive = np.ones(52, dtype=bool)
+        alive[topo10.tree.root] = False
+        with pytest.raises(ValueError, match="root"):
+            repair_tree(topo10, alive)
+
+
+class TestMaskedStreaming:
+    def _cfg(self, **kw):
+        from repro.streaming import StreamConfig
+        base = dict(p=P, q=3, halfwidth=H, forgetting=0.9,
+                    drift_threshold=0.1, warmup_rounds=5, interpret=True)
+        base.update(kw)
+        return StreamConfig(**base)
+
+    def test_all_ones_mask_matches_unmasked_run(self):
+        from repro.streaming import stream_init, stream_run
+        cfg = self._cfg()
+        xs = jax.random.normal(jax.random.PRNGKey(0), (15, 8, P))
+        st = stream_init(cfg, jax.random.PRNGKey(7))
+        fin0, m0 = stream_run(cfg, st, xs)
+        fin1, m1 = stream_run(cfg, st, xs, jnp.ones((15, P)))
+        np.testing.assert_array_equal(np.asarray(m0.rho), np.asarray(m1.rho))
+        np.testing.assert_array_equal(np.asarray(fin0.sched.W),
+                                      np.asarray(fin1.sched.W))
+
+    def test_churn_triggers_refresh(self):
+        from repro.streaming import stream_init, stream_run
+        cfg = self._cfg()
+        scale = jnp.linspace(4.0, 1.0, P)
+        xs = jax.random.normal(jax.random.PRNGKey(1), (24, 8, P)) * scale
+        masks = np.ones((24, P), np.float32)
+        masks[12:, 4:10] = 0.0                     # death wave at round 12
+        st = stream_init(cfg, jax.random.PRNGKey(7))
+        fin, m = stream_run(cfg, st, xs, jnp.asarray(masks))
+        fired = np.asarray(m.did_refresh)
+        assert fired[cfg.warmup_rounds]            # warmup refresh
+        assert fired[12]                           # churn refresh, immediately
+        assert not fired[13:].any()                # churn fires once, not per round
+
+    def test_dead_sensor_variance_decays(self):
+        """Masked sensors' live variance estimate decays toward zero."""
+        from repro.streaming import online_init, online_update
+        from repro.streaming.online_cov import online_estimate
+        xs = jax.random.normal(jax.random.PRNGKey(2), (16, P)) * 3.0
+        st = online_init(P, H)
+        st = online_update(st, xs, interpret=True)
+        mask = jnp.ones((P,)).at[0].set(0.0)
+        for _ in range(12):
+            st = online_update(st, xs, forgetting=0.5, mask=mask,
+                               interpret=True)
+        est = np.asarray(online_estimate(st))
+        assert est[H, 0] < 0.05 * est[H, 1:].mean()
+
+    def test_lossy_config_books_scaled_costs(self):
+        cfg = self._cfg(link_loss=0.1, max_retries=3)
+        sched = cfg.scheduler()
+        clean = self._cfg().scheduler()
+        factor = expected_transmissions(0.1, 3)
+        assert sched.round_cost() == pytest.approx(clean.round_cost() * factor)
+        assert sched.refresh_cost(P) == pytest.approx(
+            clean.refresh_cost(P) * factor)

@@ -121,6 +121,30 @@ class TestCovUpdate:
         np.testing.assert_allclose(np.asarray(out), np.asarray(st_.band),
                                    rtol=1e-4, atol=1e-3)
 
+    @pytest.mark.parametrize("B,n,p,h", [
+        (3, 7, 37, 2),       # both prime: _pick_block falls back to 1
+        (2, 10, 53, 3),      # n divisible by 2 only, p prime
+        (4, 16, 48, 1),      # p divisible by 16 but not 128-aligned
+    ])
+    def test_batched_matches_per_network_loop_nondivisible(self, B, n, p, h):
+        """Regression for _pick_block's fallback path: shapes where neither
+        axis divides the preferred tile sizes must still agree with a
+        per-network Python loop over the single-network kernel (and the
+        oracle).  Pins the fallback-to-1 behavior for prime p."""
+        from repro.kernels.ops import _pick_block
+        if p in (37, 53):
+            assert _pick_block(p) == 1           # the path under test
+        x = _rand(jax.random.PRNGKey(B * n + p), (B, n, p), jnp.float32)
+        out = ops.cov_band_update_batched(x, h, interpret=True)
+        assert out.shape == (B, 2 * h + 1, p)
+        for i in range(B):
+            single = ops.cov_band_update(x[i], h, interpret=True)
+            np.testing.assert_allclose(np.asarray(out[i]), np.asarray(single),
+                                       rtol=1e-5, atol=1e-5)
+            oracle = ref.cov_band_update(x[i], h)
+            np.testing.assert_allclose(np.asarray(out[i]), np.asarray(oracle),
+                                       rtol=1e-4, atol=1e-4)
+
 
 class TestPcaProject:
     @pytest.mark.parametrize("n,p,q,bn,bk", [

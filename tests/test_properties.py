@@ -13,8 +13,12 @@ pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from repro.core import costs
+from repro.core.aggregation import (NORM_PRIMITIVES, aggregate_tree,
+                                    lossy_aggregate_tree)
+from repro.core.faults import FaultModel
 from repro.core.pca import DistributedPCA, retained_variance
 from repro.core.spatiotemporal import stack_windows
+from repro.core.topology import build_topology, grid_layout, repair_tree
 from repro.data.tokens import TokenPipeline
 
 
@@ -69,6 +73,71 @@ def test_stack_windows_preserves_lag0(w, seed):
     x = rng.normal(size=(20, 3))
     s = stack_windows(x, w)
     np.testing.assert_array_equal(s[:, 0::w], x[w - 1:])
+
+
+@settings(max_examples=20, deadline=None)
+@given(seed=st.integers(0, 2**16), rows=st.integers(3, 6),
+       cols=st.integers(3, 6), kill=st.floats(0.0, 0.6))
+def test_repair_yields_connected_rooted_tree(seed, rows, cols, kill):
+    """For any death schedule sparing the root, the repaired tree is a valid
+    tree rooted at the sink spanning exactly the reachable alive nodes."""
+    rng = np.random.default_rng(seed)
+    p = rows * cols
+    topo = build_topology(grid_layout(rows, cols, jitter=0.2, seed=seed),
+                          radio_range=1.8)
+    alive = rng.random(p) >= kill
+    alive[topo.tree.root] = True                 # the schedule spares the root
+    tree, attached = repair_tree(topo, alive)
+
+    assert attached[tree.root] and tree.parent[tree.root] == -1
+    assert not attached[~alive].any()            # dead nodes never attach
+    for i in np.nonzero(attached)[0]:
+        i = int(i)
+        if i == tree.root:
+            continue
+        par = int(tree.parent[i])
+        # parent is an attached radio neighbor one hop closer to the root
+        assert par >= 0 and attached[par] and topo.adjacency[i, par]
+        assert tree.depth[i] == tree.depth[par] + 1
+        # walking parents reaches the root (connectedness, no cycles)
+        steps = 0
+        while i != tree.root:
+            i = int(tree.parent[i])
+            steps += 1
+            assert steps <= p
+    # attached == BFS-reachable on the alive-induced subgraph: any alive node
+    # left out must have no alive neighbor that is attached
+    for i in np.nonzero(alive & ~attached)[0]:
+        nbrs = np.nonzero(topo.adjacency[int(i)])[0]
+        assert not (alive[nbrs] & attached[nbrs]).any()
+
+
+@settings(max_examples=20, deadline=None)
+@given(seed=st.integers(0, 2**16), loss=st.floats(0.0, 0.6),
+       retries=st.integers(0, 4), kill=st.floats(0.0, 0.5))
+def test_lossy_packets_booked_equals_counted(seed, loss, retries, kill):
+    """costs.lossy_epoch_load on the simulator's transcript reproduces the
+    simulator's own per-node packet counts, for any loss/churn schedule."""
+    rng = np.random.default_rng(seed)
+    topo = build_topology(grid_layout(4, 5, jitter=0.2, seed=seed),
+                          radio_range=1.8)
+    alive = rng.random(20) >= kill
+    alive[topo.tree.root] = True
+    tree, attached = repair_tree(topo, alive)
+    x = rng.normal(size=20)
+    res = lossy_aggregate_tree(tree, list(x), NORM_PRIMITIVES,
+                               FaultModel(link_loss=loss, max_retries=retries),
+                               rng, active=attached)
+    booked = costs.lossy_epoch_load(tree, res.record_sizes, res.attempts,
+                                    res.delivered, res.active)
+    np.testing.assert_array_equal(booked, res.packets)
+    if loss == 0.0:
+        # zero loss on the full tree: reliable simulator and Sec. 2.1.3 formula
+        if attached.all():
+            rel = aggregate_tree(tree, list(x), NORM_PRIMITIVES)
+            np.testing.assert_array_equal(res.packets, rel.packets)
+            np.testing.assert_array_equal(res.packets,
+                                          tree.load_aggregation(q=1))
 
 
 @settings(max_examples=8, deadline=None)

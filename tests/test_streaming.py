@@ -252,6 +252,82 @@ class TestServeEngine:
             eng.submit(StreamRequest(rounds=np.zeros((0, 8, P), np.float32)))
 
 
+class TestEngineFaultDeterminism:
+    """Two engine runs with the same seed and fault schedule are identical:
+    retirement order, bases (bitwise), and cost bills."""
+
+    def _fault_requests(self):
+        from repro.serve.engine import StreamRequest
+        reqs = []
+        for i in range(5):
+            R = 18
+            rng = np.random.default_rng(200 + i)
+            live = np.ones((R, P), np.float32)
+            if i == 1:       # total blackout at round 6, revival at round 12
+                live[6:12, :] = 0.0
+            if i == 3:       # permanent partial wave (stays above threshold)
+                live[9:, :10] = 0.0
+            if i == 4:       # dies for good at round 10
+                live[10:, :] = 0.0
+            rounds = (rng.normal(size=(R, 8, P)).astype(np.float32)
+                      * np.linspace(4, 1, P, dtype=np.float32))
+            reqs.append(StreamRequest(rounds=rounds, liveness=live))
+        return reqs
+
+    def _run(self):
+        from repro.serve.engine import StreamingPCAEngine
+        cfg = StreamConfig(p=P, q=Q, halfwidth=H, forgetting=0.9,
+                           drift_threshold=0.1, warmup_rounds=4,
+                           link_loss=0.1, interpret=True)
+        eng = StreamingPCAEngine(cfg, slots=2, seed=0)
+        reqs = self._fault_requests()
+        for r in reqs:
+            eng.submit(r)
+        eng.run_until_done()
+        return eng, reqs
+
+    def test_two_runs_identical(self):
+        eng1, reqs1 = self._run()
+        eng2, reqs2 = self._run()
+        order1 = [(reqs1.index(q), why) for q, why in eng1.retired_log]
+        order2 = [(reqs2.index(q), why) for q, why in eng2.retired_log]
+        assert order1 == order2
+        assert eng1.plan_history == eng2.plan_history
+        for a, b in zip(reqs1, reqs2):
+            assert a.done and b.done
+            assert a.result.reason == b.result.reason
+            # bitwise: same jitted programs folded in the same order
+            np.testing.assert_array_equal(a.result.components,
+                                          b.result.components)
+            assert a.result.comm_packets == b.result.comm_packets
+            assert a.result.rounds == b.result.rounds
+            assert len(a.retirements) == len(b.retirements)
+            for ra, rb in zip(a.retirements, b.retirements):
+                np.testing.assert_array_equal(ra.components, rb.components)
+                assert ra.comm_packets == rb.comm_packets
+
+    def test_fault_lifecycle(self):
+        """The schedule above exercises every retirement path."""
+        eng, reqs = self._run()
+        assert reqs[0].result.reason == "completed" and not reqs[0].retirements
+        # blackout + revival: one dead retirement, then completed
+        assert len(reqs[1].retirements) == 1
+        assert reqs[1].retirements[0].reason == "dead"
+        assert reqs[1].result.reason == "completed"
+        # partial wave above min_alive_fraction: survives to completion
+        assert reqs[3].result.reason == "completed" and not reqs[3].retirements
+        # permanent death: retired dead, never re-admitted; the partial IS
+        # the final result (not duplicated into retirements)
+        assert reqs[4].result.reason == "dead"
+        assert reqs[4].result.rounds < reqs[4].rounds.shape[0]
+        assert not reqs[4].retirements
+        # the elastic planner saw the fleet drain below full occupancy and
+        # re-planned down to the single-network mesh at the tail
+        assert eng.plan_history[0].n_devices == 2
+        assert eng.plan_history[-1].n_devices == 1
+        assert len(eng.plan_history) >= 2
+
+
 class TestStreamingCosts:
     def test_round_cost_positive_and_scales_with_q(self):
         c1 = costs.streaming_round_cost(8, 1, 4)
