@@ -1,0 +1,139 @@
+"""Compression-tier benchmark: ε and bit-width sweeps on the serving path.
+
+Three row families, the device-tier analogue of the paper's Sec.-5
+compression experiment:
+
+* ``compress/fused@{eps}`` — the fused Pallas ε-supervised kernel
+  (project + reconstruct + flag in one pass) on a fleet batch, vs. ε:
+  derived column ``maxerr|extras`` shows the guarantee holding while the
+  notification count falls;
+* ``compress/oracle`` — the host-side NumPy oracle on the same block
+  (the path the tier replaced), for the speedup denominator;
+* ``compress/stream@{bits}b`` — the full streaming fleet (cov fold +
+  scheduler + compression stage) at each score bit width:
+  ``maxerr|extras|bits`` charts the accuracy-vs-bits tradeoff.
+
+Run standalone to emit a JSON artifact for the perf trajectory:
+
+    PYTHONPATH=src:. python benchmarks/compression_bench.py \
+        --smoke --json BENCH_compression.json
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import row, timed
+
+EPSILONS = (0.1, 0.5, 2.0)
+BIT_WIDTHS = (0, 8, 4, 2)
+B, N, P, Q, H = 8, 8, 32, 3, 4
+EPS_FOR_BITS = 0.5
+
+
+def _fleet_block(rng):
+    scale = np.concatenate([[4.0, 3.4, 2.8], np.linspace(1.2, 0.8, P - 3)])
+    x = (rng.normal(size=(B, N, P)) * scale).astype(np.float32)
+    W = np.linalg.qr(rng.normal(size=(P, Q)))[0].astype(np.float32)
+    mean = (x.mean(axis=(0, 1))).astype(np.float32)
+    return x, W, mean
+
+
+def _fused_sweep(n_repeat: int):
+    import jax
+    import jax.numpy as jnp
+
+    from repro.kernels import ops
+
+    out = []
+    rng = np.random.default_rng(0)
+    x, W, mean = _fleet_block(rng)
+    xj, Wj, mj = jnp.asarray(x), jnp.asarray(W), jnp.asarray(mean)
+    for eps in EPSILONS:
+        def call(e=eps):
+            z, xh, fl = ops.supervised_compress_batched(xj, Wj, mj, epsilon=e)
+            jax.block_until_ready(z)
+            return z, xh, fl
+        call()                                   # compile outside timing
+        (z, xh, fl), us = timed(call, repeat=n_repeat)
+        x_sink = np.where(np.asarray(fl), x, np.asarray(xh))
+        maxerr = np.abs(x_sink - x).max()
+        extras = int(np.asarray(fl).sum())
+        out.append(row(f"compress/fused@{eps}", us,
+                       f"maxerr {maxerr:.3f}|{extras} extras"))
+
+    # host-side NumPy oracle on the same block (fp32, same convention)
+    from repro.core.compression import SupervisedCompressor
+    comp = SupervisedCompressor(W, mean, epsilon=EPS_FOR_BITS,
+                                dtype=np.float32)
+    flat = x.reshape(-1, P)
+    _, us = timed(lambda: comp.run(flat), repeat=n_repeat)
+    out.append(row("compress/oracle", us, f"numpy fp32 eps={EPS_FOR_BITS}"))
+    return out
+
+
+def _stream_sweep(n_rounds: int, n_repeat: int):
+    import jax
+    import jax.numpy as jnp
+
+    from repro.streaming import (CompressionConfig, StreamConfig,
+                                 batched_stream_run, stream_init)
+
+    out = []
+    rng = np.random.default_rng(1)
+    scale = np.concatenate([[4.0, 3.4, 2.8], np.linspace(1.2, 0.8, P - 3)])
+    xs = jnp.asarray((rng.normal(size=(B, n_rounds, N, P)) * scale)
+                     .astype(np.float32))
+    keys = jax.random.split(jax.random.PRNGKey(1), B)
+    for bits in BIT_WIDTHS:
+        cfg = StreamConfig(p=P, q=Q, halfwidth=H, forgetting=0.95,
+                           drift_threshold=0.08, warmup_rounds=5,
+                           compression=CompressionConfig(
+                               epsilon=EPS_FOR_BITS, score_bits=bits))
+        states = jax.vmap(lambda k: stream_init(cfg, k))(keys)
+
+        def _run(c=cfg, s=states):
+            res = batched_stream_run(c, s, xs)
+            jax.block_until_ready(res[1].rho)
+            return res
+        _run()                                   # compile outside timing
+        (fin, met), us = timed(_run, repeat=n_repeat)
+        comp = met.compression
+        maxerr = float(np.asarray(comp.max_err).max())
+        extras = float(np.asarray(comp.extra_packets).sum())
+        bits_air = float(np.asarray(comp.bits_on_air).sum())
+        out.append(row(f"compress/stream@{bits}b", us,
+                       f"maxerr {maxerr:.3f}|{extras:.0f} extras"
+                       f"|{bits_air:.0f} bits"))
+    return out
+
+
+def run(smoke: bool = False):
+    n_repeat = 2 if smoke else 5
+    n_rounds = 10 if smoke else 40
+    return _fused_sweep(n_repeat) + _stream_sweep(n_rounds, n_repeat)
+
+
+def main() -> int:
+    import argparse
+    import json
+    import sys
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--json", help="write rows to this JSON artifact path")
+    args = ap.parse_args()
+    rows = run(smoke=args.smoke)
+    print("name,us_per_call,derived")
+    for r in rows:
+        print(f"{r['name']},{r['us_per_call']},{r['derived']}")
+    if args.json:
+        with open(args.json, "w") as fh:
+            json.dump(rows, fh, indent=2)
+        print(f"wrote {args.json}", file=sys.stderr)
+    return 0
+
+
+if __name__ == "__main__":
+    import sys
+    sys.exit(main())

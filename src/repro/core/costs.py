@@ -22,6 +22,7 @@ import dataclasses
 __all__ = ["CostReport", "centralized_covariance", "distributed_covariance",
            "centralized_eigenvectors", "distributed_eigenvectors",
            "streaming_round_cost", "streaming_refresh_cost",
+           "supervised_round_cost", "quantized_supervised_round_cost",
            "lossy_round_cost", "lossy_refresh_cost", "lossy_epoch_load",
            "pcag_epoch_load", "default_epoch_load", "table1"]
 
@@ -97,6 +98,53 @@ def streaming_refresh_cost(p: int, q: int, n_max: int, c_max: int,
         communication=iters * per_iter + feedback,
         computation=iters * q * (n_max + q * c_max) + q * q * p,
         memory=2 * q + n_max,
+    )
+
+
+def supervised_round_cost(q: int, c_max: int,
+                          flagged: float = 0.0) -> CostReport:
+    """One supervised-compression epoch (Sec. 2.4.1), highest-node load.
+
+    The scores travel as one PCAg aggregation up the tree and one feedback
+    flood back down — ``q (C* + 1)`` packets each at the highest-loaded
+    node (Eq. 7 twice) — plus the flagged raw measurements.  ``flagged`` is
+    the number of notifications this epoch: every flagged raw is forwarded
+    to the sink, so the root (the highest-loaded node for extras) processes
+    all of them.  Computation per node: q multiplies for the init record +
+    q for the local reconstruction + the error test; memory: the node's
+    basis row, the fed-back scores, its mean and eps.
+    """
+    return CostReport(
+        communication=2 * q * (c_max + 1) + flagged,
+        computation=2 * q + 1,
+        memory=2 * q + 2,
+    )
+
+
+def quantized_supervised_round_cost(q: int, c_max: int, bits: int,
+                                    word_bits: int = 32,
+                                    flagged: float = 0.0) -> CostReport:
+    """Supervised epoch with ``bits``-wide quantized scores (bit budget).
+
+    The accuracy-vs-bits tradeoff of "Self-adaptive node-based PCA
+    encodings" (PAPERS.md): each score on the A and F paths costs
+    ``bits / word_bits`` of a full packet, while flagged raw measurements
+    stay full-word.  The quantizer re-derives its q per-component scales
+    from every round's scores, so the F flood additionally carries q
+    full-precision scale words each round — ``q (C* + 1)`` word-packets at
+    the highest-loaded node — which caps the useful width: quantization
+    beats full precision only below ``word_bits / 2`` bits.  ``bits == 0``
+    means unquantized and reproduces :func:`supervised_round_cost` exactly.
+    """
+    if bits == 0:
+        return supervised_round_cost(q, c_max, flagged)
+    base = supervised_round_cost(q, c_max, 0.0)
+    scale_flood = q * (c_max + 1)
+    return CostReport(
+        communication=(base.communication * (bits / word_bits)
+                       + scale_flood + flagged),
+        computation=base.computation + 2 * q,   # encode + decode per node
+        memory=base.memory + q,                 # per-component scales
     )
 
 

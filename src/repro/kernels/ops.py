@@ -16,11 +16,14 @@ import jax.numpy as jnp
 from repro.kernels.banded_matvec import banded_matvec_pallas, banded_matmul_pallas
 from repro.kernels.cov_update import (cov_band_update_pallas,
                                       cov_band_update_masked_pallas)
-from repro.kernels.pca_project import pca_project_pallas, pca_reconstruct_pallas
+from repro.kernels.pca_project import (pca_project_pallas,
+                                       pca_reconstruct_pallas,
+                                       supervised_compress_pallas)
 
 __all__ = ["banded_matvec", "banded_matmul", "cov_band_update",
            "cov_band_update_masked", "cov_band_update_batched",
-           "pca_project", "pca_reconstruct"]
+           "pca_project", "pca_reconstruct",
+           "supervised_compress", "supervised_compress_batched"]
 
 
 def _auto_interpret(interpret: bool | None) -> bool:
@@ -35,6 +38,27 @@ def _pick_block(p: int, target: int = 512) -> int:
         if cand <= target and p % cand == 0:
             return cand
     return 1
+
+
+def _pick_block_padded(d: int, target: int) -> int:
+    """Block size for an axis the caller is allowed to zero-pad.
+
+    Prefers the exact-divisor pick — no padding, so results stay
+    bit-identical to the historical behavior on every shape a divisor
+    covers — and only when the best divisor is degenerate (awkward ``d``,
+    e.g. prime: the old path would tile by 1, a pathological grid)
+    switches to a padded power-of-two tile.  The wrappers below pad the
+    operand up to a multiple of the returned block and slice the result
+    back.
+    """
+    b = _pick_block(d, target)
+    if b > 1 or d <= 8:
+        return b
+    return min(target, 1 << (d - 1).bit_length())
+
+
+def _pad_dim(d: int, block: int) -> int:
+    return -(-d // block) * block
 
 
 @functools.partial(jax.jit, static_argnames=("block_p", "interpret"))
@@ -167,11 +191,23 @@ def _pca_project(x, w, block_n, block_k, interpret):
 def pca_project(x: jnp.ndarray, w: jnp.ndarray,
                 block_n: int | None = None, block_k: int | None = None,
                 interpret: bool | None = None) -> jnp.ndarray:
-    """Z = X W (PCAg scores for a batch of rows)."""
+    """Z = X W (PCAg scores for a batch of rows); any (n, p) works.
+
+    Non-divisible shapes (awkward n, prime p, or an explicit block that
+    does not divide the axis) are zero-padded up to the block grid and the
+    result sliced back: padded feature columns multiply zero basis rows, so
+    every fp32 partial sum they contribute is exactly 0.0 and the sliced
+    result is bit-identical to the unpadded kernel at the same block sizes.
+    """
     n, p = x.shape
-    bn = block_n or _pick_block(n, target=128)
-    bk = block_k or _pick_block(p)
-    return _pca_project(x, w, bn, bk, _auto_interpret(interpret))
+    bn = block_n or _pick_block_padded(n, target=128)
+    bk = block_k or _pick_block_padded(p, target=512)
+    n_pad, p_pad = _pad_dim(n, bn), _pad_dim(p, bk)
+    if (n_pad, p_pad) != (n, p):
+        x = jnp.pad(x, ((0, n_pad - n), (0, p_pad - p)))
+        w = jnp.pad(w, ((0, p_pad - p), (0, 0)))
+    out = _pca_project(x, w, bn, bk, _auto_interpret(interpret))
+    return out[:n]
 
 
 @functools.partial(jax.jit,
@@ -184,9 +220,105 @@ def _pca_reconstruct(z, w, block_n, block_p, interpret):
 def pca_reconstruct(z: jnp.ndarray, w: jnp.ndarray,
                     block_n: int | None = None, block_p: int | None = None,
                     interpret: bool | None = None) -> jnp.ndarray:
-    """X_hat = Z W^T."""
+    """X_hat = Z W^T; any (n, p) works (padded + sliced like pca_project).
+
+    Padded batch rows and padded basis rows produce extra output rows /
+    columns that are sliced off; the surviving region is untouched (each
+    output tile depends only on its own z rows and w rows).
+    """
     n, q = z.shape
     p = w.shape[0]
-    bn = block_n or _pick_block(n, target=128)
-    bp = block_p or _pick_block(p)
-    return _pca_reconstruct(z, w, bn, bp, _auto_interpret(interpret))
+    bn = block_n or _pick_block_padded(n, target=128)
+    bp = block_p or _pick_block_padded(p, target=512)
+    n_pad, p_pad = _pad_dim(n, bn), _pad_dim(p, bp)
+    if (n_pad, p_pad) != (n, p):
+        z = jnp.pad(z, ((0, n_pad - n), (0, 0)))
+        w = jnp.pad(w, ((0, p_pad - p), (0, 0)))
+    out = _pca_reconstruct(z, w, bn, bp, _auto_interpret(interpret))
+    return out[:n, :p]
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("epsilon", "block_n", "interpret"))
+def _supervised_compress(x, w, mean2d, mask, epsilon, block_n, interpret):
+    return supervised_compress_pallas(x, w, mean2d, mask, epsilon=epsilon,
+                                      block_n=block_n, interpret=interpret)
+
+
+def supervised_compress(x: jnp.ndarray, w: jnp.ndarray,
+                        mean: jnp.ndarray | None = None,
+                        *, epsilon: float,
+                        mask: jnp.ndarray | None = None,
+                        block_n: int | None = None,
+                        interpret: bool | None = None,
+                        ) -> tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """One fused supervised-compression epoch (Sec. 2.4.1) on device.
+
+    Returns ``(z, x_hat, flagged)``: scores (n, q) and reconstruction
+    (n, p) in fp32, plus the bool notification mask ``|x - x_hat| > eps``
+    (so every un-flagged entry is within the closed bound ``<= eps`` — the
+    same convention as the NumPy oracle
+    :class:`repro.core.compression.SupervisedCompressor`).  ``mask`` is an
+    optional 0/1 liveness array, (p,) or (n, p); dead sensors contribute no
+    score record and raise no notification.  ``epsilon`` is static (the
+    kernel bakes it in); the batch axis is padded to the block like
+    :func:`pca_project`, padded rows carry mask 0 so they project to
+    nothing and never flag.
+    """
+    n, p = x.shape
+    if mean is None:
+        mean = jnp.zeros((p,), jnp.float32)
+    mean2d = jnp.asarray(mean, jnp.float32).reshape(1, p)
+    if mask is None:
+        mask = jnp.ones((n, p), jnp.float32)
+    else:
+        mask = jnp.asarray(mask, jnp.float32)
+        if mask.ndim == 1:
+            mask = jnp.broadcast_to(mask[None, :], (n, p))
+    bn = block_n or _pick_block_padded(n, target=128)
+    n_pad = _pad_dim(n, bn)
+    if n_pad != n:
+        x = jnp.pad(x, ((0, n_pad - n), (0, 0)))
+        mask = jnp.pad(mask, ((0, n_pad - n), (0, 0)))
+    z, x_hat, flags = _supervised_compress(x, w, mean2d, mask,
+                                           float(epsilon), bn,
+                                           _auto_interpret(interpret))
+    return z[:n], x_hat[:n], flags[:n] > 0.0
+
+
+def supervised_compress_batched(x: jnp.ndarray, w: jnp.ndarray,
+                                mean: jnp.ndarray | None = None,
+                                *, epsilon: float,
+                                mask: jnp.ndarray | None = None,
+                                block_n: int | None = None,
+                                interpret: bool | None = None,
+                                ) -> tuple[jnp.ndarray, jnp.ndarray,
+                                           jnp.ndarray]:
+    """Fleet form of :func:`supervised_compress` over x (B, n, p).
+
+    ``w`` is (B, p, q) per-network bases (or (p, q) shared), ``mean``
+    (B, p) / (p,) / None, ``mask`` (B, n, p) / (B, p) / None.  A ``vmap``
+    of the fused kernel: Pallas turns the networks axis into an extra
+    outer grid axis, keeping the per-network tiling identical.
+    """
+    if x.ndim != 3:
+        raise ValueError(f"expected (networks, n, p), got {x.shape}")
+    B, n, p = x.shape
+    if w.ndim == 2:
+        w = jnp.broadcast_to(w[None], (B,) + w.shape)
+    if mean is None:
+        mean = jnp.zeros((B, p), jnp.float32)
+    else:
+        mean = jnp.asarray(mean, jnp.float32)
+        if mean.ndim == 1:
+            mean = jnp.broadcast_to(mean[None, :], (B, p))
+    if mask is None:
+        mask = jnp.ones((B, n, p), jnp.float32)
+    else:
+        mask = jnp.asarray(mask, jnp.float32)
+        if mask.ndim == 2:
+            mask = jnp.broadcast_to(mask[:, None, :], (B, n, p))
+    return jax.vmap(
+        lambda xi, wi, mi, ki: supervised_compress(
+            xi, wi, mi, epsilon=epsilon, mask=ki, block_n=block_n,
+            interpret=interpret))(x, w, mean, mask)

@@ -1,4 +1,5 @@
-"""Pallas TPU kernel: PCAg projection / reconstruction (Eq. 5-6).
+"""Pallas TPU kernels: PCAg projection / reconstruction (Eq. 5-6) and the
+fused epsilon-supervised compression pass (Sec. 2.4.1).
 
 ``Z = X W`` (scores) and ``X_hat = Z W^T`` (reconstruction) for measurement
 batches X (n, p) and a tall-skinny basis W (p, q).  These are the per-epoch
@@ -11,6 +12,17 @@ the inner grid dimension; each step issues a (block_n x block_k) @
 output tile in fp32.  q is small (# components) so the full q stays in the
 minor dimension — pick block shapes that are multiples of (8, 128) on real
 hardware.
+
+:func:`supervised_compress_pallas` fuses the whole supervised-compression
+epoch — center, project, reconstruct, error test — into ONE pass over X:
+each grid step loads a (block_n, p) measurement slab plus the full basis,
+computes Z = (X - mean) W and X_hat = Z W^T + mean back-to-back on the MXU
+(Z never round-trips to HBM), and emits the scores, the reconstruction and
+the per-node notification mask ``|x - x_hat| > eps``.  The feature axis is
+deliberately unblocked: a WSN basis is tall-skinny (p up to a few thousand,
+q tens), so a (block_n, p) slab + (p, q) basis fit VMEM comfortably and the
+fusion saves two of the three HBM round-trips of the composed
+project -> reconstruct -> compare pipeline.
 """
 
 from __future__ import annotations
@@ -21,7 +33,8 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
-__all__ = ["pca_project_pallas", "pca_reconstruct_pallas"]
+__all__ = ["pca_project_pallas", "pca_reconstruct_pallas",
+           "supervised_compress_pallas"]
 
 
 def _project_kernel(x_ref, w_ref, out_ref):
@@ -84,3 +97,66 @@ def pca_reconstruct_pallas(z: jnp.ndarray, w: jnp.ndarray,
         out_shape=jax.ShapeDtypeStruct((n, p), jnp.float32),
         interpret=interpret,
     )(z, w)
+
+
+def _supervised_kernel(x_ref, w_ref, mean_ref, mask_ref,
+                       z_ref, xh_ref, flag_ref, *, eps: float):
+    x = x_ref[...].astype(jnp.float32)                  # (block_n, p)
+    w = w_ref[...].astype(jnp.float32)                  # (p, q)
+    mean = mean_ref[...].astype(jnp.float32)            # (1, p)
+    m = mask_ref[...].astype(jnp.float32)               # (block_n, p)
+    # dead sensors transmit no init record: they are absent from the A sum
+    xc = (x - mean) * m
+    z = jnp.dot(xc, w, preferred_element_type=jnp.float32)
+    xh = jnp.dot(z, w.T, preferred_element_type=jnp.float32) + mean
+    err = jnp.abs(x - xh)
+    # Sec. 2.4.1 convention: notify on err > eps, so every un-flagged entry
+    # satisfies |x - x_hat| <= eps (the closed-bound sink guarantee)
+    flags = jnp.where((err > eps) & (m > 0.0), 1.0, 0.0)
+    z_ref[...] = z.astype(z_ref.dtype)
+    xh_ref[...] = xh.astype(xh_ref.dtype)
+    flag_ref[...] = flags.astype(flag_ref.dtype)
+
+
+def supervised_compress_pallas(x: jnp.ndarray, w: jnp.ndarray,
+                               mean: jnp.ndarray, mask: jnp.ndarray,
+                               *, epsilon: float, block_n: int,
+                               interpret: bool = False,
+                               ) -> tuple[jnp.ndarray, jnp.ndarray,
+                                          jnp.ndarray]:
+    """One fused supervised-compression epoch (Sec. 2.4.1).
+
+    Z (n, q), X_hat (n, p), flags (n, p) from X (n, p), W (p, q),
+    mean (1, p) and a 0/1 liveness/validity mask (n, p), in a single pass:
+    ``Z = ((X - mean) * mask) W``; ``X_hat = Z W^T + mean``;
+    ``flags = (|X - X_hat| > eps) & mask``.  ``eps`` is a compile-time
+    constant (the serving tier fixes it per deployment; sweeps recompile).
+    The grid blocks the batch axis only — see the module docstring.
+    """
+    n, p = x.shape
+    p2, q = w.shape
+    assert p == p2
+    assert mean.shape == (1, p) and mask.shape == (n, p)
+    assert n % block_n == 0, (n, block_n)
+    grid = (n // block_n,)
+    return pl.pallas_call(
+        functools.partial(_supervised_kernel, eps=float(epsilon)),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_n, p), lambda i: (i, 0)),
+            pl.BlockSpec((p, q), lambda i: (0, 0)),
+            pl.BlockSpec((1, p), lambda i: (0, 0)),
+            pl.BlockSpec((block_n, p), lambda i: (i, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((block_n, q), lambda i: (i, 0)),
+            pl.BlockSpec((block_n, p), lambda i: (i, 0)),
+            pl.BlockSpec((block_n, p), lambda i: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((n, q), jnp.float32),
+            jax.ShapeDtypeStruct((n, p), jnp.float32),
+            jax.ShapeDtypeStruct((n, p), jnp.float32),
+        ],
+        interpret=interpret,
+    )(x, w, mean, mask)

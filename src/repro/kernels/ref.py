@@ -14,7 +14,8 @@ from __future__ import annotations
 import jax.numpy as jnp
 
 __all__ = ["banded_matvec", "banded_matmul", "cov_band_update",
-           "cov_band_update_masked", "pca_project", "pca_reconstruct"]
+           "cov_band_update_masked", "pca_project", "pca_reconstruct",
+           "supervised_compress"]
 
 
 def _shifted_cols(x: jnp.ndarray, offset: int) -> jnp.ndarray:
@@ -72,3 +73,26 @@ def pca_project(x: jnp.ndarray, w: jnp.ndarray) -> jnp.ndarray:
 def pca_reconstruct(z: jnp.ndarray, w: jnp.ndarray) -> jnp.ndarray:
     """X_hat = Z W^T — the approximation of Eq. (5)."""
     return jnp.dot(z, w.T, preferred_element_type=jnp.float32).astype(z.dtype)
+
+
+def supervised_compress(x: jnp.ndarray, w: jnp.ndarray, mean: jnp.ndarray,
+                        mask: jnp.ndarray, epsilon: float,
+                        ) -> tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """The fused supervised-compression epoch (Sec. 2.4.1), unfused.
+
+    Same fp32 arithmetic as the Pallas kernel, written as three plain dots:
+    ``Z = ((X - mean) * mask) W``; ``X_hat = Z W^T + mean``;
+    ``flags = (|X - X_hat| > eps) & mask`` — notify on strictly-greater,
+    guarantee the closed bound ``<= eps`` for everything un-flagged.
+    """
+    x = x.astype(jnp.float32)
+    w = w.astype(jnp.float32)
+    mean = jnp.asarray(mean, jnp.float32).reshape(1, -1)
+    mask = jnp.asarray(mask, jnp.float32)
+    if mask.ndim == 1:
+        mask = jnp.broadcast_to(mask[None, :], x.shape)
+    xc = (x - mean) * mask
+    z = jnp.dot(xc, w, preferred_element_type=jnp.float32)
+    xh = jnp.dot(z, w.T, preferred_element_type=jnp.float32) + mean
+    flags = (jnp.abs(x - xh) > epsilon) & (mask > 0.0)
+    return z, xh, flags

@@ -174,7 +174,14 @@ class StreamRequest:
 
 @dataclasses.dataclass(frozen=True)
 class StreamResult:
-    """Final per-network summary returned when a stream retires."""
+    """Final per-network summary returned when a stream retires.
+
+    The ``compression_*`` fields are populated only when the engine's
+    StreamConfig carries a compression stage: the worst sink error over
+    every round streamed in this segment (the ε guarantee holds iff
+    ``compression_max_err <= ε``), the flagged-raw extras sent, and the
+    score bits put on air at the quantized budget.
+    """
 
     components: np.ndarray           # (p, q) final basis
     retained: float                  # rho of the final basis on the live cov
@@ -182,6 +189,9 @@ class StreamResult:
     comm_packets: float              # Table-1 communication bill (packets)
     rounds: int                      # rounds streamed
     reason: str = "completed"        # "completed" | "dead"
+    compression_max_err: float | None = None
+    compression_extra_packets: float | None = None
+    compression_bits_on_air: float | None = None
 
 
 class StreamingPCAEngine:
@@ -226,6 +236,18 @@ class StreamingPCAEngine:
         self._step_fn_masked = jax.jit(
             jax.vmap(lambda s, x, m: stream_step(cfg, s, x, m)))
         self._n: int | None = None       # epochs/round, fixed fleet-wide
+        # ε-supervised compression accounting (cfg.compression only):
+        # per-slot running worst sink error / flagged-raw extras / bits on
+        # air for the current segment.  Accumulated ON DEVICE (jnp ops, no
+        # per-step host sync — the step stays async-dispatchable like the
+        # decode path); the scalars are pulled to host only at retirement.
+        # last_compression keeps the most recent round's full device output
+        # (scores, sink view, flags) for observability — one round's
+        # arrays, bounded.
+        self._comp_max_err = jnp.zeros(slots, jnp.float32)
+        self._comp_extras = jnp.zeros(slots, jnp.float32)
+        self._comp_bits = jnp.zeros(slots, jnp.float32)
+        self.last_compression = None
         # fault machinery: logical clock, per-slot monitors, retirement log
         self._clock = 0
         self.health: list[HealthMonitor | None] = [None] * slots
@@ -273,6 +295,10 @@ class StreamingPCAEngine:
                 self.active[slot] = req
                 self.cursor[slot] = req.resume_at
                 self._splice_reset(slot)
+                if self.cfg.compression is not None:
+                    self._comp_max_err = self._comp_max_err.at[slot].set(0.0)
+                    self._comp_extras = self._comp_extras.at[slot].set(0.0)
+                    self._comp_bits = self._comp_bits.at[slot].set(0.0)
                 monitor = HealthMonitor(self.health_policy,
                                         clock=lambda: float(self._clock))
                 monitor.heartbeat(step=self._clock, duration=1.0)
@@ -291,6 +317,13 @@ class StreamingPCAEngine:
         rho = retained_fraction(online_estimate(state_i.cov),
                                 state_i.sched.W,
                                 online_total_variance(state_i.cov))
+        comp: dict = {}
+        if self.cfg.compression is not None:
+            comp = dict(
+                compression_max_err=float(self._comp_max_err[slot]),
+                compression_extra_packets=float(self._comp_extras[slot]),
+                compression_bits_on_air=float(self._comp_bits[slot]),
+            )
         return StreamResult(
             components=np.asarray(state_i.sched.W),
             retained=float(rho),
@@ -298,6 +331,7 @@ class StreamingPCAEngine:
             comm_packets=float(state_i.sched.comm_packets),
             rounds=int(state_i.rounds),
             reason=reason,
+            **comp,
         )
 
     def _retire(self, slot: int) -> None:
@@ -378,10 +412,25 @@ class StreamingPCAEngine:
                            and self.active[s].liveness is not None
                            for s in live)
         if any_schedule:
-            self.states, _ = self._step_fn_masked(
+            self.states, metrics = self._step_fn_masked(
                 self.states, jnp.asarray(batch), jnp.asarray(masks))
         else:
-            self.states, _ = self._step_fn(self.states, jnp.asarray(batch))
+            self.states, metrics = self._step_fn(self.states,
+                                                 jnp.asarray(batch))
+        if self.cfg.compression is not None:
+            comp = metrics.compression
+            self.last_compression = comp      # (slots, ...) device arrays
+            # idle slots fold zero rounds: mask them out of the books
+            # (where, not multiply — robust to any NaN in an idle slot)
+            lm = np.zeros(self.slots, np.float32)
+            lm[live] = 1.0
+            lmj = jnp.asarray(lm)
+            self._comp_max_err = jnp.maximum(
+                self._comp_max_err, jnp.where(lmj > 0, comp.max_err, 0.0))
+            self._comp_extras = self._comp_extras + jnp.where(
+                lmj > 0, comp.extra_packets, 0.0)
+            self._comp_bits = self._comp_bits + jnp.where(
+                lmj > 0, comp.bits_on_air, 0.0)
         for s in live:
             if masks[s].mean() >= self.min_alive_fraction:
                 self.health[s].heartbeat(step=self._clock, duration=1.0)

@@ -13,6 +13,8 @@ online_cov   OnlineCovariance state + forgetting-factor updates (Pallas
              cov-update kernel on the hot path) and the ``lax.scan`` driver
 scheduler    RecomputeScheduler: retained-variance drift monitor +
              orthogonal-iteration basis refresh with Table-1 cost accounting
+compressor   ε-supervised compression stage (Sec. 2.4.1 on device): fused
+             Pallas project/reconstruct/flag pass + uniform score quantizer
 driver       single-network stream loop, ``jax.vmap`` batched multi-network
              driver and the ``shard_map`` sharded runner
 """
@@ -24,6 +26,9 @@ from repro.streaming.online_cov import (
 from repro.streaming.scheduler import (
     RecomputeScheduler, SchedulerState, retained_fraction, ortho_refresh,
 )
+from repro.streaming.compressor import (
+    CompressionConfig, RoundCompression, quantize_scores, compress_round,
+)
 from repro.streaming.driver import (
     StreamConfig, StreamState, RoundMetrics, stream_init, stream_step,
     stream_run, batched_stream_run, sharded_stream_run,
@@ -34,6 +39,8 @@ __all__ = [
     "stream_covariance",
     "RecomputeScheduler", "SchedulerState", "retained_fraction",
     "ortho_refresh",
+    "CompressionConfig", "RoundCompression", "quantize_scores",
+    "compress_round",
     "StreamConfig", "StreamState", "RoundMetrics", "stream_init",
     "stream_step", "stream_run", "batched_stream_run", "sharded_stream_run",
 ]

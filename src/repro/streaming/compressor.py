@@ -1,0 +1,204 @@
+"""Streaming compression stage: ε-supervised PCAg scores on the hot loop.
+
+The paper's validating application (Sec. 2.3-2.4, Sec. 5) is *compression*:
+project each round of sensor readings on the current principal components,
+feed the scores back, and let every node compare its local reconstruction
+against the truth — nodes whose error strictly exceeds ε ship the raw
+measurement, so the sink is always within the closed bound ``|x - x̂| <= ε``.
+
+This module is the device-resident tier of that protocol, threaded through
+:func:`repro.streaming.driver.stream_step`: every streaming round is
+compressed against the slot's *current* basis (the scheduler's W) and the
+live mean estimate of the online covariance, through the fused Pallas kernel
+(:func:`repro.kernels.ops.supervised_compress`).  The host-side NumPy path
+(:mod:`repro.core.compression`) remains the differential oracle.
+
+Quantized scores: a uniform per-component quantizer (configurable bit
+width) models the bit-budget tradeoff of "Self-adaptive node-based PCA
+encodings" (PAPERS.md).  The ε guarantee is *independent* of quantization:
+nodes flag against the same dequantized reconstruction the sink computes
+(the F flood carries the quantized scores), so coarser scores only raise
+the notification rate, never break the bound.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import NamedTuple
+
+import jax.numpy as jnp
+
+from repro.core import costs
+from repro.kernels import ops
+
+__all__ = ["CompressionConfig", "RoundCompression", "quantize_scores",
+           "compress_round", "compression_round_cost", "epoch_packet_split"]
+
+
+@dataclasses.dataclass(frozen=True)
+class CompressionConfig:
+    """Static per-deployment compression policy (hashable: rides the jitted
+    StreamConfig as a compile-time constant).
+
+    Parameters
+    ----------
+    epsilon: the Sec.-2.4.1 accuracy bound; the sink is guaranteed within
+        ``<= epsilon`` of the truth for every live sensor.
+    score_bits: uniform-quantizer width for the score records; 0 disables
+        quantization (full-precision scores).  Must be 0 or >= 2 (one sign
+        bit plus at least one magnitude bit).
+    word_bits: radio word size — what one Table-1 "packet" carries; the
+        bit-budget booking expresses quantized scores as packet fractions.
+    emit_reconstruction: carry the (n, p) sink view and flag mask in the
+        per-round output.  Costs rounds x n x p floats through a scan —
+        right for examples/tests and modest fleets; disable at scale to
+        keep only the scores and the scalar books.
+    """
+
+    epsilon: float
+    score_bits: int = 0
+    word_bits: int = 32
+    emit_reconstruction: bool = True
+
+    def __post_init__(self):
+        if self.epsilon < 0.0:
+            raise ValueError(f"epsilon must be >= 0, got {self.epsilon}")
+        if self.score_bits == 1 or self.score_bits < 0:
+            raise ValueError(
+                f"score_bits must be 0 (off) or >= 2, got {self.score_bits}")
+        if self.word_bits <= 0:
+            raise ValueError(f"word_bits must be > 0, got {self.word_bits}")
+        if self.score_bits > self.word_bits:
+            raise ValueError(
+                f"score_bits ({self.score_bits}) cannot exceed word_bits "
+                f"({self.word_bits}) — a score never outgrows a packet word")
+
+
+class RoundCompression(NamedTuple):
+    """Per-round compression output (all-array pytree; scan-stackable).
+
+    ``x_sink``/``flagged`` are ``None`` when the config disables
+    reconstruction emission (None is an empty pytree node, so the scan and
+    shard_map drivers stay shape-consistent per config).
+    """
+
+    z: jnp.ndarray                   # (n, q) scores as the sink decodes them
+    x_sink: jnp.ndarray | None       # (n, p) ε-true sink view
+    flagged: jnp.ndarray | None      # (n, p) 0/1 notification mask
+    max_err: jnp.ndarray             # () max |x - x_sink| over live sensors
+    extra_packets: jnp.ndarray       # () flagged raw measurements this round
+    score_packets: jnp.ndarray       # () booked A packets (highest node)
+    feedback_packets: jnp.ndarray    # () booked F packets (highest node)
+    bits_on_air: jnp.ndarray         # () score+extra bits at the highest node
+
+
+def quantize_scores(z: jnp.ndarray, bits: int,
+                    ) -> tuple[jnp.ndarray, jnp.ndarray | None]:
+    """Uniform symmetric per-component quantizer.
+
+    ``scale[k] = max_t |z[t, k]| / (2^(bits-1) - 1)``; codes are
+    ``round(z / scale)`` clipped to the signed range; returns the
+    *dequantized* scores ``codes * scale`` (what both the node and the sink
+    reconstruct from) and the per-component scales.  ``bits == 0`` is the
+    identity (no quantization, scale ``None``).
+    """
+    if bits == 0:
+        return z, None
+    if bits == 1 or bits < 0:
+        raise ValueError(f"bits must be 0 or >= 2, got {bits}")
+    levels = (1 << (bits - 1)) - 1
+    scale = jnp.max(jnp.abs(z), axis=0) / levels
+    scale = jnp.maximum(scale, jnp.finfo(z.dtype).tiny)
+    codes = jnp.clip(jnp.round(z / scale), -levels, levels)
+    return codes * scale, scale
+
+
+def epoch_packet_split(q: int, c_max: int, cfg: CompressionConfig,
+                       ) -> tuple[float, float]:
+    """(A packets up, F packets down) of one flag-free compressed epoch at
+    the highest-loaded node.
+
+    A carries the q score records at the quantized width; F carries the
+    scores back down PLUS — when quantizing — the q full-precision
+    per-component scales the nodes need to dequantize (re-derived from
+    every round's scores, so they travel every round).  The two halves sum
+    exactly to :func:`repro.core.costs.quantized_supervised_round_cost`'s
+    flag-free communication — the cost model owns the total (the driver
+    books through :func:`compression_round_cost`, which delegates to it);
+    this split exists only for the metrics' A/F fields, and the sum
+    equality is pinned in tests/test_compression_tier.py.
+    """
+    unit = q * (c_max + 1)                      # Eq. 7: one q-record A or F
+    if cfg.score_bits == 0:
+        return float(unit), float(unit)
+    frac = cfg.score_bits / cfg.word_bits
+    return float(unit * frac), float(unit * frac + unit)
+
+
+def compression_round_cost(q: int, c_max: int, cfg: CompressionConfig,
+                           ) -> float:
+    """Flag-free packet bill of one compressed epoch at the highest node
+    (the cost model is the source of truth; see epoch_packet_split)."""
+    return costs.quantized_supervised_round_cost(
+        q, c_max, cfg.score_bits, cfg.word_bits).communication
+
+
+def compress_round(W: jnp.ndarray, mean: jnp.ndarray | None,
+                   x: jnp.ndarray, cfg: CompressionConfig,
+                   c_max: int,
+                   mask: jnp.ndarray | None = None,
+                   interpret: bool | None = None) -> RoundCompression:
+    """Compress one (n, p) measurement round against basis W (p, q).
+
+    Unquantized (``score_bits == 0``): the fused Pallas kernel emits
+    scores, reconstruction and flags in one pass.  Quantized: the kernel
+    composition project → quantize → reconstruct → flag (the quantizer
+    needs the whole round's scores to set the per-component scales, so the
+    single-pass fusion doesn't apply — see EXPERIMENTS.md).
+
+    ``mask`` is the round's (p,) or (n, p) liveness/validity array: dead
+    sensors contribute no score record, raise no notification, and are
+    excluded from ``max_err`` (no guarantee is owed for a sensor that sent
+    nothing).  Books the Sec.-2.4.1 packet bill via
+    :func:`repro.core.costs.quantized_supervised_round_cost`.
+    """
+    n, p = x.shape
+    q = W.shape[1]
+    eps = cfg.epsilon
+    x = jnp.asarray(x, jnp.float32)
+    if mask is None:
+        mask2d = jnp.ones((n, p), jnp.float32)
+    else:
+        mask2d = jnp.asarray(mask, jnp.float32)
+        if mask2d.ndim == 1:
+            mask2d = jnp.broadcast_to(mask2d[None, :], (n, p))
+
+    if cfg.score_bits == 0:
+        z, x_hat, flagged = ops.supervised_compress(
+            x, W, mean, epsilon=eps, mask=mask2d, interpret=interpret)
+    else:
+        mean_row = (jnp.zeros((p,), jnp.float32) if mean is None
+                    else jnp.asarray(mean, jnp.float32))
+        z_full = ops.pca_project((x - mean_row[None, :]) * mask2d, W,
+                                 interpret=interpret)
+        z, _ = quantize_scores(z_full, cfg.score_bits)
+        x_hat = ops.pca_reconstruct(z, W, interpret=interpret) \
+            + mean_row[None, :]
+        flagged = (jnp.abs(x - x_hat) > eps) & (mask2d > 0.0)
+
+    fl = flagged.astype(jnp.float32)
+    x_sink = jnp.where(flagged, x, x_hat)
+    err = jnp.abs(x - x_sink) * mask2d          # dead sensors owe no bound
+    n_flagged = jnp.sum(fl)
+    a_pk, f_pk = epoch_packet_split(q, c_max, cfg)
+    return RoundCompression(
+        z=z,
+        x_sink=x_sink if cfg.emit_reconstruction else None,
+        flagged=fl if cfg.emit_reconstruction else None,
+        max_err=jnp.max(err),
+        extra_packets=n_flagged,
+        score_packets=jnp.asarray(a_pk),
+        feedback_packets=jnp.asarray(f_pk),
+        bits_on_air=(a_pk + f_pk) * cfg.word_bits
+        + n_flagged * cfg.word_bits,
+    )

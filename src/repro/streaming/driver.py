@@ -16,6 +16,14 @@ Layering (DESIGN.md Sec. 8.3):
   networks axis split over the mesh data axis
   (:func:`repro.distributed.sharding.network_axis_spec`); per-network state
   never crosses devices, so the fleet scales linearly with chips.
+
+With ``StreamConfig.compression`` set, every round additionally runs the
+ε-supervised compression stage (:mod:`repro.streaming.compressor`) against
+the slot's current basis: the fused Pallas kernel emits the scores the
+sink decodes, the ε-true sink view, and the notification mask, and the
+Sec.-2.4.1 packet bill (scores A + feedback F + flagged raws, lossy-scaled)
+is booked into the same per-network communication account as the
+scheduler's Table-1 costs.
 """
 
 from __future__ import annotations
@@ -27,6 +35,10 @@ from typing import NamedTuple
 import jax
 import jax.numpy as jnp
 
+from repro.core.faults import expected_transmissions
+from repro.streaming.compressor import (CompressionConfig, RoundCompression,
+                                        compress_round,
+                                        compression_round_cost)
 from repro.streaming.online_cov import (OnlineCovariance, online_init,
                                         online_update)
 from repro.streaming.scheduler import RecomputeScheduler, SchedulerState
@@ -52,6 +64,7 @@ class StreamConfig:
     link_loss: float = 0.0          # per-hop packet loss (cost booking)
     max_retries: int = 3            # ARQ retransmission budget per packet
     interpret: bool | None = None   # Pallas interpret override (None = auto)
+    compression: CompressionConfig | None = None  # ε-supervised stage
 
     def scheduler(self) -> RecomputeScheduler:
         return RecomputeScheduler(
@@ -70,12 +83,31 @@ class StreamState(NamedTuple):
 
 
 class RoundMetrics(NamedTuple):
-    """Per-round observability record (stacked by scan over time)."""
+    """Per-round observability record (stacked by scan over time).
+
+    ``compression`` is ``None`` when the config carries no compression
+    stage (None is an empty pytree node, so both variants scan/vmap/shard
+    cleanly — the pytree structure is fixed per StreamConfig).
+    """
 
     rho: jnp.ndarray                # retained fraction before any refresh
     did_refresh: jnp.ndarray        # bool — scheduler fired this round
     refreshes: jnp.ndarray          # cumulative refresh count
     comm_packets: jnp.ndarray       # cumulative communication (packets)
+    compression: RoundCompression | None = None  # ε-supervised output
+
+
+def _metrics_template(cfg: "StreamConfig") -> RoundMetrics:
+    """A structure-only RoundMetrics matching cfg (for shard_map out_specs)."""
+    comp = None
+    if cfg.compression is not None:
+        emit = cfg.compression.emit_reconstruction
+        comp = RoundCompression(
+            z=0, x_sink=0 if emit else None, flagged=0 if emit else None,
+            max_err=0, extra_packets=0, score_packets=0,
+            feedback_packets=0, bits_on_air=0)
+    return RoundMetrics(rho=0, did_refresh=0, refreshes=0, comm_packets=0,
+                        compression=comp)
 
 
 def stream_init(cfg: StreamConfig, key: jax.Array,
@@ -114,11 +146,29 @@ def stream_step(cfg: StreamConfig, state: StreamState, x_round: jnp.ndarray,
         alive = mask
     sched, rho, fired = cfg.scheduler().step(state.sched, cov, state.rounds,
                                              churn=churn)
+    compression = None
+    if cfg.compression is not None:
+        # compress this round against the slot's CURRENT basis (post-step W)
+        # and the live mean estimate of the online covariance — the same
+        # quantities the deployment would have flooded to the nodes
+        mean_est = cov.s / jnp.maximum(cov.t, 1.0)
+        compression = compress_round(
+            sched.W, mean_est, x_round, cfg.compression, cfg.c_max,
+            mask=mask, interpret=cfg.interpret)
+        # book the Sec.-2.4.1 epoch: scores A + feedback F (with the scale
+        # flood at the quantized budget), plus the flagged raws — every
+        # packet paying the same expected ARQ retransmissions as the
+        # scheduler's bill
+        factor = expected_transmissions(cfg.link_loss, cfg.max_retries)
+        flagfree = compression_round_cost(cfg.q, cfg.c_max, cfg.compression)
+        bill = (flagfree + compression.extra_packets) * factor
+        sched = sched._replace(comm_packets=sched.comm_packets + bill)
     new = StreamState(cov=cov, sched=sched, rounds=state.rounds + 1,
                       alive=alive)
     metrics = RoundMetrics(rho=rho, did_refresh=fired,
                            refreshes=sched.refreshes,
-                           comm_packets=sched.comm_packets)
+                           comm_packets=sched.comm_packets,
+                           compression=compression)
     return new, metrics
 
 
@@ -197,9 +247,7 @@ def sharded_stream_run(cfg: StreamConfig, mesh, states: StreamState,
         in_specs=(jax.tree.map(lambda _: spec, states),
                   spec),
         out_specs=(jax.tree.map(lambda _: spec, states),
-                   jax.tree.map(lambda _: spec,
-                                RoundMetrics(rho=0, did_refresh=0,
-                                             refreshes=0, comm_packets=0))),
+                   jax.tree.map(lambda _: spec, _metrics_template(cfg))),
         check_rep=False,
     )
     return fm(states, xs)

@@ -1,0 +1,473 @@
+"""Device-resident compression tier vs. the NumPy oracle.
+
+The differential suite for the fused ε-supervised Pallas pass
+(kernels/pca_project.py::supervised_compress_pallas), the streaming
+compressor stage, the cost booking, and the serving engine integration —
+always against `core/compression.py`, which stays the host-side oracle.
+
+Shared convention under test (ISSUE satellite): flag on the *strict*
+``err > eps``, guarantee asserted as the *closed* ``<= eps`` everywhere,
+identically on the device tier and the NumPy oracle.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ModuleNotFoundError:        # optional dev dependency
+    def given(*args, **kwargs):
+        return lambda f: f
+
+    def settings(*args, **kwargs):
+        return lambda f: f
+
+    class _StubStrategies:
+        def integers(self, *args, **kwargs):
+            return None
+
+        def floats(self, *args, **kwargs):
+            return None
+
+    st = _StubStrategies()
+
+from repro.core import costs
+from repro.core.compression import SupervisedCompressor, pcag_primitives, scores
+from repro.kernels import ops, ref
+from repro.streaming import (CompressionConfig, StreamConfig, compress_round,
+                             quantize_scores, stream_init, stream_run)
+
+P, Q, H = 32, 3, 4
+
+
+def _data(seed, n, p, q):
+    rng = np.random.default_rng(seed)
+    scale = np.linspace(3.0, 0.7, p)
+    x = (rng.normal(size=(n, p)) * scale).astype(np.float32)
+    W = np.linalg.qr(rng.normal(size=(p, q)))[0].astype(np.float32)
+    mean = x.mean(axis=0).astype(np.float32)
+    return x, W, mean
+
+
+def _flags_match(fl_dev, fl_ref, err, eps, tol=1e-4):
+    """Flags must agree wherever the error is not within float noise of the
+    open/closed boundary (two correct implementations may disagree only
+    there)."""
+    fl_dev, fl_ref = np.asarray(fl_dev), np.asarray(fl_ref)
+    borderline = np.abs(np.asarray(err) - eps) < tol
+    assert (fl_dev == fl_ref)[~borderline].all()
+
+
+class TestFusedKernelVsOracles:
+    @pytest.mark.parametrize("n,p,q", [
+        (64, 32, 3),          # block-divisible
+        (100, 97, 5),         # non-divisible (prime p)
+        (7, 13, 2),           # tiny, below every preferred tile
+    ])
+    @pytest.mark.parametrize("eps", [0.0, 0.4, 1e30])
+    def test_matches_jnp_ref(self, n, p, q, eps):
+        """Fused kernel == unfused jnp reference, all-alive."""
+        x, W, mean = _data(n * p + q, n, p, q)
+        z, xh, fl = ops.supervised_compress(
+            jnp.asarray(x), jnp.asarray(W), jnp.asarray(mean),
+            epsilon=eps, interpret=True)
+        zr, xr, fr = ref.supervised_compress(
+            jnp.asarray(x), jnp.asarray(W), jnp.asarray(mean),
+            jnp.ones((n, p), jnp.float32), eps)
+        np.testing.assert_allclose(np.asarray(z), np.asarray(zr),
+                                   rtol=1e-5, atol=1e-5)
+        np.testing.assert_allclose(np.asarray(xh), np.asarray(xr),
+                                   rtol=1e-5, atol=1e-5)
+        _flags_match(fl, fr, np.abs(x - np.asarray(xr)), eps)
+        # the guarantee, closed bound, on the substituted sink view
+        x_sink = np.where(np.asarray(fl), x, np.asarray(xh))
+        assert np.abs(x_sink - x).max() <= eps + 1e-5
+
+    @pytest.mark.parametrize("n,p,q", [(64, 32, 3), (100, 97, 5)])
+    def test_matches_numpy_oracle_fp32(self, n, p, q):
+        """Device tier vs core/compression.py at the SAME dtype (fp32) —
+        the satellite dtype fix makes this comparison meaningful."""
+        eps = 0.35
+        x, W, mean = _data(seed=5, n=n, p=p, q=q)
+        comp = SupervisedCompressor(W, mean, epsilon=eps, dtype=np.float32)
+        assert comp.W.dtype == np.float32          # dtype defaulted from W
+        out = comp.run(x)
+        z, xh, fl = ops.supervised_compress(
+            jnp.asarray(x), jnp.asarray(W), jnp.asarray(mean),
+            epsilon=eps, interpret=True)
+        zo = scores(W, x, mean)                    # dtype defaults to fp32
+        assert zo.dtype == np.float32
+        np.testing.assert_allclose(np.asarray(z), zo, rtol=1e-4, atol=1e-4)
+        x_sink = np.where(np.asarray(fl), x, np.asarray(xh))
+        np.testing.assert_allclose(x_sink, out.x_hat, rtol=1e-4, atol=1e-4)
+        _flags_match(fl, out.flagged, np.abs(x - np.asarray(xh)), eps)
+        # both paths honor the closed bound
+        assert np.abs(out.x_hat - x).max() <= eps + 1e-6
+        assert np.abs(x_sink - x).max() <= eps + 1e-5
+
+    def test_float64_oracle_is_default_for_float64_input(self):
+        """dtype parameter: float64 in, float64 arithmetic out (back-compat)."""
+        rng = np.random.default_rng(0)
+        W = np.linalg.qr(rng.normal(size=(8, 2)))[0]
+        comp = SupervisedCompressor(W, np.zeros(8), epsilon=0.1)
+        assert comp.W.dtype == np.float64
+        out = comp.run(rng.normal(size=(4, 8)))
+        assert out.x_hat.dtype == np.float64
+        assert scores(W, rng.normal(size=(4, 8))).dtype == np.float64
+
+    def test_epsilon_edges(self):
+        """ε = 0: every live sensor with any error notifies and the sink is
+        exact; ε = inf-ish: nobody notifies and the sink is pure PCAg."""
+        x, W, mean = _data(seed=3, n=16, p=P, q=Q)
+        z, xh, fl = ops.supervised_compress(
+            jnp.asarray(x), jnp.asarray(W), jnp.asarray(mean),
+            epsilon=0.0, interpret=True)
+        x_sink = np.where(np.asarray(fl), x, np.asarray(xh))
+        np.testing.assert_array_equal(x_sink[np.asarray(fl)],
+                                      x[np.asarray(fl)])
+        assert np.abs(x_sink - x).max() == 0.0     # <= 0: exact
+        _, xh2, fl2 = ops.supervised_compress(
+            jnp.asarray(x), jnp.asarray(W), jnp.asarray(mean),
+            epsilon=1e30, interpret=True)
+        assert not np.asarray(fl2).any()
+
+    def test_masked_dead_sensors(self):
+        """Dead sensors send no score record (their contribution to Z is
+        absent), never notify, and are owed no bound."""
+        x, W, mean = _data(seed=11, n=24, p=P, q=Q)
+        alive = np.ones(P, np.float32)
+        alive[5] = alive[17] = 0.0
+        z, xh, fl = ops.supervised_compress(
+            jnp.asarray(x), jnp.asarray(W), jnp.asarray(mean),
+            epsilon=0.3, mask=jnp.asarray(alive), interpret=True)
+        # scores equal the oracle computed on the masked centered data
+        zo = ((x - mean) * alive) @ W
+        np.testing.assert_allclose(np.asarray(z), zo, rtol=1e-4, atol=1e-4)
+        assert not np.asarray(fl)[:, [5, 17]].any()
+        # live sensors still honor the bound
+        x_sink = np.where(np.asarray(fl), x, np.asarray(xh))
+        live_cols = alive > 0
+        assert np.abs(x_sink - x)[:, live_cols].max() <= 0.3 + 1e-5
+
+    def test_batched_matches_per_network_loop(self):
+        Bn = 3
+        rng = np.random.default_rng(2)
+        xb = rng.normal(size=(Bn, 10, 29)).astype(np.float32)   # odd p
+        wb = rng.normal(size=(Bn, 29, 4)).astype(np.float32)
+        zb, xhb, flb = ops.supervised_compress_batched(
+            jnp.asarray(xb), jnp.asarray(wb), epsilon=0.5, interpret=True)
+        assert zb.shape == (Bn, 10, 4) and xhb.shape == (Bn, 10, 29)
+        for i in range(Bn):
+            zi, xi, fi = ops.supervised_compress(
+                jnp.asarray(xb[i]), jnp.asarray(wb[i]), epsilon=0.5,
+                interpret=True)
+            np.testing.assert_array_equal(np.asarray(zb[i]), np.asarray(zi))
+            np.testing.assert_array_equal(np.asarray(flb[i]), np.asarray(fi))
+
+
+class TestQuantizer:
+    def test_identity_at_zero_bits(self):
+        z = jnp.asarray(np.random.default_rng(0).normal(size=(8, 3)),
+                        jnp.float32)
+        zq, scale = quantize_scores(z, 0)
+        assert scale is None
+        np.testing.assert_array_equal(np.asarray(zq), np.asarray(z))
+
+    def test_rejects_one_bit(self):
+        z = jnp.zeros((4, 2), jnp.float32)
+        with pytest.raises(ValueError):
+            quantize_scores(z, 1)
+        with pytest.raises(ValueError):
+            CompressionConfig(epsilon=0.1, score_bits=1)
+        with pytest.raises(ValueError):
+            CompressionConfig(epsilon=-1.0)
+
+    def test_rejects_bad_word_bits(self):
+        with pytest.raises(ValueError):
+            CompressionConfig(epsilon=0.1, word_bits=0)
+        with pytest.raises(ValueError):
+            CompressionConfig(epsilon=0.1, word_bits=-8)
+        with pytest.raises(ValueError):
+            CompressionConfig(epsilon=0.1, score_bits=16, word_bits=8)
+
+    def test_error_bounded_and_shrinks_with_bits(self):
+        """Round-to-nearest: |z - z_q| <= scale/2; more bits, less error."""
+        z = jnp.asarray(np.random.default_rng(1).normal(size=(64, 4)),
+                        jnp.float32)
+        errs = []
+        for bits in (2, 4, 8, 12):
+            zq, scale = quantize_scores(z, bits)
+            err = np.abs(np.asarray(zq) - np.asarray(z))
+            assert (err <= np.asarray(scale)[None, :] / 2 + 1e-7).all()
+            errs.append(err.max())
+        assert errs == sorted(errs, reverse=True)
+
+    def test_guarantee_survives_quantization(self):
+        """Nodes flag against the dequantized reconstruction the sink uses,
+        so even 2-bit scores keep the sink within ε."""
+        x, W, mean = _data(seed=4, n=20, p=P, q=Q)
+        for bits in (2, 4, 8):
+            out = compress_round(jnp.asarray(W), jnp.asarray(mean),
+                                 jnp.asarray(x),
+                                 CompressionConfig(epsilon=0.25,
+                                                   score_bits=bits),
+                                 c_max=4, interpret=True)
+            assert float(out.max_err) <= 0.25 + 1e-5
+
+
+class TestStreamingIntegration:
+    def _cfg(self, **kw):
+        return StreamConfig(p=P, q=Q, halfwidth=H, forgetting=0.95,
+                            drift_threshold=0.08, warmup_rounds=4,
+                            interpret=True, **kw)
+
+    def _xs(self, rounds=10, n=8):
+        scale = jnp.linspace(3.0, 0.7, P)
+        return jax.random.normal(jax.random.PRNGKey(0),
+                                 (rounds, n, P)) * scale
+
+    def test_guarantee_every_round(self):
+        eps = 0.5
+        cfg = self._cfg(compression=CompressionConfig(epsilon=eps))
+        fin, m = stream_run(cfg, stream_init(cfg, jax.random.PRNGKey(1)),
+                            self._xs())
+        comp = m.compression
+        assert comp is not None and comp.z.shape == (10, 8, Q)
+        assert float(np.asarray(comp.max_err).max()) <= eps + 1e-6
+        # sink view is epsilon-true against the raw stream, round by round
+        xs = np.asarray(self._xs())
+        x_sink = np.asarray(comp.x_sink)
+        assert np.abs(x_sink - xs).max() <= eps + 1e-5
+
+    def test_booked_bill_reconciles_exactly(self):
+        """bill(with compression) - bill(without) == the supervised epoch
+        bill rebuilt from the metrics' own extras, round by round."""
+        eps = 0.4
+        ccfg = CompressionConfig(epsilon=eps)
+        cfg_c = self._cfg(compression=ccfg)
+        cfg_0 = self._cfg()
+        xs = self._xs()
+        fin_c, m_c = stream_run(cfg_c, stream_init(cfg_c,
+                                                   jax.random.PRNGKey(1)), xs)
+        fin_0, m_0 = stream_run(cfg_0, stream_init(cfg_0,
+                                                   jax.random.PRNGKey(1)), xs)
+        assert m_0.compression is None
+        flagfree = costs.quantized_supervised_round_cost(
+            Q, cfg_c.c_max, 0).communication
+        extras = np.asarray(m_c.compression.extra_packets, np.float64)
+        expected = (flagfree * len(extras) + extras.sum())
+        np.testing.assert_allclose(
+            float(fin_c.sched.comm_packets) - float(fin_0.sched.comm_packets),
+            expected, rtol=1e-5)
+        # compression must not perturb the learning path at all
+        np.testing.assert_array_equal(np.asarray(fin_c.sched.W),
+                                      np.asarray(fin_0.sched.W))
+        np.testing.assert_array_equal(np.asarray(m_c.rho),
+                                      np.asarray(m_0.rho))
+
+    def test_lossy_booking_scales_by_expected_transmissions(self):
+        from repro.core.faults import expected_transmissions
+        eps, loss = 0.4, 0.2
+        ccfg = CompressionConfig(epsilon=eps)
+        cfg_c = self._cfg(compression=ccfg, link_loss=loss, max_retries=3)
+        cfg_0 = self._cfg(link_loss=loss, max_retries=3)
+        xs = self._xs()
+        fin_c, m_c = stream_run(cfg_c, stream_init(cfg_c,
+                                                   jax.random.PRNGKey(1)), xs)
+        fin_0, _ = stream_run(cfg_0, stream_init(cfg_0,
+                                                 jax.random.PRNGKey(1)), xs)
+        factor = expected_transmissions(loss, 3)
+        flagfree = costs.quantized_supervised_round_cost(
+            Q, cfg_c.c_max, 0).communication
+        extras = np.asarray(m_c.compression.extra_packets, np.float64)
+        expected = (flagfree * len(extras) + extras.sum()) * factor
+        np.testing.assert_allclose(
+            float(fin_c.sched.comm_packets) - float(fin_0.sched.comm_packets),
+            expected, rtol=1e-4)
+
+    def test_masked_stream_owes_no_bound_to_dead(self):
+        eps = 0.5
+        cfg = self._cfg(compression=CompressionConfig(epsilon=eps))
+        xs = self._xs()
+        masks = np.ones((10, P), np.float32)
+        masks[5:, :10] = 0.0                      # a death wave
+        fin, m = stream_run(cfg, stream_init(cfg, jax.random.PRNGKey(1)),
+                            xs, jnp.asarray(masks))
+        comp = m.compression
+        assert float(np.asarray(comp.max_err).max()) <= eps + 1e-6
+        # dead sensors never notify
+        fl = np.asarray(comp.flagged)             # (rounds, n, p)
+        assert not fl[5:, :, :10].any()
+
+    def test_sharded_agrees_with_batched_under_compression(self):
+        from repro.streaming import batched_stream_run, sharded_stream_run
+        from repro.streaming.driver import batched_stream_init
+        cfg = self._cfg(compression=CompressionConfig(epsilon=0.5))
+        Bn = 2
+        states = batched_stream_init(cfg, jax.random.PRNGKey(0), Bn)
+        xsb = jax.random.normal(jax.random.PRNGKey(1), (Bn, 6, 8, P))
+        mesh = jax.make_mesh((1, 1), ("data", "model"))
+        fin_v, m_v = batched_stream_run(cfg, states, xsb)
+        fin_s, m_s = sharded_stream_run(cfg, mesh, states, xsb)
+        np.testing.assert_allclose(
+            np.asarray(m_v.compression.max_err),
+            np.asarray(m_s.compression.max_err), rtol=1e-6)
+        np.testing.assert_allclose(np.asarray(fin_v.sched.comm_packets),
+                                   np.asarray(fin_s.sched.comm_packets))
+
+    def test_emit_reconstruction_off_drops_arrays(self):
+        cfg = self._cfg(compression=CompressionConfig(
+            epsilon=0.5, emit_reconstruction=False))
+        fin, m = stream_run(cfg, stream_init(cfg, jax.random.PRNGKey(1)),
+                            self._xs(rounds=4))
+        assert m.compression.x_sink is None
+        assert m.compression.flagged is None
+        assert m.compression.z.shape == (4, 8, Q)
+
+
+class TestEngineIntegration:
+    def test_results_carry_compression_books(self):
+        eps = 0.6
+        from repro.serve.engine import StreamingPCAEngine, StreamRequest
+        cfg = StreamConfig(p=P, q=Q, halfwidth=H, forgetting=0.95,
+                           warmup_rounds=3, interpret=True,
+                           compression=CompressionConfig(epsilon=eps))
+        eng = StreamingPCAEngine(cfg, slots=2, seed=0)
+        rng = np.random.default_rng(0)
+        reqs = [StreamRequest(rounds=(rng.normal(size=(8, 4, P)) *
+                                      np.linspace(3, 0.7, P))
+                              .astype(np.float32)) for _ in range(3)]
+        for r in reqs:
+            eng.submit(r)
+        eng.run_until_done()
+        for r in reqs:
+            assert r.done and r.result.reason == "completed"
+            assert r.result.compression_max_err is not None
+            assert r.result.compression_max_err <= eps + 1e-6
+            assert r.result.compression_extra_packets >= 0
+            assert r.result.compression_bits_on_air > 0
+        # slots expose the last round's device output
+        assert eng.last_compression is not None
+        assert eng.last_compression.z.shape == (2, 4, Q)
+
+    def test_no_compression_results_keep_none_fields(self):
+        from repro.serve.engine import StreamingPCAEngine, StreamRequest
+        cfg = StreamConfig(p=P, q=Q, halfwidth=H, interpret=True)
+        eng = StreamingPCAEngine(cfg, slots=1, seed=0)
+        req = StreamRequest(rounds=np.random.default_rng(0)
+                            .normal(size=(4, 4, P)).astype(np.float32))
+        eng.submit(req)
+        eng.run_until_done()
+        assert req.result.compression_max_err is None
+
+
+class TestCosts:
+    def test_quantized_zero_bits_reproduces_unquantized(self):
+        a = costs.supervised_round_cost(5, 4, flagged=7)
+        b = costs.quantized_supervised_round_cost(5, 4, 0, flagged=7)
+        assert a == b
+
+    def test_quantized_comm_books_scale_flood(self):
+        """Quantized scores pay bits/word of the full bill PLUS the q
+        full-precision per-component scales on the F flood every round —
+        so quantization wins only below word_bits/2 bits."""
+        q, c = 5, 4
+        unit = q * (c + 1)
+        full = costs.supervised_round_cost(q, c).communication
+        assert full == 2 * unit
+        for bits in (2, 8, 16):
+            comm = costs.quantized_supervised_round_cost(
+                q, c, bits).communication
+            np.testing.assert_allclose(comm, full * bits / 32 + unit)
+        assert costs.quantized_supervised_round_cost(
+            q, c, 8).communication < full
+        np.testing.assert_allclose(
+            costs.quantized_supervised_round_cost(q, c, 16).communication,
+            full)    # break-even at word_bits / 2
+
+    def test_flagged_raws_stay_full_word(self):
+        q, c = 5, 4
+        comm = costs.quantized_supervised_round_cost(
+            q, c, 8, flagged=10).communication
+        np.testing.assert_allclose(
+            comm,
+            costs.supervised_round_cost(q, c).communication / 4
+            + q * (c + 1) + 10)
+
+    @pytest.mark.parametrize("bits", [0, 2, 8, 16])
+    def test_split_sums_to_cost_model(self, bits):
+        """epoch_packet_split (the driver/metrics source of truth) must sum
+        exactly to the cost model's flag-free communication."""
+        from repro.streaming.compressor import epoch_packet_split
+        cfg = CompressionConfig(epsilon=0.5, score_bits=bits)
+        a_pk, f_pk = epoch_packet_split(Q, 4, cfg)
+        np.testing.assert_allclose(
+            a_pk + f_pk,
+            costs.quantized_supervised_round_cost(Q, 4, bits).communication)
+
+
+class TestPacketProperty:
+    """Booked score/extra packets == simulator-counted packets."""
+
+    @pytest.fixture(autouse=True)
+    def _require_hypothesis(self):
+        pytest.importorskip("hypothesis")
+
+    @settings(max_examples=15, deadline=None)
+    @given(seed=st.integers(0, 2**16), loss=st.floats(0.0, 0.5),
+           retries=st.integers(0, 4), q=st.integers(1, 6))
+    def test_score_epoch_booked_equals_counted(self, seed, loss, retries, q):
+        """One supervised epoch's A phase (q-sized score records through
+        lossy_aggregate_tree) books exactly the packets the simulator
+        counts, and at zero loss the highest-node load is the
+        q(C*+1) of supervised_round_cost's A half."""
+        from repro.core.faults import FaultModel
+        from repro.core.topology import build_topology, grid_layout
+
+        rng = np.random.default_rng(seed)
+        topo = build_topology(grid_layout(4, 5, jitter=0.2, seed=seed),
+                              radio_range=1.8)
+        tree = topo.tree
+        p = tree.p
+        W = rng.normal(size=(p, q))
+        x = rng.normal(size=p)
+        from repro.core.aggregation import lossy_aggregate_tree
+        res = lossy_aggregate_tree(
+            tree, [(i, x[i]) for i in range(p)], pcag_primitives(W),
+            FaultModel(link_loss=loss, max_retries=retries), rng)
+        booked = costs.lossy_epoch_load(tree, res.record_sizes, res.attempts,
+                                        res.delivered, res.active)
+        np.testing.assert_array_equal(booked, res.packets)
+        assert (res.record_sizes == q).all()        # score records are q wide
+        if loss == 0.0:
+            # the value is the oracle scores and the max-node load is the
+            # A half of supervised_round_cost at the tree's own C*
+            np.testing.assert_allclose(res.value, scores(W, x), atol=1e-9)
+            children = np.bincount(tree.parent[tree.parent >= 0],
+                                   minlength=p)
+            c_max = int(children.max())
+            assert res.packets.max() == q * (c_max + 1)
+            half_a = costs.supervised_round_cost(q, c_max).communication / 2
+            assert res.packets.max() == half_a
+
+    @settings(max_examples=10, deadline=None)
+    @given(seed=st.integers(0, 2**16), eps=st.floats(0.05, 1.0))
+    def test_extras_booked_equals_flag_count(self, seed, eps):
+        """The oracle's extra_packets books one raw packet per notification
+        — exactly what the sink substitutes (and what the streaming tier
+        adds to the bill per round)."""
+        rng = np.random.default_rng(seed)
+        x = rng.normal(size=(12, 16)).astype(np.float32)
+        W = np.linalg.qr(rng.normal(size=(16, 3)))[0].astype(np.float32)
+        comp = SupervisedCompressor(W, x.mean(axis=0), epsilon=eps)
+        out = comp.run(x)
+        assert out.extra_packets.sum() == out.flagged.sum()
+        subst = (out.x_hat == x) & out.flagged
+        assert subst.sum() == out.flagged.sum()
+        dev = compress_round(jnp.asarray(W),
+                             jnp.asarray(x.mean(axis=0)), jnp.asarray(x),
+                             CompressionConfig(epsilon=float(eps)),
+                             c_max=4, interpret=True)
+        assert float(dev.extra_packets) == np.asarray(dev.flagged).sum()

@@ -171,6 +171,66 @@ class TestPcaProject:
         out = ops.pca_reconstruct(z, w, block_n=bn, block_p=bp, interpret=True)
         _check(out, ref.pca_reconstruct(z, w), jnp.float32)
 
+    @pytest.mark.parametrize("n,p,q", [
+        (100, 97, 5),        # p prime: the old auto-pick tiled by 1
+        (37, 53, 3),         # both prime
+        (100, 48, 4),        # n awkward, p fine
+    ])
+    def test_project_reconstruct_nondivisible(self, n, p, q):
+        """Regression: awkward (prime/odd) shapes must work through the
+        padded wrappers and be BIT-IDENTICAL to the zero-padded kernel
+        (the padded oracle): padded feature columns multiply zero basis
+        rows, so every fp32 partial sum they add is exactly 0.0."""
+        from repro.kernels.ops import _pad_dim, _pick_block_padded
+        from repro.kernels.pca_project import (pca_project_pallas,
+                                               pca_reconstruct_pallas)
+        k1, k2 = jax.random.split(jax.random.PRNGKey(n * p + q))
+        x = _rand(k1, (n, p), jnp.float32)
+        w = _rand(k2, (p, q), jnp.float32)
+
+        z = ops.pca_project(x, w, interpret=True)
+        assert z.shape == (n, q)
+        _check(z, ref.pca_project(x, w), jnp.float32, scale=p)
+        bn = _pick_block_padded(n, 128)
+        bk = _pick_block_padded(p, 512)
+        xp = jnp.pad(x, ((0, _pad_dim(n, bn) - n), (0, _pad_dim(p, bk) - p)))
+        wp = jnp.pad(w, ((0, _pad_dim(p, bk) - p), (0, 0)))
+        oracle = pca_project_pallas(xp, wp, block_n=bn, block_k=bk,
+                                    interpret=True)[:n]
+        np.testing.assert_array_equal(np.asarray(z), np.asarray(oracle))
+
+        xh = ops.pca_reconstruct(z, w, interpret=True)
+        assert xh.shape == (n, p)
+        _check(xh, ref.pca_reconstruct(z, w), jnp.float32, scale=q)
+        bp = _pick_block_padded(p, 512)
+        zp = jnp.pad(z, ((0, _pad_dim(n, bn) - n), (0, 0)))
+        oracle_r = pca_reconstruct_pallas(zp, wp, block_n=bn, block_p=bp,
+                                          interpret=True)[:n, :p]
+        np.testing.assert_array_equal(np.asarray(xh), np.asarray(oracle_r))
+
+    def test_explicit_nondividing_block_pads_instead_of_crashing(self):
+        """An explicit block that does not divide the axis used to trip the
+        kernel asserts; the wrappers now pad-to-block and slice."""
+        k1, k2 = jax.random.split(jax.random.PRNGKey(7))
+        x = _rand(k1, (100, 97), jnp.float32)
+        w = _rand(k2, (97, 4), jnp.float32)
+        z = ops.pca_project(x, w, block_n=32, block_k=64, interpret=True)
+        _check(z, ref.pca_project(x, w), jnp.float32, scale=97)
+        xh = ops.pca_reconstruct(z, w, block_n=32, block_p=64, interpret=True)
+        _check(xh, ref.pca_reconstruct(z, w), jnp.float32, scale=4)
+
+    def test_divisible_shapes_bit_identical_to_unpadded_kernel(self):
+        """The padding path must be invisible on divisible shapes: the
+        wrapper output equals the direct kernel call bit-for-bit."""
+        from repro.kernels.pca_project import pca_project_pallas
+        k1, k2 = jax.random.split(jax.random.PRNGKey(9))
+        x = _rand(k1, (128, 256), jnp.float32)
+        w = _rand(k2, (256, 8), jnp.float32)
+        out = ops.pca_project(x, w, block_n=64, block_k=128, interpret=True)
+        direct = pca_project_pallas(x, w, block_n=64, block_k=128,
+                                    interpret=True)
+        np.testing.assert_array_equal(np.asarray(out), np.asarray(direct))
+
     def test_project_reconstruct_roundtrip_orthonormal(self):
         """W orthonormal + X in span(W)  =>  reconstruct(project(X)) == X."""
         rng = np.random.default_rng(0)
