@@ -1,0 +1,167 @@
+"""Event-tier benchmark: fused T²/SPE monitoring and the TPR/FPR-vs-α sweep.
+
+Three row families, the device-tier analogue of the paper's Sec.-2.4.3
+evaluator:
+
+* ``events/monitor`` — the fused Pallas monitoring kernel (project + T² +
+  SPE in one pass, reconstruction VMEM-resident) on a fleet batch;
+* ``events/oracle`` — the host-side NumPy evaluator
+  (:class:`repro.core.events.LowVarianceDetector`) on the same block (the
+  path the tier replaced), for the speedup denominator;
+* ``events/stream@{alpha}`` — the full streaming fleet (cov fold +
+  scheduler + detection stage) with injected localized AC plateaus at each
+  swept false-alarm rate: derived column ``tpr|fpr|alarms`` charts the
+  Sec.-2.4.3 operating curve (the EXPERIMENTS.md Events sweep).
+
+Run standalone to emit a JSON artifact for the detection trajectory:
+
+    PYTHONPATH=src:. python benchmarks/event_bench.py \
+        --smoke --json BENCH_events.json
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import row, timed
+
+ALPHAS = (1e-2, 1e-3, 1e-4)
+B, N, P, Q, H = 6, 8, 32, 3, 4
+NOISE = 0.8
+WARMUP, CALIB = 6, 8
+EVENT_START, EVENT_ROUNDS = 22, 8
+
+
+def _fleet_block(rng, n_rounds):
+    scale = np.concatenate([[4.0, 3.4, 2.8], np.full(P - 3, NOISE)])
+    x = (rng.normal(size=(B, n_rounds, N, P)) * scale).astype(np.float32)
+    return x
+
+
+def _inject(rng, xs, positions):
+    """One localized plateau on every odd network; returns the truth mask."""
+    from repro.sensors.dataset import inject_ac_event
+
+    n_rounds = xs.shape[1]
+    truth = np.zeros(xs.shape[:3], bool)
+    d_top = np.linalg.norm(positions[:, None, :] - positions[None, :3, :],
+                           axis=-1).min(axis=1)
+    candidates = np.nonzero(d_top > 10.0)[0]
+    for b in range(1, B, 2):
+        site = int(rng.choice(candidates))
+        flat, window = inject_ac_event(
+            xs[b].reshape(n_rounds * N, P), positions, site=site,
+            start=EVENT_START * N, duration=EVENT_ROUNDS * N,
+            amplitude=-5.0, footprint_m=8.0, ramp_epochs=5)
+        xs[b] = flat.reshape(n_rounds, N, P)
+        truth[b] = window.reshape(n_rounds, N)
+    return truth
+
+
+def _kernel_rows(n_repeat: int):
+    import jax
+    import jax.numpy as jnp
+
+    from repro.core.events import LowVarianceDetector
+    from repro.kernels import ops
+
+    out = []
+    rng = np.random.default_rng(0)
+    x = _fleet_block(rng, 1)[:, 0]                     # (B, N, P)
+    # the true top-q basis of the fleet block (axis-aligned by
+    # construction), so the derived T2 mean sits near its chi-square
+    # expectation q under correct standardization
+    W = np.eye(P, Q, dtype=np.float32)
+    mean = x.mean(axis=(0, 1)).astype(np.float32)
+    lam = np.array([16.0, 11.56, 7.84], np.float32)    # scale^2 of the top 3
+    xj, Wj = jnp.asarray(x), jnp.asarray(W)
+    mj, lj = jnp.asarray(mean), jnp.asarray(1.0 / lam)
+
+    def call():
+        z, t2, spe = ops.pca_monitor_batched(xj, Wj, mj, lj)
+        jax.block_until_ready(t2)
+        return t2, spe
+    call()                                             # compile outside timing
+    (t2, spe), us = timed(call, repeat=n_repeat)
+    out.append(row("events/monitor", us,
+                   f"T2 mean {float(np.asarray(t2).mean()):.2f}"
+                   f"|SPE mean {float(np.asarray(spe).mean()):.2f}"))
+
+    det = LowVarianceDetector(W, lam, mean, alpha=1e-3)
+    flat = x.reshape(-1, P)
+    _, us = timed(lambda: det.statistic(flat), repeat=n_repeat)
+    out.append(row("events/oracle", us, "numpy T2 evaluator"))
+    return out
+
+
+def _stream_rows(n_rounds: int, n_repeat: int):
+    import jax
+    import jax.numpy as jnp
+
+    from repro.core.topology import berkeley_like_layout
+    from repro.streaming import (DetectionConfig, StreamConfig,
+                                 batched_stream_run, stream_init)
+
+    out = []
+    positions = berkeley_like_layout(p=P, seed=7)
+    rng = np.random.default_rng(1)
+    xs = _fleet_block(rng, n_rounds)
+    truth = _inject(np.random.default_rng(2), xs, positions)
+    xsj = jnp.asarray(xs)
+    keys = jax.random.split(jax.random.PRNGKey(1), B)
+    for alpha in ALPHAS:
+        cfg = StreamConfig(p=P, q=Q, halfwidth=H, forgetting=0.98,
+                           drift_threshold=0.5, warmup_rounds=WARMUP,
+                           detection=DetectionConfig(alpha=alpha,
+                                                     calib_rounds=CALIB))
+        states = jax.vmap(lambda k: stream_init(cfg, k))(keys)
+
+        def _run(c=cfg, s=states):
+            res = batched_stream_run(c, s, xsj)
+            jax.block_until_ready(res[1].rho)
+            return res
+        _run()                                         # compile outside timing
+        (fin, met), us = timed(_run, repeat=n_repeat)
+        events = np.asarray(met.detection.events) > 0.5
+        armed = ~(np.asarray(met.detection.calibrating) > 0.5)
+        armed[:, :WARMUP + 1] = False
+        armed_e = np.repeat(armed[:, :, None], N, axis=2)
+        scored_t = truth & armed_e
+        scored_h = ~truth & armed_e
+        tpr = float(events[scored_t].mean()) if scored_t.any() else 0.0
+        fpr = float(events[scored_h].mean()) if scored_h.any() else 0.0
+        alarms = int(events.sum())
+        out.append(row(f"events/stream@{alpha}", us,
+                       f"tpr {tpr:.3f}|fpr {fpr:.4f}|{alarms} alarms"))
+    return out
+
+
+def run(smoke: bool = False):
+    n_repeat = 2 if smoke else 5
+    n_rounds = 34 if smoke else 60
+    return _kernel_rows(n_repeat) + _stream_rows(n_rounds, n_repeat)
+
+
+def main() -> int:
+    import argparse
+    import json
+    import sys
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--json", help="write rows to this JSON artifact path")
+    args = ap.parse_args()
+    rows = run(smoke=args.smoke)
+    print("name,us_per_call,derived")
+    for r in rows:
+        print(f"{r['name']},{r['us_per_call']},{r['derived']}")
+    if args.json:
+        with open(args.json, "w") as fh:
+            json.dump(rows, fh, indent=2)
+        print(f"wrote {args.json}", file=sys.stderr)
+    return 0
+
+
+if __name__ == "__main__":
+    import sys
+    sys.exit(main())

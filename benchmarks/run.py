@@ -19,11 +19,14 @@ def main() -> int:
                     help="also write the compression rows gathered during "
                          "this run to a JSON artifact (avoids re-running "
                          "the sweep just for the CI artifact)")
+    ap.add_argument("--events-json",
+                    help="also write the event-detection rows gathered "
+                         "during this run to a JSON artifact")
     args = ap.parse_args()
     if args.full and args.smoke:
         ap.error("--full and --smoke are mutually exclusive")
 
-    from benchmarks import (compression_bench, fault_bench,
+    from benchmarks import (compression_bench, event_bench, fault_bench,
                             fig7_retained_variance, fig9_comm_costs,
                             fig11_local_cov, fig13_pim_convergence,
                             fig14_load_vs_q, kernels_bench, streaming_bench,
@@ -41,10 +44,11 @@ def main() -> int:
         "streaming": lambda: streaming_bench.run(smoke=args.smoke),
         "fault": lambda: fault_bench.run(smoke=args.smoke),
         "compression": lambda: compression_bench.run(smoke=args.smoke),
+        "events": lambda: event_bench.run(smoke=args.smoke),
     }
 
     failed = 0
-    compression_rows = []
+    gathered: dict[str, list] = {"compression": [], "events": []}
     print("name,us_per_call,derived")
     for name, fn in modules.items():
         if args.only and args.only not in name:
@@ -52,15 +56,17 @@ def main() -> int:
         try:
             for r in fn():
                 print(f"{r['name']},{r['us_per_call']},{r['derived']}")
-                if name == "compression":
-                    compression_rows.append(r)
+                if name in gathered:
+                    gathered[name].append(r)
         except Exception as e:  # noqa: BLE001 — report and continue
             failed += 1
             print(f"{name}/ERROR,0,{type(e).__name__}: {e}", file=sys.stdout)
-    if args.compression_json and compression_rows:
-        import json
-        with open(args.compression_json, "w") as fh:
-            json.dump(compression_rows, fh, indent=2)
+    for path, rows in ((args.compression_json, gathered["compression"]),
+                       (args.events_json, gathered["events"])):
+        if path and rows:
+            import json
+            with open(path, "w") as fh:
+                json.dump(rows, fh, indent=2)
     sys.stdout.flush()
     return 1 if (args.smoke and failed) else 0
 

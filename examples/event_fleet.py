@@ -1,0 +1,139 @@
+"""Event-detecting serving: a fleet monitoring T²/SPE on the streaming path.
+
+The paper's third application (Sec. 2.4.3) is *event detection*: a
+network-scale anomaly invisible at any single node shows up as significant
+energy on components the healthy distribution does not excite.  This
+example runs that evaluator on the device tier: a fleet of networks streams
+through the jitted scan driver, every round passes through the fused Pallas
+monitoring kernel (project + T² + SPE in one pass, the reconstruction never
+leaves VMEM), and the detector re-arms its Wilson-Hilferty thresholds over
+a healthy window after the warmup basis refresh.
+
+Half the networks get an injected localized AC plateau
+(:func:`repro.sensors.dataset.inject_ac_event` — the Fig.-8 event family: a
+~8 m footprint, ~5 C at the site, network-coherent but small against each
+sensor's own variance).  The acceptance gate is the TPR/FPR envelope of
+tests/test_applications.py, now asserted ON DEVICE against the live basis:
+
+* detection rate inside the injected windows  > 80 %
+* false-alarm rate outside                    <  5 %
+
+Run:  PYTHONPATH=src python examples/event_fleet.py
+"""
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.topology import berkeley_like_layout
+from repro.sensors.dataset import inject_ac_event
+from repro.streaming import (DetectionConfig, StreamConfig,
+                             batched_stream_run, stream_init)
+
+N_NETWORKS = 8
+N_ROUNDS = 40
+N_PER_ROUND = 8
+P = 32                   # sensors per network
+Q = 3                    # principal components maintained
+ALPHA = 1e-3
+CALIB_ROUNDS = 8
+WARMUP = 6
+EVENT_NETWORKS = (1, 3, 4, 6)
+EVENT_START_ROUND = 22   # well after arming (warmup + calibration window)
+EVENT_ROUNDS = 8
+EVENT_AMP = -5.0         # cooling plateau, degrees at the site
+EVENT_FOOTPRINT = 8.0    # meters
+NOISE = 0.8
+
+
+def fleet_streams(seed=0):
+    """(networks, rounds, n, p): a dominant top-q group of sensors over a
+    flat noise floor — the banded-local-covariance substrate the scheduler
+    actually fits (a dense global factor would not be band-representable),
+    with a quiet residual space for a localized event to land in."""
+    rng = np.random.default_rng(seed)
+    scale = np.concatenate([[4.0, 3.4, 2.8], np.full(P - 3, NOISE)])
+    x = rng.normal(size=(N_NETWORKS, N_ROUNDS, N_PER_ROUND, P)) * scale
+    return x.astype(np.float32)
+
+
+def inject_events(xs, positions, seed=1):
+    """Plant one localized plateau per event network; returns the modified
+    fleet block and the (networks, rounds, n) ground-truth epoch mask."""
+    rng = np.random.default_rng(seed)
+    truth = np.zeros(xs.shape[:3], bool)
+    epochs = N_ROUNDS * N_PER_ROUND
+    # keep the footprint off the high-variance sensors: energy landing on
+    # the tracked subspace is absorbed by the basis, not detected — the
+    # Sec.-2.4.3 premise is an event the healthy components do NOT span
+    d_top = np.linalg.norm(positions[:, None, :] - positions[None, :3, :],
+                           axis=-1).min(axis=1)
+    candidates = np.nonzero(d_top > 10.0)[0]
+    for b in EVENT_NETWORKS:
+        site = int(rng.choice(candidates))
+        start = EVENT_START_ROUND * N_PER_ROUND
+        dur = EVENT_ROUNDS * N_PER_ROUND
+        flat, window = inject_ac_event(
+            xs[b].reshape(epochs, P), positions, site=site, start=start,
+            duration=dur, amplitude=EVENT_AMP,
+            footprint_m=EVENT_FOOTPRINT, ramp_epochs=3)
+        xs[b] = flat.reshape(N_ROUNDS, N_PER_ROUND, P)
+        truth[b] = window.reshape(N_ROUNDS, N_PER_ROUND)
+    return xs, truth
+
+
+def main() -> None:
+    print("=== T²/SPE event-detection fleet ===\n")
+    positions = berkeley_like_layout(p=P, seed=7)
+    cfg = StreamConfig(p=P, q=Q, halfwidth=4, forgetting=0.98,
+                       drift_threshold=0.5, warmup_rounds=WARMUP,
+                       detection=DetectionConfig(alpha=ALPHA,
+                                                 calib_rounds=CALIB_ROUNDS))
+    xs, truth = inject_events(fleet_streams(), positions)
+    print(f"fleet: {N_NETWORKS} networks x {N_ROUNDS} rounds, p={P}, q={Q}; "
+          f"events on networks {EVENT_NETWORKS} at rounds "
+          f"[{EVENT_START_ROUND}, {EVENT_START_ROUND + EVENT_ROUNDS})\n")
+
+    keys = jax.random.split(jax.random.PRNGKey(2), N_NETWORKS)
+    states = jax.vmap(lambda k: stream_init(cfg, k))(keys)
+    t0 = time.perf_counter()
+    fin, met = batched_stream_run(cfg, states, jnp.asarray(xs))
+    jax.block_until_ready(met.rho)
+    elapsed = time.perf_counter() - t0
+
+    det = met.detection
+    events = np.asarray(det.events) > 0.5          # (networks, rounds, n)
+    calibrating = np.asarray(det.calibrating) > 0.5  # (networks, rounds)
+    # score only epochs where the detector was armed (outside warmup +
+    # healthy windows — alarms are suppressed inside them by design)
+    armed = ~calibrating
+    armed[:, :WARMUP + 1] = False
+    armed_e = np.repeat(armed[:, :, None], N_PER_ROUND, axis=2)
+    tpr = events[truth & armed_e].mean()
+    fpr = events[~truth & armed_e].mean()
+
+    print(f"{'network':>8} {'alarms':>7} {'event epochs':>13} "
+          f"{'T² thr':>8} {'SPE thr':>8} {'bill':>9}")
+    t2_thr = np.asarray(fin.det.t2_threshold)
+    spe_thr = np.asarray(fin.det.spe_threshold)
+    bills = np.asarray(fin.sched.comm_packets)
+    for b in range(N_NETWORKS):
+        n_alarms = int(events[b].sum())
+        n_truth = int(truth[b].sum())
+        print(f"{b:>8} {n_alarms:>7} {n_truth:>13} "
+              f"{t2_thr[b]:>8.1f} {spe_thr[b]:>8.1f} {bills[b]:>9.0f}")
+
+    print(f"\ndetection rate inside injected windows: {tpr:.1%}")
+    print(f"false-alarm rate outside:               {fpr:.2%}")
+    print(f"(streamed {N_NETWORKS * N_ROUNDS} network-rounds in "
+          f"{elapsed:.1f} s)\n")
+    assert tpr > 0.8, f"TPR {tpr:.1%} below the 80% acceptance gate"
+    assert fpr < 0.05, f"FPR {fpr:.2%} above the 5% acceptance gate"
+    print("OK: the device tier reproduces the Sec.-2.4.3 envelope — "
+          "localized events caught network-wide, alarms stay rare.")
+
+
+if __name__ == "__main__":
+    main()

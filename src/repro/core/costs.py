@@ -23,6 +23,7 @@ __all__ = ["CostReport", "centralized_covariance", "distributed_covariance",
            "centralized_eigenvectors", "distributed_eigenvectors",
            "streaming_round_cost", "streaming_refresh_cost",
            "supervised_round_cost", "quantized_supervised_round_cost",
+           "detection_round_cost",
            "lossy_round_cost", "lossy_refresh_cost", "lossy_epoch_load",
            "pcag_epoch_load", "default_epoch_load", "table1"]
 
@@ -145,6 +146,33 @@ def quantized_supervised_round_cost(q: int, c_max: int, bits: int,
                        + scale_flood + flagged),
         computation=base.computation + 2 * q,   # encode + decode per node
         memory=base.memory + q,                 # per-component scales
+    )
+
+
+def detection_round_cost(q: int, c_max: int,
+                         alarms: float = 0.0) -> CostReport:
+    """One Sec.-2.4.3 monitoring epoch, highest-node load.
+
+    The T²/SPE verdict rides the streaming drift probe: the per-round
+    (q+1)-element A record of :func:`streaming_round_cost` grows by ONE
+    scalar — the node-local residual-energy partial (T² needs only the
+    scores already aggregated for the drift statistic) — so the marginal
+    flag-free communication is one record element through ``C* + 1``
+    packets at the highest-loaded node.  Each alarmed epoch additionally
+    floods one F notification (a scalar alarm verdict) back down the tree:
+    ``C* + 1`` more packets per alarm at the highest node.  ``alarms`` is
+    the number of alarmed epochs this round (the per-event F flood — the
+    extras analogue of :func:`supervised_round_cost`'s flagged raws).
+
+    Computation per node: q multiplies against the fed-back inverse
+    eigenvalue record plus the local residual square-and-add and the two
+    threshold tests; memory: the q inverse eigenvalues plus the two
+    thresholds.
+    """
+    return CostReport(
+        communication=(c_max + 1) * (1.0 + alarms),
+        computation=2 * q + 3,
+        memory=q + 2,
     )
 
 

@@ -21,8 +21,16 @@ import numpy as np
 __all__ = ["LowVarianceDetector", "DetectionResult"]
 
 
-def _chi2_quantile(df: int, alpha: float) -> float:
-    """Wilson-Hilferty approximation of the chi-square (1-alpha) quantile."""
+def _chi2_quantile(df: float, alpha: float) -> float:
+    """Wilson-Hilferty approximation of the chi-square (1-alpha) quantile.
+
+    ``df`` may be fractional (the moment-matched ``g * chi2_h`` thresholds of
+    the streaming detector pass their effective degrees of freedom here).
+    ``alpha`` outside (0, 1) is clamped into the open interval by
+    :func:`_norm_quantile` — the helpers never return ±inf/NaN; the
+    *validation* of a caller's alpha belongs to the caller (see
+    :class:`LowVarianceDetector`).
+    """
     # normal quantile via Acklam-style rational approximation (sufficient here)
     z = _norm_quantile(1.0 - alpha)
     a = 2.0 / (9.0 * df)
@@ -30,7 +38,10 @@ def _chi2_quantile(df: int, alpha: float) -> float:
 
 
 def _norm_quantile(u: float) -> float:
-    # Beasley-Springer-Moro
+    # Beasley-Springer-Moro.  The tail branches take log(u) / log(1-u), so
+    # u is clamped into the open interval first: u = 0 or 1 would silently
+    # produce ±inf and poison every threshold derived from it.
+    u = float(np.clip(u, 1e-300, 1.0 - 1e-16))
     a = [-3.969683028665376e+01, 2.209460984245205e+02, -2.759285104469687e+02,
          1.383577518672690e+02, -3.066479806614716e+01, 2.506628277459239e+00]
     b = [-5.447609879822406e+01, 1.615858368580409e+02, -1.556989798598866e+02,
@@ -73,6 +84,9 @@ class LowVarianceDetector:
     def __init__(self, W_low: np.ndarray, lambdas_low: np.ndarray,
                  mean: np.ndarray, alpha: float = 1e-3,
                  min_lambda: float = 1e-9):
+        if not 0.0 < alpha < 1.0:
+            raise ValueError(
+                f"alpha must be in the open interval (0, 1), got {alpha}")
         self.W = np.asarray(W_low, dtype=np.float64)
         self.lam = np.maximum(np.asarray(lambdas_low, np.float64), min_lambda)
         self.mean = np.asarray(mean, dtype=np.float64)

@@ -74,9 +74,15 @@ class SpatioTemporalPCA:
     def transform(self, result: PCAResult, x: np.ndarray) -> np.ndarray:
         return DistributedPCA.transform(result, stack_windows(x, self.window))
 
-    def reconstruct_current(self, result: PCAResult, x: np.ndarray,
-                            p: int) -> np.ndarray:
-        """Reconstruct the lag-0 (current-epoch) measurements only."""
+    def reconstruct_current(self, result: PCAResult,
+                            x: np.ndarray) -> np.ndarray:
+        """Reconstruct the lag-0 (current-epoch) measurements only.
+
+        The number of sensors is recovered from the fitted basis (the stacked
+        feature space has ``p * window`` columns in sensor-major layout), so
+        no shape argument is needed — the lag-0 slice ``full[:, 0::window]``
+        is exactly the (N - w + 1, p) current-epoch block.
+        """
         z = self.transform(result, x)
         full = DistributedPCA.inverse_transform(result, z)
         return full[:, 0::self.window]         # lag-0 columns, sensor-major

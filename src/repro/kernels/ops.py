@@ -16,14 +16,16 @@ import jax.numpy as jnp
 from repro.kernels.banded_matvec import banded_matvec_pallas, banded_matmul_pallas
 from repro.kernels.cov_update import (cov_band_update_pallas,
                                       cov_band_update_masked_pallas)
-from repro.kernels.pca_project import (pca_project_pallas,
+from repro.kernels.pca_project import (pca_monitor_pallas,
+                                       pca_project_pallas,
                                        pca_reconstruct_pallas,
                                        supervised_compress_pallas)
 
 __all__ = ["banded_matvec", "banded_matmul", "cov_band_update",
            "cov_band_update_masked", "cov_band_update_batched",
            "pca_project", "pca_reconstruct",
-           "supervised_compress", "supervised_compress_batched"]
+           "supervised_compress", "supervised_compress_batched",
+           "pca_monitor", "pca_monitor_batched"]
 
 
 def _auto_interpret(interpret: bool | None) -> bool:
@@ -284,6 +286,101 @@ def supervised_compress(x: jnp.ndarray, w: jnp.ndarray,
                                            float(epsilon), bn,
                                            _auto_interpret(interpret))
     return z[:n], x_hat[:n], flags[:n] > 0.0
+
+
+@functools.partial(jax.jit, static_argnames=("block_n", "interpret"))
+def _pca_monitor(x, w, mean2d, invlam2d, mask, block_n, interpret):
+    return pca_monitor_pallas(x, w, mean2d, invlam2d, mask,
+                              block_n=block_n, interpret=interpret)
+
+
+def pca_monitor(x: jnp.ndarray, w: jnp.ndarray,
+                mean: jnp.ndarray | None = None,
+                inv_lam: jnp.ndarray | None = None,
+                *, mask: jnp.ndarray | None = None,
+                block_n: int | None = None,
+                interpret: bool | None = None,
+                ) -> tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """One fused monitoring epoch (Sec. 2.4.3) on device.
+
+    Returns ``(z, t2, spe)``: scores (n, q) in fp32 plus the per-epoch
+    statistics T² (n,) = Σ_k z_k²·inv_lam_k and SPE (n,) =
+    ‖(x − mean)·mask − z Wᵀ‖² over live sensors — the same quantities the
+    NumPy oracle (:class:`repro.core.events.LowVarianceDetector` /
+    :func:`repro.kernels.ref.pca_monitor`) computes host-side.  ``inv_lam``
+    defaults to all-ones (unnormalized T²); clamp the eigenvalue estimates
+    *before* inverting.  ``mask`` is an optional 0/1 liveness array, (p,)
+    or (n, p); dead sensors contribute no score record and no residual
+    energy.  The batch axis is padded to the block like
+    :func:`supervised_compress`; padded rows carry mask 0, so their scores
+    and statistics are exactly zero and are sliced off.
+    """
+    n, p = x.shape
+    q = w.shape[1]
+    if mean is None:
+        mean = jnp.zeros((p,), jnp.float32)
+    mean2d = jnp.asarray(mean, jnp.float32).reshape(1, p)
+    if inv_lam is None:
+        inv_lam = jnp.ones((q,), jnp.float32)
+    invlam2d = jnp.asarray(inv_lam, jnp.float32).reshape(1, q)
+    if mask is None:
+        mask = jnp.ones((n, p), jnp.float32)
+    else:
+        mask = jnp.asarray(mask, jnp.float32)
+        if mask.ndim == 1:
+            mask = jnp.broadcast_to(mask[None, :], (n, p))
+    bn = block_n or _pick_block_padded(n, target=128)
+    n_pad = _pad_dim(n, bn)
+    if n_pad != n:
+        x = jnp.pad(x, ((0, n_pad - n), (0, 0)))
+        mask = jnp.pad(mask, ((0, n_pad - n), (0, 0)))
+    z, t2, spe = _pca_monitor(x, w, mean2d, invlam2d, mask, bn,
+                              _auto_interpret(interpret))
+    return z[:n], t2[:n, 0], spe[:n, 0]
+
+
+def pca_monitor_batched(x: jnp.ndarray, w: jnp.ndarray,
+                        mean: jnp.ndarray | None = None,
+                        inv_lam: jnp.ndarray | None = None,
+                        *, mask: jnp.ndarray | None = None,
+                        block_n: int | None = None,
+                        interpret: bool | None = None,
+                        ) -> tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """Fleet form of :func:`pca_monitor` over x (B, n, p).
+
+    ``w`` is (B, p, q) per-network bases (or (p, q) shared), ``mean``
+    (B, p) / (p,) / None, ``inv_lam`` (B, q) / (q,) / None, ``mask``
+    (B, n, p) / (B, p) / None.  A ``vmap`` of the fused kernel, same
+    composition as :func:`supervised_compress_batched`.
+    """
+    if x.ndim != 3:
+        raise ValueError(f"expected (networks, n, p), got {x.shape}")
+    B, n, p = x.shape
+    if w.ndim == 2:
+        w = jnp.broadcast_to(w[None], (B,) + w.shape)
+    q = w.shape[2]
+    if mean is None:
+        mean = jnp.zeros((B, p), jnp.float32)
+    else:
+        mean = jnp.asarray(mean, jnp.float32)
+        if mean.ndim == 1:
+            mean = jnp.broadcast_to(mean[None, :], (B, p))
+    if inv_lam is None:
+        inv_lam = jnp.ones((B, q), jnp.float32)
+    else:
+        inv_lam = jnp.asarray(inv_lam, jnp.float32)
+        if inv_lam.ndim == 1:
+            inv_lam = jnp.broadcast_to(inv_lam[None, :], (B, q))
+    if mask is None:
+        mask = jnp.ones((B, n, p), jnp.float32)
+    else:
+        mask = jnp.asarray(mask, jnp.float32)
+        if mask.ndim == 2:
+            mask = jnp.broadcast_to(mask[:, None, :], (B, n, p))
+    return jax.vmap(
+        lambda xi, wi, mi, li, ki: pca_monitor(
+            xi, wi, mi, li, mask=ki, block_n=block_n,
+            interpret=interpret))(x, w, mean, inv_lam, mask)
 
 
 def supervised_compress_batched(x: jnp.ndarray, w: jnp.ndarray,

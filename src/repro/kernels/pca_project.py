@@ -34,7 +34,7 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
 __all__ = ["pca_project_pallas", "pca_reconstruct_pallas",
-           "supervised_compress_pallas"]
+           "supervised_compress_pallas", "pca_monitor_pallas"]
 
 
 def _project_kernel(x_ref, w_ref, out_ref):
@@ -116,6 +116,80 @@ def _supervised_kernel(x_ref, w_ref, mean_ref, mask_ref,
     z_ref[...] = z.astype(z_ref.dtype)
     xh_ref[...] = xh.astype(xh_ref.dtype)
     flag_ref[...] = flags.astype(flag_ref.dtype)
+
+
+def _monitor_kernel(x_ref, w_ref, mean_ref, invlam_ref, mask_ref,
+                    z_ref, t2_ref, spe_ref):
+    x = x_ref[...].astype(jnp.float32)                  # (block_n, p)
+    w = w_ref[...].astype(jnp.float32)                  # (p, q)
+    mean = mean_ref[...].astype(jnp.float32)            # (1, p)
+    il = invlam_ref[...].astype(jnp.float32)            # (1, q)
+    m = mask_ref[...].astype(jnp.float32)               # (block_n, p)
+    # dead sensors transmit no init record: absent from the A sum
+    xc = (x - mean) * m
+    z = jnp.dot(xc, w, preferred_element_type=jnp.float32)
+    # the reconstruction never leaves VMEM: only its residual energy does.
+    # Sec. 2.4.3 monitoring pair — top-space T^2 = sum_k z_k^2 / lambda_k
+    # catches energy moving WITHIN the tracked subspace; SPE (the Q
+    # statistic) ||(x - mean) - z W^T||^2 over live sensors catches
+    # network-coherent events the basis does not span (the streaming
+    # analogue of the paper's low-variance evaluator).
+    xh = jnp.dot(z, w.T, preferred_element_type=jnp.float32)
+    resid = (xc - xh) * m
+    t2 = jnp.sum(z * z * il, axis=1, keepdims=True)
+    spe = jnp.sum(resid * resid, axis=1, keepdims=True)
+    z_ref[...] = z.astype(z_ref.dtype)
+    t2_ref[...] = t2.astype(t2_ref.dtype)
+    spe_ref[...] = spe.astype(spe_ref.dtype)
+
+
+def pca_monitor_pallas(x: jnp.ndarray, w: jnp.ndarray, mean: jnp.ndarray,
+                       inv_lam: jnp.ndarray, mask: jnp.ndarray,
+                       *, block_n: int, interpret: bool = False,
+                       ) -> tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """One fused monitoring epoch (Sec. 2.4.3 on the streaming path).
+
+    The ε-supervised pass extended to event detection: center, project,
+    reconstruct and reduce in ONE pass over X.  Emits the scores Z (n, q)
+    plus two per-epoch statistics — T² = Σ_k z_k²/λ̂_k (n, 1) and
+    SPE = ‖(x − mean)·mask − Z Wᵀ‖² (n, 1).  The (block_n, p)
+    reconstruction stays VMEM-resident (it is consumed by a single VPU
+    reduction), so the monitoring tier adds ZERO (n, p)-sized HBM
+    round-trips on top of the projection.  ``inv_lam`` (1, q) carries the
+    reciprocal per-component variance estimates (clamping is the caller's
+    job — the kernel multiplies).  Thresholding happens outside the kernel:
+    the alarm thresholds are *traced* state (recalibrated after every
+    refresh), not compile-time constants.
+    """
+    n, p = x.shape
+    p2, q = w.shape
+    assert p == p2
+    assert mean.shape == (1, p) and inv_lam.shape == (1, q)
+    assert mask.shape == (n, p)
+    assert n % block_n == 0, (n, block_n)
+    grid = (n // block_n,)
+    return pl.pallas_call(
+        _monitor_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_n, p), lambda i: (i, 0)),
+            pl.BlockSpec((p, q), lambda i: (0, 0)),
+            pl.BlockSpec((1, p), lambda i: (0, 0)),
+            pl.BlockSpec((1, q), lambda i: (0, 0)),
+            pl.BlockSpec((block_n, p), lambda i: (i, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((block_n, q), lambda i: (i, 0)),
+            pl.BlockSpec((block_n, 1), lambda i: (i, 0)),
+            pl.BlockSpec((block_n, 1), lambda i: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((n, q), jnp.float32),
+            jax.ShapeDtypeStruct((n, 1), jnp.float32),
+            jax.ShapeDtypeStruct((n, 1), jnp.float32),
+        ],
+        interpret=interpret,
+    )(x, w, mean, inv_lam, mask)
 
 
 def supervised_compress_pallas(x: jnp.ndarray, w: jnp.ndarray,

@@ -15,7 +15,7 @@ import jax.numpy as jnp
 
 __all__ = ["banded_matvec", "banded_matmul", "cov_band_update",
            "cov_band_update_masked", "pca_project", "pca_reconstruct",
-           "supervised_compress"]
+           "supervised_compress", "pca_monitor"]
 
 
 def _shifted_cols(x: jnp.ndarray, offset: int) -> jnp.ndarray:
@@ -96,3 +96,29 @@ def supervised_compress(x: jnp.ndarray, w: jnp.ndarray, mean: jnp.ndarray,
     xh = jnp.dot(z, w.T, preferred_element_type=jnp.float32) + mean
     flags = (jnp.abs(x - xh) > epsilon) & (mask > 0.0)
     return z, xh, flags
+
+
+def pca_monitor(x: jnp.ndarray, w: jnp.ndarray, mean: jnp.ndarray,
+                inv_lam: jnp.ndarray, mask: jnp.ndarray,
+                ) -> tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """The fused monitoring epoch (Sec. 2.4.3), unfused.
+
+    Same fp32 arithmetic as the Pallas kernel, written as two plain dots
+    plus two row reductions: ``Z = ((X - mean) * mask) W``;
+    ``T²[t] = Σ_k Z[t, k]² inv_lam[k]``;
+    ``SPE[t] = ‖(X[t] - mean)·mask − Z[t] Wᵀ‖²`` over live sensors.
+    """
+    x = x.astype(jnp.float32)
+    w = w.astype(jnp.float32)
+    mean = jnp.asarray(mean, jnp.float32).reshape(1, -1)
+    inv_lam = jnp.asarray(inv_lam, jnp.float32).reshape(1, -1)
+    mask = jnp.asarray(mask, jnp.float32)
+    if mask.ndim == 1:
+        mask = jnp.broadcast_to(mask[None, :], x.shape)
+    xc = (x - mean) * mask
+    z = jnp.dot(xc, w, preferred_element_type=jnp.float32)
+    xh = jnp.dot(z, w.T, preferred_element_type=jnp.float32)
+    resid = (xc - xh) * mask
+    t2 = jnp.sum(z * z * inv_lam, axis=1)
+    spe = jnp.sum(resid * resid, axis=1)
+    return z, t2, spe

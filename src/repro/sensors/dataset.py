@@ -24,7 +24,8 @@ import numpy as np
 
 from repro.core.topology import berkeley_like_layout
 
-__all__ = ["SensorDataset", "berkeley_surrogate", "kfold_blocks"]
+__all__ = ["SensorDataset", "berkeley_surrogate", "kfold_blocks",
+           "inject_ac_event"]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -96,6 +97,50 @@ def berkeley_surrogate(p: int = 52, n_epochs: int = 14_400, seed: int = 0,
          + rng.normal(0.0, noise_std, size=(n_epochs, p)))
     x = np.clip(x, 12.0, 38.0)
     return SensorDataset(measurements=x, positions=positions)
+
+
+def inject_ac_event(measurements: np.ndarray, positions: np.ndarray, *,
+                    site: int, start: int, duration: int,
+                    amplitude: float, footprint_m: float = 6.0,
+                    ramp_epochs: int = 11,
+                    ) -> tuple[np.ndarray, np.ndarray]:
+    """Inject one localized AC/occupancy plateau into an (N, p) epoch block.
+
+    The same event family :func:`berkeley_surrogate` seeds its traces with
+    (the Fig.-8 'air conditioning near sensor 49' plateaus), exposed as a
+    standalone generator so detection experiments can place *known* events:
+    a spatial footprint ``exp(-(d / footprint_m)^2)`` around ``site``
+    (network-coherent — every nearby sensor moves together — yet small
+    against each sensor's own swing: exactly what the Sec.-2.4.3 evaluator
+    exists to catch), a plateau of ``duration`` epochs whose first/last
+    ``ramp_epochs`` ramp linearly INSIDE the window (no amplitude ever
+    leaks outside it — an event epoch outside the truth mask would charge
+    a correct detector with false positives), and ``amplitude`` degrees at
+    the site (negative for cooling).
+
+    Returns ``(x_event, window)``: a modified copy of ``measurements`` and
+    the (N,) boolean truth mask — exactly the support of the injected
+    envelope, the ground truth TPR/FPR sweeps score against.
+    """
+    x = np.array(measurements, dtype=measurements.dtype)
+    n_epochs, p = x.shape
+    if not 0 <= site < p:
+        raise ValueError(f"site {site} outside [0, {p})")
+    if start < 0 or start + duration > n_epochs:
+        raise ValueError(
+            f"event [{start}, {start + duration}) outside [0, {n_epochs})")
+    d = np.linalg.norm(positions - positions[site], axis=-1)
+    foot = np.exp(-(d / footprint_m) ** 2)
+    plateau = np.ones(duration)
+    r = min(ramp_epochs, duration // 2)
+    if r > 1:
+        up = np.linspace(1.0 / r, 1.0, r)
+        plateau[:r] = up
+        plateau[duration - r:] = up[::-1]
+    window = np.zeros(n_epochs)
+    window[start:start + duration] = plateau
+    x += amplitude * window[:, None] * foot[None, :]
+    return x, window > 0.0
 
 
 def kfold_blocks(n_epochs: int, k: int = 10) -> list[tuple[np.ndarray, np.ndarray]]:

@@ -181,6 +181,12 @@ class StreamResult:
     every round streamed in this segment (the ε guarantee holds iff
     ``compression_max_err <= ε``), the flagged-raw extras sent, and the
     score bits put on air at the quantized budget.
+
+    The ``detection_*`` fields are populated only when the StreamConfig
+    carries a detection stage: the alarmed-epoch count of this segment,
+    the Sec.-2.4.3 alarm-flood packets those alarms billed (lossy-scaled,
+    on top of the per-round monitoring scalar already inside
+    ``comm_packets``), and the T²/SPE thresholds in effect at retirement.
     """
 
     components: np.ndarray           # (p, q) final basis
@@ -192,6 +198,10 @@ class StreamResult:
     compression_max_err: float | None = None
     compression_extra_packets: float | None = None
     compression_bits_on_air: float | None = None
+    detection_events: float | None = None
+    detection_alarm_packets: float | None = None
+    detection_t2_threshold: float | None = None
+    detection_spe_threshold: float | None = None
 
 
 class StreamingPCAEngine:
@@ -248,6 +258,21 @@ class StreamingPCAEngine:
         self._comp_extras = jnp.zeros(slots, jnp.float32)
         self._comp_bits = jnp.zeros(slots, jnp.float32)
         self.last_compression = None
+        # T²/SPE detection accounting (cfg.detection only): per-slot running
+        # alarmed-epoch count and alarm-flood bill for the current segment,
+        # accumulated on device like the compression books; last_detection
+        # keeps the most recent round's device output for observability.
+        # The per-alarm packet price and ARQ factor are engine-lifetime
+        # constants (cfg is fixed), resolved once here.
+        self._det_events = jnp.zeros(slots, jnp.float32)
+        self._det_alarm_packets = jnp.zeros(slots, jnp.float32)
+        self.last_detection = None
+        if cfg.detection is not None:
+            from repro.core.faults import expected_transmissions
+            from repro.streaming.detector import detection_packet_split
+            _, per_alarm = detection_packet_split(cfg.q, cfg.c_max)
+            self._det_alarm_price = per_alarm * expected_transmissions(
+                cfg.link_loss, cfg.max_retries)
         # fault machinery: logical clock, per-slot monitors, retirement log
         self._clock = 0
         self.health: list[HealthMonitor | None] = [None] * slots
@@ -299,6 +324,10 @@ class StreamingPCAEngine:
                     self._comp_max_err = self._comp_max_err.at[slot].set(0.0)
                     self._comp_extras = self._comp_extras.at[slot].set(0.0)
                     self._comp_bits = self._comp_bits.at[slot].set(0.0)
+                if self.cfg.detection is not None:
+                    self._det_events = self._det_events.at[slot].set(0.0)
+                    self._det_alarm_packets = \
+                        self._det_alarm_packets.at[slot].set(0.0)
                 monitor = HealthMonitor(self.health_policy,
                                         clock=lambda: float(self._clock))
                 monitor.heartbeat(step=self._clock, duration=1.0)
@@ -323,6 +352,14 @@ class StreamingPCAEngine:
                 compression_max_err=float(self._comp_max_err[slot]),
                 compression_extra_packets=float(self._comp_extras[slot]),
                 compression_bits_on_air=float(self._comp_bits[slot]),
+            )
+        if self.cfg.detection is not None:
+            comp.update(
+                detection_events=float(self._det_events[slot]),
+                detection_alarm_packets=float(
+                    self._det_alarm_packets[slot]),
+                detection_t2_threshold=float(state_i.det.t2_threshold),
+                detection_spe_threshold=float(state_i.det.spe_threshold),
             )
         return StreamResult(
             components=np.asarray(state_i.sched.W),
@@ -417,20 +454,27 @@ class StreamingPCAEngine:
         else:
             self.states, metrics = self._step_fn(self.states,
                                                  jnp.asarray(batch))
+        # idle slots fold zero rounds: mask them out of the books
+        # (where, not multiply — robust to any NaN in an idle slot)
+        lm = np.zeros(self.slots, np.float32)
+        lm[live] = 1.0
+        lmj = jnp.asarray(lm)
         if self.cfg.compression is not None:
             comp = metrics.compression
             self.last_compression = comp      # (slots, ...) device arrays
-            # idle slots fold zero rounds: mask them out of the books
-            # (where, not multiply — robust to any NaN in an idle slot)
-            lm = np.zeros(self.slots, np.float32)
-            lm[live] = 1.0
-            lmj = jnp.asarray(lm)
             self._comp_max_err = jnp.maximum(
                 self._comp_max_err, jnp.where(lmj > 0, comp.max_err, 0.0))
             self._comp_extras = self._comp_extras + jnp.where(
                 lmj > 0, comp.extra_packets, 0.0)
             self._comp_bits = self._comp_bits + jnp.where(
                 lmj > 0, comp.bits_on_air, 0.0)
+        if self.cfg.detection is not None:
+            det = metrics.detection
+            self.last_detection = det         # (slots, ...) device arrays
+            alarms = jnp.where(lmj > 0, det.alarms, 0.0)
+            self._det_events = self._det_events + alarms
+            self._det_alarm_packets = (self._det_alarm_packets
+                                       + alarms * self._det_alarm_price)
         for s in live:
             if masks[s].mean() >= self.min_alive_fraction:
                 self.health[s].heartbeat(step=self._clock, duration=1.0)

@@ -15,6 +15,9 @@ scheduler    RecomputeScheduler: retained-variance drift monitor +
              orthogonal-iteration basis refresh with Table-1 cost accounting
 compressor   ε-supervised compression stage (Sec. 2.4.1 on device): fused
              Pallas project/reconstruct/flag pass + uniform score quantizer
+detector     T²/SPE event-detection stage (Sec. 2.4.3 on device): fused
+             Pallas monitoring pass + Wilson-Hilferty thresholds with
+             healthy-window recalibration after every basis refresh
 driver       single-network stream loop, ``jax.vmap`` batched multi-network
              driver and the ``shard_map`` sharded runner
 """
@@ -25,9 +28,14 @@ from repro.streaming.online_cov import (
 )
 from repro.streaming.scheduler import (
     RecomputeScheduler, SchedulerState, retained_fraction, ortho_refresh,
+    ortho_refresh_evals,
 )
 from repro.streaming.compressor import (
     CompressionConfig, RoundCompression, quantize_scores, compress_round,
+)
+from repro.streaming.detector import (
+    DetectionConfig, DetectorState, RoundDetection, detect_round,
+    detector_init, wilson_hilferty,
 )
 from repro.streaming.driver import (
     StreamConfig, StreamState, RoundMetrics, stream_init, stream_step,
@@ -38,9 +46,11 @@ __all__ = [
     "OnlineCovariance", "online_init", "online_update", "online_estimate",
     "stream_covariance",
     "RecomputeScheduler", "SchedulerState", "retained_fraction",
-    "ortho_refresh",
+    "ortho_refresh", "ortho_refresh_evals",
     "CompressionConfig", "RoundCompression", "quantize_scores",
     "compress_round",
+    "DetectionConfig", "DetectorState", "RoundDetection", "detect_round",
+    "detector_init", "wilson_hilferty",
     "StreamConfig", "StreamState", "RoundMetrics", "stream_init",
     "stream_step", "stream_run", "batched_stream_run", "sharded_stream_run",
 ]

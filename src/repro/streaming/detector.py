@@ -1,0 +1,283 @@
+"""Streaming event-detection stage: T²/SPE monitoring on the hot loop.
+
+The paper's third application (Sec. 2.4.3) is *event detection*: a
+network-scale anomaly that is invisible at any single node shows up as a
+significant coordinate on components the healthy distribution does not
+excite, and the evaluator is a chi-square test on the standardized scores.
+:mod:`repro.core.events` is that evaluator host-side against a frozen
+basis; this module is its device-resident continuation against the *live*
+basis the streaming scheduler maintains — the Gupchup et al. "model-based
+event detection" loop (PAPERS.md) run continuously, with the model itself
+drifting underneath (Johard et al.'s self-adaptive encodings).
+
+Two statistics per measurement epoch, both emitted by the fused Pallas
+monitoring pass (:func:`repro.kernels.ops.pca_monitor` — the ε-supervised
+kernel with the error test swapped for two VPU reductions; the
+reconstruction never reaches HBM):
+
+* **T²** ``= Σ_k z_k² / λ̂_k`` — energy moving *within* the tracked top-q
+  subspace, standardized by the per-component variance estimates λ̂ the
+  scheduler's refresh already computes (Rayleigh quotients of the ordering
+  step, previously discarded);
+* **SPE** (the Q statistic) ``= ‖(x − μ̂) − Z Wᵀ‖²`` over live sensors —
+  network-coherent energy the basis does *not* span, the streaming
+  analogue of the paper's low-variance evaluator (the trailing components
+  of a frozen full basis ARE the complement of the live top-q subspace).
+
+Thresholds are state, not constants: a chi-square quantile calibrated
+against a stale basis is a false-alarm machine the moment the scheduler
+rotates W, so after EVERY refresh (drift- or churn-triggered) the detector
+opens a fresh healthy window — alarms are suppressed for
+``calib_rounds`` rounds while it accumulates the moments of both
+statistics, then re-arms with moment-matched ``g·χ²_h`` thresholds
+(Nomikos-MacGregor / Box approximation) evaluated by the Wilson-Hilferty
+device-side quantile.  T² additionally floors at the nominal ``χ²_q``
+quantile (under a correct λ̂ the two agree; the floor guards against a
+lucky ultra-quiet window).  The Sec.-2.4.3 packet bill — one extra scalar
+on the per-round (q+1) drift record, plus one F alarm flood per alarmed
+epoch — is booked by the driver through
+:func:`repro.core.costs.detection_round_cost`.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import NamedTuple
+
+import jax.numpy as jnp
+
+from repro.core import costs
+from repro.core.events import _norm_quantile
+from repro.kernels import ops
+
+__all__ = ["DetectionConfig", "DetectorState", "RoundDetection",
+           "detector_init", "detect_round", "wilson_hilferty",
+           "detection_packet_split"]
+
+
+@dataclasses.dataclass(frozen=True)
+class DetectionConfig:
+    """Static per-deployment detection policy (hashable: rides the jitted
+    StreamConfig as a compile-time constant).
+
+    Parameters
+    ----------
+    alpha: per-epoch false-alarm rate under H0 — must lie in the open
+        interval (0, 1) (the same validation the host-side
+        :class:`repro.core.events.LowVarianceDetector` applies).
+    calib_rounds: healthy-window length (rounds) after every basis
+        refresh; alarms are suppressed while the window is open and the
+        thresholds re-arm when it closes.
+    min_lambda: clamp floor for the per-component variance estimates
+        before inversion (a near-zero Rayleigh quotient would turn T²
+        into an alarm siren).
+    emit_statistics: carry the per-epoch (n,) T²/SPE/event arrays in the
+        per-round output.  Costs rounds × n floats through a scan — right
+        for examples/tests; disable at scale to keep only the scalar
+        alarm counts and thresholds.
+    """
+
+    alpha: float = 1e-3
+    calib_rounds: int = 8
+    min_lambda: float = 1e-9
+    emit_statistics: bool = True
+
+    def __post_init__(self):
+        if not 0.0 < self.alpha < 1.0:
+            raise ValueError(
+                f"alpha must be in the open interval (0, 1), got {self.alpha}")
+        if self.calib_rounds < 1:
+            raise ValueError(
+                f"calib_rounds must be >= 1, got {self.calib_rounds}")
+        if self.min_lambda <= 0.0:
+            raise ValueError(
+                f"min_lambda must be > 0, got {self.min_lambda}")
+
+    @property
+    def z_alpha(self) -> float:
+        """Normal (1 - alpha) quantile, resolved host-side (alpha is
+        static); the device evaluates only the Wilson-Hilferty cube."""
+        return float(_norm_quantile(1.0 - self.alpha))
+
+
+class DetectorState(NamedTuple):
+    """Per-network detector state (all-array pytree; scan/vmap carry)."""
+
+    t2_threshold: jnp.ndarray    # () — +inf until the first window closes
+    spe_threshold: jnp.ndarray   # () — +inf until the first window closes
+    calib_left: jnp.ndarray      # () int32 rounds left in the healthy window
+    t2_sum: jnp.ndarray          # () window moments of the T² statistic
+    t2_sumsq: jnp.ndarray        # ()
+    spe_sum: jnp.ndarray         # () window moments of the SPE statistic
+    spe_sumsq: jnp.ndarray       # ()
+    count: jnp.ndarray           # () epochs folded into the open window
+
+
+class RoundDetection(NamedTuple):
+    """Per-round detection output (scan-stackable pytree).
+
+    ``t2``/``spe``/``events`` are ``None`` when the config disables
+    statistics emission (None is an empty pytree node, so both variants
+    scan/vmap/shard cleanly — the structure is fixed per StreamConfig).
+    """
+
+    t2: jnp.ndarray | None       # (n,) per-epoch T² statistic
+    spe: jnp.ndarray | None      # (n,) per-epoch SPE statistic
+    events: jnp.ndarray | None   # (n,) 0/1 alarms (0 while calibrating)
+    alarms: jnp.ndarray          # () alarmed epochs this round
+    t2_threshold: jnp.ndarray    # () threshold in effect this round
+    spe_threshold: jnp.ndarray   # () threshold in effect this round
+    calibrating: jnp.ndarray     # () bool — healthy window open this round
+
+
+def wilson_hilferty(df: jnp.ndarray, z: float) -> jnp.ndarray:
+    """Chi-square quantile by the Wilson-Hilferty cube, traced ``df``.
+
+    The same approximation as :func:`repro.core.events._chi2_quantile`, but
+    with the normal quantile ``z`` pre-resolved host-side (alpha is static)
+    and ``df`` a traced — possibly fractional — scalar, so the moment-
+    matched ``g·χ²_h`` thresholds evaluate on device with no host sync.
+    """
+    a = 2.0 / (9.0 * jnp.maximum(df, 1e-12))
+    return df * (1.0 - a + z * jnp.sqrt(a)) ** 3
+
+
+def detector_init(dtype=jnp.float32) -> DetectorState:
+    zero = jnp.zeros((), dtype)
+    return DetectorState(
+        t2_threshold=jnp.asarray(jnp.inf, dtype),
+        spe_threshold=jnp.asarray(jnp.inf, dtype),
+        calib_left=jnp.zeros((), jnp.int32),
+        t2_sum=zero, t2_sumsq=zero, spe_sum=zero, spe_sumsq=zero,
+        count=zero,
+    )
+
+
+def _moment_threshold(s: jnp.ndarray, ss: jnp.ndarray, cnt: jnp.ndarray,
+                      z: float) -> jnp.ndarray:
+    """Moment-matched g·χ²_h (1-alpha) quantile from window sums.
+
+    Box's approximation: a positive statistic with healthy-window mean m
+    and variance v is treated as g·χ²_h with ``g = v / 2m``,
+    ``h = 2m² / v`` — for a true χ²_q with a correct λ̂ this recovers
+    (m, v) = (q, 2q), i.e. the nominal threshold; a drifted or mis-scaled
+    statistic gets a threshold matched to what healthy data actually does.
+    """
+    cnt = jnp.maximum(cnt, 1.0)
+    m = jnp.maximum(s / cnt, 1e-12)
+    v = jnp.maximum(ss / cnt - m * m, 1e-12)
+    g = v / (2.0 * m)
+    h = 2.0 * m * m / v
+    return g * wilson_hilferty(h, z)
+
+
+def detect_round(W: jnp.ndarray, mean: jnp.ndarray, lam: jnp.ndarray,
+                 x: jnp.ndarray, state: DetectorState, cfg: DetectionConfig,
+                 refreshed: jnp.ndarray,
+                 mask: jnp.ndarray | None = None,
+                 interpret: bool | None = None,
+                 ) -> tuple[DetectorState, RoundDetection]:
+    """Monitor one (n, p) measurement round against basis W (p, q).
+
+    ``lam`` (q,) are the scheduler's per-component variance estimates
+    (clamped here before inversion); ``refreshed`` flags that the basis
+    was recomputed THIS round — the detector opens a fresh healthy window
+    before folding the round's statistics, so post-rotation epochs
+    calibrate the new thresholds instead of tripping the old ones.
+    ``mask`` is the round's (p,) or (n, p) liveness/validity array: dead
+    sensors contribute no score record and no residual energy.
+    """
+    n = x.shape[0]
+    inv_lam = 1.0 / jnp.maximum(jnp.asarray(lam, jnp.float32),
+                                cfg.min_lambda)
+    _, t2, spe = ops.pca_monitor(jnp.asarray(x, jnp.float32), W, mean,
+                                 inv_lam, mask=mask, interpret=interpret)
+    # (n,) 0/1 weight: an epoch with NO live sensor carries no statistic —
+    # folding its zeros into the healthy-window moments would drag both
+    # thresholds toward (or below) zero and arm an alarm siren
+    if mask is None:
+        row_live = jnp.ones((n,), t2.dtype)
+    else:
+        m = jnp.asarray(mask, t2.dtype)
+        row_live = (jnp.max(m) > 0) * jnp.ones((n,), t2.dtype) \
+            if m.ndim == 1 else (jnp.max(m, axis=1) > 0).astype(t2.dtype)
+
+    # a refresh rotates the basis: reset the healthy window FIRST so this
+    # round's statistics (computed against the new W) seed the new window
+    refreshed = jnp.asarray(refreshed, bool)
+    zero = jnp.zeros((), state.t2_sum.dtype)
+    calib_left = jnp.where(refreshed,
+                           jnp.asarray(cfg.calib_rounds, jnp.int32),
+                           state.calib_left)
+    t2_sum = jnp.where(refreshed, zero, state.t2_sum)
+    t2_sumsq = jnp.where(refreshed, zero, state.t2_sumsq)
+    spe_sum = jnp.where(refreshed, zero, state.spe_sum)
+    spe_sumsq = jnp.where(refreshed, zero, state.spe_sumsq)
+    count = jnp.where(refreshed, zero, state.count)
+
+    calibrating = calib_left > 0
+    cal_f = calibrating.astype(t2.dtype)
+    n_live = jnp.sum(row_live)
+    t2_sum = t2_sum + cal_f * jnp.sum(t2 * row_live)
+    t2_sumsq = t2_sumsq + cal_f * jnp.sum(t2 * t2 * row_live)
+    spe_sum = spe_sum + cal_f * jnp.sum(spe * row_live)
+    spe_sumsq = spe_sumsq + cal_f * jnp.sum(spe * spe * row_live)
+    count = count + cal_f * n_live
+    # a fully-dead round contributes nothing: the window does not advance,
+    # so a blacked-out network stays suppressed instead of arming on zeros
+    calib_left = calib_left - (calibrating & (n_live > 0)).astype(jnp.int32)
+    closing = calibrating & (calib_left == 0)
+
+    z = cfg.z_alpha
+    q = W.shape[1]
+    t2_thr_new = jnp.maximum(_moment_threshold(t2_sum, t2_sumsq, count, z),
+                             wilson_hilferty(jnp.asarray(float(q)), z))
+    # SPE has no nominal scale to floor at, but a degenerate window must
+    # never arm a non-positive threshold (0 > 0 is false, so fully-dead
+    # epochs — statistic exactly 0 — can still never alarm)
+    spe_thr_new = jnp.maximum(
+        _moment_threshold(spe_sum, spe_sumsq, count, z), 0.0)
+    t2_threshold = jnp.where(closing, t2_thr_new, state.t2_threshold)
+    spe_threshold = jnp.where(closing, spe_thr_new, state.spe_threshold)
+
+    # alarms fire only outside the healthy window (this round's epochs are
+    # window members when calibrating — including the closing round), and
+    # against the thresholds in effect BEFORE any re-arm this round
+    armed = ~calibrating
+    events = armed & ((t2 > state.t2_threshold)
+                      | (spe > state.spe_threshold))
+    events_f = events.astype(t2.dtype)
+    alarms = jnp.sum(events_f)
+
+    new_state = DetectorState(
+        t2_threshold=t2_threshold, spe_threshold=spe_threshold,
+        calib_left=calib_left,
+        t2_sum=t2_sum, t2_sumsq=t2_sumsq,
+        spe_sum=spe_sum, spe_sumsq=spe_sumsq, count=count,
+    )
+    emit = cfg.emit_statistics
+    detection = RoundDetection(
+        t2=t2 if emit else None,
+        spe=spe if emit else None,
+        events=events_f if emit else None,
+        alarms=alarms,
+        t2_threshold=state.t2_threshold,
+        spe_threshold=state.spe_threshold,
+        calibrating=calibrating,
+    )
+    return new_state, detection
+
+
+def detection_packet_split(q: int, c_max: int) -> tuple[float, float]:
+    """(flag-free packets per round, packets per alarmed epoch) of one
+    Sec.-2.4.3 monitoring epoch at the highest-loaded node.
+
+    The cost model owns both numbers (the driver books through
+    :func:`detection_round_cost`, which delegates to it): the flag-free
+    part is the one extra record element riding the per-round drift
+    aggregation, the per-alarm part is the scalar F alarm flood.
+    """
+    base = costs.detection_round_cost(q, c_max).communication
+    per_alarm = (costs.detection_round_cost(q, c_max, 1.0).communication
+                 - base)
+    return float(base), float(per_alarm)

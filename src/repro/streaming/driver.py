@@ -24,6 +24,15 @@ sink decodes, the ε-true sink view, and the notification mask, and the
 Sec.-2.4.1 packet bill (scores A + feedback F + flagged raws, lossy-scaled)
 is booked into the same per-network communication account as the
 scheduler's Table-1 costs.
+
+With ``StreamConfig.detection`` set, every round also runs the T²/SPE
+event-detection stage (:mod:`repro.streaming.detector`) against the same
+live basis and the scheduler's per-component variance estimates λ̂: the
+fused Pallas monitoring pass emits the two per-epoch statistics, the
+detector thresholds (recalibrated over a healthy window after every
+refresh) turn them into alarms, and the Sec.-2.4.3 bill — one extra
+scalar on the per-round drift record plus one F alarm flood per alarmed
+epoch, lossy-scaled — is booked into the same account.
 """
 
 from __future__ import annotations
@@ -39,6 +48,9 @@ from repro.core.faults import expected_transmissions
 from repro.streaming.compressor import (CompressionConfig, RoundCompression,
                                         compress_round,
                                         compression_round_cost)
+from repro.streaming.detector import (DetectionConfig, DetectorState,
+                                      RoundDetection, detect_round,
+                                      detection_packet_split, detector_init)
 from repro.streaming.online_cov import (OnlineCovariance, online_init,
                                         online_update)
 from repro.streaming.scheduler import RecomputeScheduler, SchedulerState
@@ -65,6 +77,7 @@ class StreamConfig:
     max_retries: int = 3            # ARQ retransmission budget per packet
     interpret: bool | None = None   # Pallas interpret override (None = auto)
     compression: CompressionConfig | None = None  # ε-supervised stage
+    detection: DetectionConfig | None = None      # T²/SPE monitoring stage
 
     def scheduler(self) -> RecomputeScheduler:
         return RecomputeScheduler(
@@ -80,14 +93,16 @@ class StreamState(NamedTuple):
     sched: SchedulerState
     rounds: jnp.ndarray             # () int32 rounds streamed so far
     alive: jnp.ndarray              # (p,) 0/1 liveness seen last round
+    det: DetectorState | None = None  # T²/SPE thresholds + healthy window
 
 
 class RoundMetrics(NamedTuple):
     """Per-round observability record (stacked by scan over time).
 
-    ``compression`` is ``None`` when the config carries no compression
-    stage (None is an empty pytree node, so both variants scan/vmap/shard
-    cleanly — the pytree structure is fixed per StreamConfig).
+    ``compression``/``detection`` are ``None`` when the config carries no
+    such stage (None is an empty pytree node, so every variant
+    scan/vmap/shards cleanly — the pytree structure is fixed per
+    StreamConfig).
     """
 
     rho: jnp.ndarray                # retained fraction before any refresh
@@ -95,6 +110,7 @@ class RoundMetrics(NamedTuple):
     refreshes: jnp.ndarray          # cumulative refresh count
     comm_packets: jnp.ndarray       # cumulative communication (packets)
     compression: RoundCompression | None = None  # ε-supervised output
+    detection: RoundDetection | None = None      # T²/SPE monitoring output
 
 
 def _metrics_template(cfg: "StreamConfig") -> RoundMetrics:
@@ -106,8 +122,15 @@ def _metrics_template(cfg: "StreamConfig") -> RoundMetrics:
             z=0, x_sink=0 if emit else None, flagged=0 if emit else None,
             max_err=0, extra_packets=0, score_packets=0,
             feedback_packets=0, bits_on_air=0)
+    det = None
+    if cfg.detection is not None:
+        emit = cfg.detection.emit_statistics
+        det = RoundDetection(
+            t2=0 if emit else None, spe=0 if emit else None,
+            events=0 if emit else None, alarms=0,
+            t2_threshold=0, spe_threshold=0, calibrating=0)
     return RoundMetrics(rho=0, did_refresh=0, refreshes=0, comm_packets=0,
-                        compression=comp)
+                        compression=comp, detection=det)
 
 
 def stream_init(cfg: StreamConfig, key: jax.Array,
@@ -117,6 +140,7 @@ def stream_init(cfg: StreamConfig, key: jax.Array,
         sched=cfg.scheduler().init(cfg.p, key, dtype=dtype),
         rounds=jnp.zeros((), jnp.int32),
         alive=jnp.ones((cfg.p,), dtype=dtype),
+        det=detector_init(dtype) if cfg.detection is not None else None,
     )
 
 
@@ -146,12 +170,16 @@ def stream_step(cfg: StreamConfig, state: StreamState, x_round: jnp.ndarray,
         alive = mask
     sched, rho, fired = cfg.scheduler().step(state.sched, cov, state.rounds,
                                              churn=churn)
+    # live per-sensor mean estimate of the online covariance — normalized
+    # by each sensor's OWN effective count (the masked-statistics bugfix:
+    # dividing by the round count biased dropout-ridden sensors to zero)
+    mean_est = cov.s / jnp.maximum(cov.t_i, 1.0)
+    factor = expected_transmissions(cfg.link_loss, cfg.max_retries)
     compression = None
     if cfg.compression is not None:
         # compress this round against the slot's CURRENT basis (post-step W)
-        # and the live mean estimate of the online covariance — the same
-        # quantities the deployment would have flooded to the nodes
-        mean_est = cov.s / jnp.maximum(cov.t, 1.0)
+        # and the live mean estimate — the same quantities the deployment
+        # would have flooded to the nodes
         compression = compress_round(
             sched.W, mean_est, x_round, cfg.compression, cfg.c_max,
             mask=mask, interpret=cfg.interpret)
@@ -159,16 +187,29 @@ def stream_step(cfg: StreamConfig, state: StreamState, x_round: jnp.ndarray,
         # flood at the quantized budget), plus the flagged raws — every
         # packet paying the same expected ARQ retransmissions as the
         # scheduler's bill
-        factor = expected_transmissions(cfg.link_loss, cfg.max_retries)
         flagfree = compression_round_cost(cfg.q, cfg.c_max, cfg.compression)
         bill = (flagfree + compression.extra_packets) * factor
         sched = sched._replace(comm_packets=sched.comm_packets + bill)
+    det_state, detection = state.det, None
+    if cfg.detection is not None:
+        # monitor this round against the same post-step basis and the
+        # scheduler's λ̂; a refresh this round opens a fresh healthy window
+        det_state, detection = detect_round(
+            sched.W, mean_est, sched.lam, x_round, state.det, cfg.detection,
+            refreshed=fired, mask=mask, interpret=cfg.interpret)
+        # book the Sec.-2.4.3 epoch: one extra scalar on the per-round
+        # (q+1) drift record plus one F alarm flood per alarmed epoch,
+        # lossy-scaled like every other packet of the round
+        flagfree, per_alarm = detection_packet_split(cfg.q, cfg.c_max)
+        bill = (flagfree + detection.alarms * per_alarm) * factor
+        sched = sched._replace(comm_packets=sched.comm_packets + bill)
     new = StreamState(cov=cov, sched=sched, rounds=state.rounds + 1,
-                      alive=alive)
+                      alive=alive, det=det_state)
     metrics = RoundMetrics(rho=rho, did_refresh=fired,
                            refreshes=sched.refreshes,
                            comm_packets=sched.comm_packets,
-                           compression=compression)
+                           compression=compression,
+                           detection=detection)
     return new, metrics
 
 

@@ -35,11 +35,24 @@ __all__ = ["OnlineCovariance", "online_init", "online_update",
 
 
 class OnlineCovariance(NamedTuple):
-    """Decayed banded sufficient statistics (all-array pytree)."""
+    """Decayed banded sufficient statistics (all-array pytree).
+
+    ``t`` is the round-level effective epoch count; ``t_band`` holds the
+    *pairwise* effective counts in the same diagonal layout as ``band``:
+    ``t_band[k, i] = sum_r beta^(R-r) (rows where sensors i AND i+k-h were
+    both present)``.  All entries coincide with ``t`` while every sensor is
+    alive; under measurement dropout or node death they diverge, and
+    normalizing by ``t`` would bias every statistic of a partially-present
+    sensor toward zero (the masked-statistics bugfix — a product sum is
+    only ever normalized by the rows that actually contributed to it, for
+    ANY masking pattern, nested or not).  The center row is the per-sensor
+    count, exposed as ``t_i``.
+    """
 
     t: jnp.ndarray          # () effective epoch count sum_r beta^(R-r) n_r
     s: jnp.ndarray          # (p,) decayed per-sensor sums
     band: jnp.ndarray       # (2h+1, p) decayed products, band[k,i] ~ S_{i,i+k-h}
+    t_band: jnp.ndarray     # (2h+1, p) pairwise effective counts
 
     @property
     def halfwidth(self) -> int:
@@ -49,12 +62,29 @@ class OnlineCovariance(NamedTuple):
     def p(self) -> int:
         return self.s.shape[0]
 
+    @property
+    def t_i(self) -> jnp.ndarray:
+        """(p,) per-sensor effective counts (the pairwise count of a sensor
+        with itself — the center diagonal of ``t_band``)."""
+        return self.t_band[self.halfwidth]
+
+
+def _band_valid(p: int, halfwidth: int) -> jnp.ndarray:
+    """0/1 in-range indicator of the diagonal layout: entry (k, i) covers
+    the pair (i, i + k - h), which exists iff the column index is in
+    [0, p)."""
+    h = halfwidth
+    j = jnp.arange(p)[None, :]
+    k = jnp.arange(2 * h + 1)[:, None]
+    return ((j + k - h >= 0) & (j + k - h < p)).astype(jnp.float32)
+
 
 def online_init(p: int, halfwidth: int, dtype=jnp.float32) -> OnlineCovariance:
     return OnlineCovariance(
         t=jnp.zeros((), dtype=dtype),
         s=jnp.zeros((p,), dtype=dtype),
         band=jnp.zeros((2 * halfwidth + 1, p), dtype=dtype),
+        t_band=jnp.zeros((2 * halfwidth + 1, p), dtype=dtype),
     )
 
 
@@ -70,41 +100,76 @@ def online_update(state: OnlineCovariance, x: jnp.ndarray,
 
     ``mask`` is an optional 0/1 validity array — (p,) sensor liveness (dead
     motes) or (n, p) measurement dropout.  Masked entries are absent: they
-    join no outer product (the masked Pallas kernel) and no mean sum, so a
-    dead sensor's statistics simply decay toward zero instead of being
-    poisoned by phantom readings.  ``mask=None`` takes the unmasked kernel
-    path and is bit-identical to the pre-fault-model behavior.
+    join no outer product (the masked Pallas kernel), no mean sum, and no
+    effective count — a product sum is only ever normalized by the rows
+    that contributed to it, so a dead sensor's statistics simply decay
+    toward zero instead of being poisoned by phantom readings or dragged
+    toward zero by rows it never saw.  The pairwise counts are the band
+    update of the mask with itself, ``sum_t m_i m_j``: for a (p,) liveness
+    mask that is analytically ``n * m_i * m_j`` (elementwise, no kernel);
+    only a genuine (n, p) dropout mask pays one extra kernel pass.
+    ``mask=None`` takes the unmasked kernel path, updates the counts
+    analytically, and is bit-identical to an all-ones mask (the regression
+    pin in tests/test_streaming.py).
     """
     x = jnp.asarray(x, dtype=state.s.dtype)
     n = x.shape[0]
     h = state.halfwidth
     beta = jnp.asarray(forgetting, dtype=state.s.dtype)
+    valid = _band_valid(state.p, h).astype(state.t_band.dtype)
     if mask is None:
         delta_band = ops.cov_band_update(x, h, interpret=interpret)
         delta_s = x.sum(axis=0)
+        delta_tb = n * valid
     else:
         mask = jnp.asarray(mask, dtype=state.s.dtype)
         delta_band = ops.cov_band_update_masked(x, mask, h,
                                                 interpret=interpret)
-        xm = x * (mask[None, :] if mask.ndim == 1 else mask)
-        delta_s = xm.sum(axis=0)
+        if mask.ndim == 1:
+            delta_s = (x * mask[None, :]).sum(axis=0)
+            mj = jnp.stack([cov._shifted(mask[None, :], k - h)[0]
+                            for k in range(2 * h + 1)], axis=0)
+            delta_tb = (n * mask[None, :] * mj).astype(state.t_band.dtype)
+        else:
+            delta_s = (x * mask).sum(axis=0)
+            delta_tb = ops.cov_band_update(mask, h, interpret=interpret) \
+                .astype(state.t_band.dtype)
     return OnlineCovariance(
         t=beta * state.t + n,
         s=beta * state.s + delta_s,
         band=beta * state.band + delta_band.astype(state.band.dtype),
+        t_band=beta * state.t_band + delta_tb,
     )
 
 
 def online_estimate(state: OnlineCovariance) -> jnp.ndarray:
     """Banded covariance diagonals c_band[k,i] = C[i, i+k-h] (Eq. 9, decayed).
 
-    Normalizing the decayed sums by the decayed count makes ``beta`` cancel
+    Normalizing the decayed sums by the decayed counts makes ``beta`` cancel
     out of the weights: the estimate is the exponentially weighted sample
     covariance over the effective window.
+
+    Every sum is normalized by its OWN effective count: means are
+    ``s_i / t_i`` and the band entry (i, j) by the pairwise count
+    ``t_band[k, i]`` — exact for ANY masking pattern (nested death waves,
+    independent per-reading dropout, anything in between) and equal to the
+    old scalar ``t`` on the all-alive path.  The pre-fix code divided
+    everything by the round count ``t``, biasing every partially-present
+    sensor's mean, variance, and cross-covariances toward zero.
     """
-    return cov.banded_estimate(
-        cov.BandedCovState(t=state.t, s=state.s, band=state.band,
-                           halfwidth=state.halfwidth))
+    h = state.halfwidth
+    ti = jnp.maximum(state.t_i, 1.0)
+    mean = state.s / ti
+    p = state.s.shape[0]
+    t_pair = jnp.maximum(state.t_band, 1.0)
+    rows = []
+    for k in range(2 * h + 1):
+        mean_j = cov._shifted(mean[None, :], k - h)[0]
+        rows.append(state.band[k] / t_pair[k] - mean * mean_j)
+    band = jnp.stack(rows, axis=0)
+    # zero out-of-range entries explicitly (same convention as
+    # core.covariance.banded_estimate)
+    return jnp.where(_band_valid(p, h) > 0, band, 0.0)
 
 
 def online_total_variance(state: OnlineCovariance) -> jnp.ndarray:
@@ -112,10 +177,11 @@ def online_total_variance(state: OnlineCovariance) -> jnp.ndarray:
 
     The center row of the band holds the per-sensor variances, so the trace
     needs no reconstruction (one A op of a scalar in the WSN reading).
+    Per-sensor normalization (see :func:`online_estimate`).
     """
     h = state.halfwidth
-    t = jnp.maximum(state.t, 1.0)
-    variances = state.band[h] / t - (state.s / t) ** 2
+    ti = jnp.maximum(state.t_i, 1.0)
+    variances = state.band[h] / ti - (state.s / ti) ** 2
     return jnp.sum(variances)
 
 

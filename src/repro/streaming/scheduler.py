@@ -34,7 +34,7 @@ from repro.streaming.online_cov import (OnlineCovariance, online_estimate,
                                         online_total_variance)
 
 __all__ = ["RecomputeScheduler", "SchedulerState", "retained_fraction",
-           "ortho_refresh"]
+           "ortho_refresh", "ortho_refresh_evals"]
 
 
 def retained_fraction(band_est: jnp.ndarray, W: jnp.ndarray,
@@ -50,8 +50,9 @@ def retained_fraction(band_est: jnp.ndarray, W: jnp.ndarray,
     return num / jnp.maximum(total_variance, 1e-30)
 
 
-def ortho_refresh(band_est: jnp.ndarray, W0: jnp.ndarray,
-                  iters: int, eps: float = 1e-8) -> jnp.ndarray:
+def ortho_refresh_evals(band_est: jnp.ndarray, W0: jnp.ndarray,
+                        iters: int, eps: float = 1e-8,
+                        ) -> tuple[jnp.ndarray, jnp.ndarray]:
     """Fixed-length blocked orthogonal iteration, warm-started from W0.
 
     A ``fori_loop`` (static trip count) rather than the convergence
@@ -61,6 +62,13 @@ def ortho_refresh(band_est: jnp.ndarray, W0: jnp.ndarray,
     iterations track a slowly rotating subspace (EXPERIMENTS.md Sec.
     Streaming).  Orthonormalization is the replicated-Cholesky ``inv(L)^T``
     form (EXPERIMENTS.md Sec. Perf hillclimb 1).
+
+    Returns ``(W, evals)``: the ordered orthonormal basis AND the Rayleigh
+    quotients (descending) of its columns against the live band.  The
+    ordering step computes these eigenvalue estimates anyway; keeping them
+    (instead of discarding them, as the pre-detection code did) is what
+    feeds the event tier's per-component variance estimates λ̂ — in the WSN
+    reading they are the q scalars the refresh flood already carries.
     """
     q = W0.shape[1]
     eye = eps * jnp.eye(q, dtype=W0.dtype)
@@ -78,7 +86,14 @@ def ortho_refresh(band_est: jnp.ndarray, W0: jnp.ndarray,
     H = V.T @ banded_matmul_ref(band_est, V)
     evals, U = jnp.linalg.eigh(H)
     order = jnp.argsort(-evals)
-    return V @ U[:, order]
+    return V @ U[:, order], evals[order]
+
+
+def ortho_refresh(band_est: jnp.ndarray, W0: jnp.ndarray,
+                  iters: int, eps: float = 1e-8) -> jnp.ndarray:
+    """Basis-only form of :func:`ortho_refresh_evals` (kept as the public
+    refresh entrypoint for callers that do not track eigenvalues)."""
+    return ortho_refresh_evals(band_est, W0, iters, eps)[0]
 
 
 class SchedulerState(NamedTuple):
@@ -86,6 +101,9 @@ class SchedulerState(NamedTuple):
     rho_ref: jnp.ndarray      # () retained fraction measured at last refresh
     refreshes: jnp.ndarray    # () int32 — number of refreshes triggered
     comm_packets: jnp.ndarray  # () accumulated communication (packets)
+    lam: jnp.ndarray          # (q,) per-component variance estimates λ̂
+    #                           (Rayleigh quotients at the last refresh;
+    #                           ones before the first — consumers clamp)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -124,6 +142,7 @@ class RecomputeScheduler:
             rho_ref=jnp.zeros((), dtype),
             refreshes=jnp.zeros((), jnp.int32),
             comm_packets=jnp.zeros((), dtype),
+            lam=jnp.ones((self.q,), dtype),
         )
 
     def round_cost(self) -> float:
@@ -163,13 +182,15 @@ class RecomputeScheduler:
         trigger = past_warmup & (never_fit | drifted | jnp.asarray(churn))
 
         def do_refresh(_):
-            W_new = ortho_refresh(band_est, state.W, self.refresh_iters)
+            W_new, lam_new = ortho_refresh_evals(band_est, state.W,
+                                                 self.refresh_iters)
             rho_new = retained_fraction(band_est, W_new, total_var)
             return SchedulerState(
                 W=W_new,
                 rho_ref=rho_new,
                 refreshes=state.refreshes + 1,
                 comm_packets=state.comm_packets + self.refresh_cost(p),
+                lam=lam_new,
             )
 
         def keep(_):

@@ -152,6 +152,18 @@ def restore(directory: str, template: Any, *, step: int | None = None,
             raise CheckpointError(
                 f"shape mismatch for {name}: ckpt {arr.shape} vs "
                 f"template {expect.shape}")
+        # np.savez stores extension dtypes (bfloat16 & friends) as raw void
+        # bytes (|V2), which np.ndarray.astype cannot cast ("No cast
+        # function available").  The manifest kept the true dtype — view
+        # the bytes back before casting.
+        want = manifest["leaves"].get(name, {}).get("dtype")
+        if want and str(arr.dtype) != want and arr.dtype.kind == "V":
+            try:
+                arr = arr.view(np.dtype(want))
+            except TypeError as e:
+                raise CheckpointError(
+                    f"cannot reinterpret leaf {name!r} stored as "
+                    f"{arr.dtype} back to {want}: {e}") from e
         arr = arr.astype(expect.dtype)
         if flat_shardings is not None:
             leaves.append(jax.device_put(arr, flat_shardings[i]))

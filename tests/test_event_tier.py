@@ -1,0 +1,516 @@
+"""Device-resident event-detection tier vs. the NumPy oracle.
+
+The differential suite for the fused T²/SPE monitoring pass
+(kernels/pca_project.py::pca_monitor_pallas), the streaming detector stage,
+the Sec.-2.4.3 cost booking, and the serving-engine integration — always
+against `core/events.py`, which stays the host-side oracle.
+
+Also pins the satellite fixes that ride this PR: the quantile helpers'
+edge-case behavior (alpha validation + clamped tails) and the detection
+packet bill's booked==counted property on the lossy simulator.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ModuleNotFoundError:        # optional dev dependency
+    def given(*args, **kwargs):
+        return lambda f: f
+
+    def settings(*args, **kwargs):
+        return lambda f: f
+
+    class _StubStrategies:
+        def integers(self, *args, **kwargs):
+            return None
+
+        def floats(self, *args, **kwargs):
+            return None
+
+    st = _StubStrategies()
+
+from repro.core import costs
+from repro.core.events import (LowVarianceDetector, _chi2_quantile,
+                               _norm_quantile)
+from repro.kernels import ops, ref
+from repro.streaming import (DetectionConfig, StreamConfig, stream_init,
+                             stream_run, wilson_hilferty)
+from repro.streaming.detector import detection_packet_split
+
+P, Q, H = 32, 3, 4
+
+
+def _data(seed, n, p, q):
+    rng = np.random.default_rng(seed)
+    scale = np.linspace(3.0, 0.7, p)
+    x = (rng.normal(size=(n, p)) * scale).astype(np.float32)
+    W = np.linalg.qr(rng.normal(size=(p, q)))[0].astype(np.float32)
+    mean = x.mean(axis=0).astype(np.float32)
+    lam = rng.uniform(0.5, 4.0, q).astype(np.float32)
+    return x, W, mean, lam
+
+
+class TestMonitorKernelVsOracles:
+    @pytest.mark.parametrize("n,p,q", [
+        (64, 32, 3),          # block-divisible
+        (100, 97, 5),         # non-divisible (prime p)
+        (7, 13, 2),           # tiny, below every preferred tile
+    ])
+    def test_matches_jnp_ref_and_events_oracle(self, n, p, q):
+        """Fused kernel == unfused jnp reference == core/events.py, all-alive."""
+        x, W, mean, lam = _data(n * p + q, n, p, q)
+        z, t2, spe = ops.pca_monitor(
+            jnp.asarray(x), jnp.asarray(W), jnp.asarray(mean),
+            jnp.asarray(1.0 / lam), interpret=True)
+        zr, t2r, sper = ref.pca_monitor(
+            jnp.asarray(x), jnp.asarray(W), jnp.asarray(mean),
+            jnp.asarray(1.0 / lam), jnp.ones((n, p), jnp.float32))
+        np.testing.assert_allclose(np.asarray(z), np.asarray(zr),
+                                   rtol=1e-5, atol=1e-5)
+        np.testing.assert_allclose(np.asarray(t2), np.asarray(t2r),
+                                   rtol=1e-4, atol=1e-4)
+        np.testing.assert_allclose(np.asarray(spe), np.asarray(sper),
+                                   rtol=1e-4, atol=1e-4)
+        # T² against the Sec.-2.4.3 evaluator (float64 host oracle, fp32 tol)
+        det = LowVarianceDetector(W, lam, mean, alpha=1e-3)
+        np.testing.assert_allclose(np.asarray(t2), det.statistic(x),
+                                   rtol=1e-3, atol=1e-3)
+        # SPE against the residual-energy definition
+        xc = x - mean
+        resid = xc - (xc @ W) @ W.T
+        np.testing.assert_allclose(np.asarray(spe), (resid ** 2).sum(axis=1),
+                                   rtol=1e-3, atol=1e-3)
+
+    def test_masked_dead_sensors_excluded(self):
+        """Dead sensors contribute no score record and no residual energy."""
+        x, W, mean, lam = _data(seed=11, n=24, p=P, q=Q)
+        alive = np.ones(P, np.float32)
+        alive[5] = alive[17] = 0.0
+        z, t2, spe = ops.pca_monitor(
+            jnp.asarray(x), jnp.asarray(W), jnp.asarray(mean),
+            jnp.asarray(1.0 / lam), mask=jnp.asarray(alive), interpret=True)
+        xm = (x - mean) * alive
+        zo = xm @ W
+        np.testing.assert_allclose(np.asarray(z), zo, rtol=1e-4, atol=1e-4)
+        speo = (((xm - zo @ W.T) * alive) ** 2).sum(axis=1)
+        np.testing.assert_allclose(np.asarray(spe), speo,
+                                   rtol=1e-3, atol=1e-3)
+        np.testing.assert_allclose(np.asarray(t2),
+                                   (zo * zo / lam[None, :]).sum(axis=1),
+                                   rtol=1e-3, atol=1e-3)
+
+    def test_dropout_mask_2d(self):
+        """Per-reading (n, p) dropout masks work like the oracle's."""
+        x, W, mean, lam = _data(seed=12, n=20, p=P, q=Q)
+        rng = np.random.default_rng(3)
+        mask = (rng.random((20, P)) >= 0.3).astype(np.float32)
+        z, t2, spe = ops.pca_monitor(
+            jnp.asarray(x), jnp.asarray(W), jnp.asarray(mean),
+            jnp.asarray(1.0 / lam), mask=jnp.asarray(mask), interpret=True)
+        zr, t2r, sper = ref.pca_monitor(
+            jnp.asarray(x), jnp.asarray(W), jnp.asarray(mean),
+            jnp.asarray(1.0 / lam), jnp.asarray(mask))
+        np.testing.assert_allclose(np.asarray(z), np.asarray(zr),
+                                   rtol=1e-4, atol=1e-4)
+        np.testing.assert_allclose(np.asarray(t2), np.asarray(t2r),
+                                   rtol=1e-4, atol=1e-4)
+        np.testing.assert_allclose(np.asarray(spe), np.asarray(sper),
+                                   rtol=1e-4, atol=1e-4)
+
+    def test_batched_matches_per_network_loop(self):
+        Bn = 3
+        rng = np.random.default_rng(2)
+        xb = rng.normal(size=(Bn, 10, 29)).astype(np.float32)   # odd p
+        wb = rng.normal(size=(Bn, 29, 4)).astype(np.float32)
+        zb, t2b, speb = ops.pca_monitor_batched(
+            jnp.asarray(xb), jnp.asarray(wb), interpret=True)
+        assert zb.shape == (Bn, 10, 4) and t2b.shape == (Bn, 10)
+        for i in range(Bn):
+            zi, t2i, spei = ops.pca_monitor(
+                jnp.asarray(xb[i]), jnp.asarray(wb[i]), interpret=True)
+            np.testing.assert_array_equal(np.asarray(zb[i]), np.asarray(zi))
+            np.testing.assert_array_equal(np.asarray(t2b[i]), np.asarray(t2i))
+            np.testing.assert_array_equal(np.asarray(speb[i]),
+                                          np.asarray(spei))
+
+
+class TestQuantileEdges:
+    """Satellite: alpha validation + clamped tails in the quantile helpers."""
+
+    def test_extreme_alphas_finite_and_monotone(self):
+        qs = [_chi2_quantile(20, a) for a in (1 - 1e-12, 0.5, 1e-12)]
+        assert all(np.isfinite(v) for v in qs)
+        assert qs[0] < qs[1] < qs[2]        # smaller alpha, larger threshold
+        zs = [_norm_quantile(u) for u in (1e-12, 0.5, 1 - 1e-12)]
+        assert all(np.isfinite(v) for v in zs)
+        assert zs[0] < zs[1] < zs[2]
+        assert zs[1] == pytest.approx(0.0, abs=1e-12)
+
+    def test_helpers_never_return_inf_even_at_0_1(self):
+        """The clamp keeps raw helper calls finite (the old code returned
+        ±inf via log(0) in the tail branches)."""
+        assert np.isfinite(_norm_quantile(0.0))
+        assert np.isfinite(_norm_quantile(1.0))
+        assert np.isfinite(_chi2_quantile(5, 0.0))
+        assert np.isfinite(_chi2_quantile(5, 1.0))
+
+    @pytest.mark.parametrize("alpha", [0.0, 1.0, -0.1, 1.5])
+    def test_detector_rejects_degenerate_alpha(self, alpha):
+        W = np.eye(8, 2)
+        with pytest.raises(ValueError):
+            LowVarianceDetector(W, np.ones(2), np.zeros(8), alpha=alpha)
+        with pytest.raises(ValueError):
+            DetectionConfig(alpha=alpha)
+
+    def test_detection_config_validation(self):
+        with pytest.raises(ValueError):
+            DetectionConfig(calib_rounds=0)
+        with pytest.raises(ValueError):
+            DetectionConfig(min_lambda=0.0)
+
+    def test_wilson_hilferty_matches_host_helper(self):
+        cfg = DetectionConfig(alpha=1e-3)
+        for df in (1.0, 3.0, 20.0, 57.5):
+            dev = float(wilson_hilferty(jnp.asarray(df), cfg.z_alpha))
+            host = _chi2_quantile(df, 1e-3)
+            assert dev == pytest.approx(host, rel=1e-5)
+
+
+class TestStreamingDetection:
+    def _cfg(self, **kw):
+        kw.setdefault("detection", DetectionConfig(alpha=1e-3,
+                                                   calib_rounds=5))
+        return StreamConfig(p=P, q=Q, halfwidth=H, forgetting=0.95,
+                            drift_threshold=0.5, warmup_rounds=4,
+                            interpret=True, **kw)
+
+    def _xs(self, rounds=24, n=8, event_round=None, seed=0):
+        rng = np.random.default_rng(seed)
+        scale = np.concatenate([[4.0, 3.4, 2.8], np.full(P - 3, 0.8)])
+        xs = (rng.normal(size=(rounds, n, P)) * scale).astype(np.float32)
+        if event_round is not None:
+            pat = np.zeros(P, np.float32)
+            pat[20:26] = 5.0                    # off the tracked subspace
+            xs[event_round] += pat
+        return xs
+
+    def test_calibration_window_then_armed(self):
+        cfg = self._cfg()
+        fin, m = stream_run(cfg, stream_init(cfg, jax.random.PRNGKey(1)),
+                            jnp.asarray(self._xs()))
+        det = m.detection
+        assert det is not None and det.t2.shape == (24, 8)
+        calib = np.asarray(det.calibrating) > 0.5
+        # warmup refresh at round 4 opens the window for rounds 4..8
+        assert calib[4:9].all() and not calib[:4].any() and not calib[9:].any()
+        # thresholds are +inf until the window closes, finite after
+        thr = np.asarray(det.spe_threshold)
+        assert np.isinf(thr[:9]).all() and np.isfinite(thr[9:]).all()
+        # alarms never fire while suppressed
+        assert float(np.asarray(det.alarms)[:9].sum()) == 0.0
+
+    def test_event_round_raises_alarms_healthy_rounds_stay_quiet(self):
+        cfg = self._cfg()
+        xs = self._xs(event_round=15)
+        fin, m = stream_run(cfg, stream_init(cfg, jax.random.PRNGKey(1)),
+                            jnp.asarray(xs))
+        alarms = np.asarray(m.detection.alarms)
+        assert alarms[15] >= 6                 # most event epochs flagged
+        healthy = np.concatenate([alarms[9:15], alarms[16:]])
+        assert healthy.sum() <= 2              # stray alarms stay rare
+        # per-epoch event flags and the scalar alarm counts agree
+        assert np.asarray(m.detection.events).sum() == alarms.sum()
+
+    def test_detection_does_not_perturb_learning(self):
+        cfg_d = self._cfg()
+        cfg_0 = StreamConfig(p=P, q=Q, halfwidth=H, forgetting=0.95,
+                             drift_threshold=0.5, warmup_rounds=4,
+                             interpret=True)
+        xs = jnp.asarray(self._xs())
+        fin_d, m_d = stream_run(cfg_d, stream_init(cfg_d,
+                                                   jax.random.PRNGKey(1)), xs)
+        fin_0, m_0 = stream_run(cfg_0, stream_init(cfg_0,
+                                                   jax.random.PRNGKey(1)), xs)
+        assert m_0.detection is None
+        np.testing.assert_array_equal(np.asarray(fin_d.sched.W),
+                                      np.asarray(fin_0.sched.W))
+        np.testing.assert_array_equal(np.asarray(m_d.rho),
+                                      np.asarray(m_0.rho))
+
+    def test_booked_bill_reconciles_exactly(self):
+        """bill(with detection) - bill(without) == rounds x the flag-free
+        monitoring scalar + alarms x the per-alarm F flood, rebuilt from
+        the metrics' own alarm counts."""
+        cfg_d = self._cfg()
+        cfg_0 = StreamConfig(p=P, q=Q, halfwidth=H, forgetting=0.95,
+                             drift_threshold=0.5, warmup_rounds=4,
+                             interpret=True)
+        xs = jnp.asarray(self._xs(event_round=15))
+        fin_d, m_d = stream_run(cfg_d, stream_init(cfg_d,
+                                                   jax.random.PRNGKey(1)), xs)
+        fin_0, _ = stream_run(cfg_0, stream_init(cfg_0,
+                                                 jax.random.PRNGKey(1)), xs)
+        flagfree, per_alarm = detection_packet_split(Q, cfg_d.c_max)
+        alarms = np.asarray(m_d.detection.alarms, np.float64)
+        expected = flagfree * len(alarms) + per_alarm * alarms.sum()
+        np.testing.assert_allclose(
+            float(fin_d.sched.comm_packets) - float(fin_0.sched.comm_packets),
+            expected, rtol=1e-5)
+
+    def test_lossy_booking_scales_by_expected_transmissions(self):
+        from repro.core.faults import expected_transmissions
+        loss = 0.2
+        cfg_d = self._cfg(link_loss=loss, max_retries=3)
+        cfg_0 = StreamConfig(p=P, q=Q, halfwidth=H, forgetting=0.95,
+                             drift_threshold=0.5, warmup_rounds=4,
+                             link_loss=loss, max_retries=3, interpret=True)
+        xs = jnp.asarray(self._xs(event_round=15))
+        fin_d, m_d = stream_run(cfg_d, stream_init(cfg_d,
+                                                   jax.random.PRNGKey(1)), xs)
+        fin_0, _ = stream_run(cfg_0, stream_init(cfg_0,
+                                                 jax.random.PRNGKey(1)), xs)
+        factor = expected_transmissions(loss, 3)
+        flagfree, per_alarm = detection_packet_split(Q, cfg_d.c_max)
+        alarms = np.asarray(m_d.detection.alarms, np.float64)
+        expected = (flagfree * len(alarms) + per_alarm * alarms.sum()) * factor
+        np.testing.assert_allclose(
+            float(fin_d.sched.comm_packets) - float(fin_0.sched.comm_packets),
+            expected, rtol=1e-4)
+
+    def test_refresh_reopens_window_and_rearms(self):
+        """A churn-triggered refresh mid-stream must suppress alarms for the
+        new healthy window and re-arm with fresh thresholds."""
+        cfg = self._cfg()
+        xs = self._xs(rounds=30)
+        masks = np.ones((30, P), np.float32)
+        masks[14:, 28:] = 0.0                  # death wave at round 14
+        fin, m = stream_run(cfg, stream_init(cfg, jax.random.PRNGKey(1)),
+                            jnp.asarray(xs), jnp.asarray(masks))
+        fired = np.asarray(m.did_refresh)
+        assert fired[14]                       # churn refresh
+        calib = np.asarray(m.detection.calibrating) > 0.5
+        assert calib[14:19].all() and not calib[19:].any()
+        assert float(np.asarray(m.detection.alarms)[14:19].sum()) == 0.0
+        thr = np.asarray(m.detection.spe_threshold)
+        assert np.isfinite(thr[20:]).all()
+
+    def test_blackout_window_never_arms_alarm_siren(self):
+        """Regression: a calibration window spent fully dead used to close
+        on all-zero statistics, moment-match a hugely NEGATIVE SPE
+        threshold, and alarm on every armed epoch forever.  Dead rounds
+        must not advance the window, and the re-armed thresholds after
+        revival must be positive with no alarm storm."""
+        cfg = self._cfg()
+        xs = self._xs(rounds=30)
+        masks = np.ones((30, P), np.float32)
+        masks[4:13, :] = 0.0                   # total blackout over the
+        #                                        whole post-refresh window
+        fin, m = stream_run(cfg, stream_init(cfg, jax.random.PRNGKey(1)),
+                            jnp.asarray(xs), jnp.asarray(masks))
+        spe_thr = np.asarray(m.detection.spe_threshold)
+        armed = np.isfinite(spe_thr)
+        assert (spe_thr[armed] > 0).all()      # never a non-positive arm
+        alarms = np.asarray(m.detection.alarms)
+        assert alarms.sum() <= 2               # no storm after revival
+
+    def test_masked_stream_dead_sensors_never_alarm_spuriously(self):
+        """Dead sensors are excluded from the statistics, so a death wave
+        plus the churn recalibration leaves the armed stream quiet."""
+        cfg = self._cfg()
+        xs = self._xs(rounds=30)
+        masks = np.ones((30, P), np.float32)
+        masks[14:, :6] = 0.0
+        fin, m = stream_run(cfg, stream_init(cfg, jax.random.PRNGKey(1)),
+                            jnp.asarray(xs), jnp.asarray(masks))
+        alarms = np.asarray(m.detection.alarms)
+        assert alarms[19:].sum() <= 2          # re-armed and quiet
+
+    def test_emit_statistics_off_drops_arrays(self):
+        cfg = self._cfg(detection=DetectionConfig(
+            alpha=1e-3, calib_rounds=5, emit_statistics=False))
+        fin, m = stream_run(cfg, stream_init(cfg, jax.random.PRNGKey(1)),
+                            jnp.asarray(self._xs(rounds=6)))
+        assert m.detection.t2 is None
+        assert m.detection.spe is None
+        assert m.detection.events is None
+        assert m.detection.alarms.shape == (6,)
+
+    def test_sharded_agrees_with_batched_under_detection(self):
+        from repro.streaming import batched_stream_run, sharded_stream_run
+        from repro.streaming.driver import batched_stream_init
+        cfg = self._cfg()
+        Bn = 2
+        states = batched_stream_init(cfg, jax.random.PRNGKey(0), Bn)
+        xsb = jnp.stack([jnp.asarray(self._xs(rounds=12, seed=s))
+                         for s in range(Bn)])
+        mesh = jax.make_mesh((1, 1), ("data", "model"))
+        fin_v, m_v = batched_stream_run(cfg, states, xsb)
+        fin_s, m_s = sharded_stream_run(cfg, mesh, states, xsb)
+        np.testing.assert_allclose(
+            np.asarray(m_v.detection.t2), np.asarray(m_s.detection.t2),
+            rtol=1e-6)
+        np.testing.assert_allclose(np.asarray(fin_v.sched.comm_packets),
+                                   np.asarray(fin_s.sched.comm_packets))
+
+
+class TestDetectionCosts:
+    def test_round_cost_shape(self):
+        """Flag-free: one extra record element through C*+1 packets; each
+        alarm floods one more scalar down the tree."""
+        c = costs.detection_round_cost(5, 4)
+        assert c.communication == 5.0           # (c_max + 1)
+        c7 = costs.detection_round_cost(5, 4, alarms=7)
+        assert c7.communication == 5.0 * 8
+        assert c7.computation == c.computation  # alarms cost radio, not flops
+
+    def test_split_sums_to_cost_model(self):
+        flagfree, per_alarm = detection_packet_split(Q, 4)
+        np.testing.assert_allclose(
+            flagfree, costs.detection_round_cost(Q, 4).communication)
+        np.testing.assert_allclose(
+            flagfree + 3 * per_alarm,
+            costs.detection_round_cost(Q, 4, alarms=3).communication)
+
+    def test_monitoring_is_marginal_next_to_drift_probe(self):
+        """The design premise: monitoring rides the drift record — its
+        flag-free bill must be a small fraction of the streaming round."""
+        round_c = costs.streaming_round_cost(8, Q, 4).communication
+        det_c = costs.detection_round_cost(Q, 4).communication
+        assert det_c < 0.25 * round_c
+
+
+class TestPacketProperty:
+    """Booked detection packets == simulator-counted packets."""
+
+    @pytest.fixture(autouse=True)
+    def _require_hypothesis(self):
+        pytest.importorskip("hypothesis")
+
+    @settings(max_examples=15, deadline=None)
+    @given(seed=st.integers(0, 2**16), loss=st.floats(0.0, 0.5),
+           retries=st.integers(0, 4))
+    def test_monitor_epoch_booked_equals_counted(self, seed, loss, retries):
+        """The detection A phase (the extra residual-energy scalar riding
+        the drift aggregation) as one scalar-record epoch through
+        lossy_aggregate_tree: lossy_epoch_load books exactly the packets
+        the simulator counts, and at zero loss the highest-node load is
+        detection_round_cost's flag-free C*+1."""
+        from repro.core.aggregation import lossy_aggregate_tree
+        from repro.core.aggregation import AggregationPrimitives
+        from repro.core.faults import FaultModel
+        from repro.core.topology import build_topology, grid_layout
+
+        rng = np.random.default_rng(seed)
+        topo = build_topology(grid_layout(4, 5, jitter=0.2, seed=seed),
+                              radio_range=1.8)
+        tree = topo.tree
+        p = tree.p
+        resid_sq = rng.normal(size=p) ** 2
+        prim = AggregationPrimitives(
+            init=lambda ih: np.asarray([ih[1]]),      # the SPE partial
+            merge=lambda a, b: a + b,
+            evaluate=lambda rec: rec[0],
+        )
+        res = lossy_aggregate_tree(
+            tree, [(i, resid_sq[i]) for i in range(p)], prim,
+            FaultModel(link_loss=loss, max_retries=retries), rng)
+        booked = costs.lossy_epoch_load(tree, res.record_sizes, res.attempts,
+                                        res.delivered, res.active)
+        np.testing.assert_array_equal(booked, res.packets)
+        assert (res.record_sizes == 1).all()      # one scalar rides the tree
+        if loss == 0.0:
+            # the evaluator sees the exact network-wide residual energy and
+            # the max-node load is the flag-free detection_round_cost
+            assert res.value == pytest.approx(resid_sq.sum())
+            children = np.bincount(tree.parent[tree.parent >= 0],
+                                   minlength=p)
+            c_max = int(children.max())
+            assert res.packets.max() == c_max + 1
+            assert res.packets.max() == costs.detection_round_cost(
+                Q, c_max).communication
+
+
+class TestEngineIntegration:
+    def _requests(self, with_events=True):
+        from repro.serve.engine import StreamRequest
+        scale = np.concatenate([[4.0, 3.4, 2.8], np.full(P - 3, 0.8)])
+        reqs = []
+        for i in range(3):
+            rng = np.random.default_rng(100 + i)
+            rounds = (rng.normal(size=(20, 4, P)) * scale).astype(np.float32)
+            if with_events and i != 1:
+                pat = np.zeros(P, np.float32)
+                pat[20:26] = 5.0
+                rounds[14] += pat                  # event after arming
+            reqs.append(StreamRequest(rounds=rounds))
+        return reqs
+
+    def _cfg(self):
+        return StreamConfig(p=P, q=Q, halfwidth=H, forgetting=0.95,
+                            drift_threshold=0.5, warmup_rounds=3,
+                            interpret=True,
+                            detection=DetectionConfig(alpha=1e-3,
+                                                      calib_rounds=4))
+
+    def test_results_carry_detection_books(self):
+        from repro.serve.engine import StreamingPCAEngine
+        eng = StreamingPCAEngine(self._cfg(), slots=2, seed=0)
+        reqs = self._requests()
+        for r in reqs:
+            eng.submit(r)
+        eng.run_until_done()
+        factor = 1.0
+        _, per_alarm = detection_packet_split(Q, 4)
+        for i, r in enumerate(reqs):
+            assert r.done and r.result.reason == "completed"
+            assert r.result.detection_events is not None
+            assert np.isfinite(r.result.detection_t2_threshold)
+            assert np.isfinite(r.result.detection_spe_threshold)
+            np.testing.assert_allclose(
+                r.result.detection_alarm_packets,
+                r.result.detection_events * per_alarm * factor, rtol=1e-6)
+        # the event-carrying streams alarmed, the quiet one (almost) not
+        assert reqs[0].result.detection_events >= 4
+        assert reqs[2].result.detection_events >= 4
+        assert reqs[1].result.detection_events <= 2
+        assert eng.last_detection is not None
+        assert eng.last_detection.alarms.shape == (2,)
+
+    def test_no_detection_results_keep_none_fields(self):
+        from repro.serve.engine import StreamingPCAEngine, StreamRequest
+        cfg = StreamConfig(p=P, q=Q, halfwidth=H, interpret=True)
+        eng = StreamingPCAEngine(cfg, slots=1, seed=0)
+        req = StreamRequest(rounds=np.random.default_rng(0)
+                            .normal(size=(4, 4, P)).astype(np.float32))
+        eng.submit(req)
+        eng.run_until_done()
+        assert req.result.detection_events is None
+
+    def test_determinism_replay_with_event_schedule(self):
+        """Two engine runs over the same event-carrying streams are
+        identical: alarm counts, bills, thresholds, bases (bitwise)."""
+        from repro.serve.engine import StreamingPCAEngine
+
+        def run():
+            eng = StreamingPCAEngine(self._cfg(), slots=2, seed=0)
+            reqs = self._requests()
+            for r in reqs:
+                eng.submit(r)
+            eng.run_until_done()
+            return reqs
+
+        a_reqs = run()
+        b_reqs = run()
+        for a, b in zip(a_reqs, b_reqs):
+            assert a.result.detection_events == b.result.detection_events
+            assert (a.result.detection_alarm_packets
+                    == b.result.detection_alarm_packets)
+            assert (a.result.detection_t2_threshold
+                    == b.result.detection_t2_threshold)
+            assert a.result.comm_packets == b.result.comm_packets
+            np.testing.assert_array_equal(a.result.components,
+                                          b.result.components)

@@ -48,6 +48,22 @@ class TestSpatioTemporalPCA:
         assert f_st > f_spatial - 0.02   # at least comparable
         assert f_st > 0.85
 
+    def test_reconstruct_current_shape_and_quality(self, data):
+        """The lag-0 reconstruction (post dead-parameter fix: the sensor
+        count comes from the fitted basis, not a caller argument) returns
+        the (N - w + 1, p) current-epoch block and tracks the truth."""
+        _, train, test = data
+        w = 4
+        st = SpatioTemporalPCA(q=6, window=w)
+        res = st.fit(train)
+        rec = st.reconstruct_current(res, test)
+        current = test[w - 1:]                     # lag-0 epochs
+        assert rec.shape == current.shape
+        # reconstruction error well under the raw signal energy
+        err = np.mean((rec - current) ** 2)
+        sig = np.mean((current - current.mean(axis=0)) ** 2)
+        assert err < 0.5 * sig
+
     def test_in_network_scores_match_centralized(self, data):
         d, train, _ = data
         topo = build_topology(d.positions, radio_range=10.0)

@@ -84,6 +84,101 @@ class TestOnlineCovariance:
         assert tr == pytest.approx(float(np.trace(
             np.asarray(cov.band_to_dense(online_estimate(st))))), rel=1e-5)
 
+    def test_all_ones_mask_bit_identical_to_unmasked(self):
+        """The masked-statistics fix must keep the all-alive path exact:
+        every state leaf (including the new per-sensor counts) and the
+        estimate are bit-identical between mask=None and an all-ones mask."""
+        x = np.asarray(_rounds(jax.random.PRNGKey(4), 1, 16))[0]
+        st0 = online_init(P, H)
+        for masked in (np.ones(P, np.float32), np.ones((16, P), np.float32)):
+            a = online_update(st0, jnp.asarray(x), forgetting=0.9,
+                              interpret=True)
+            b = online_update(st0, jnp.asarray(x), forgetting=0.9,
+                              mask=jnp.asarray(masked), interpret=True)
+            for leaf_a, leaf_b in zip(a, b):
+                np.testing.assert_array_equal(np.asarray(leaf_a),
+                                              np.asarray(leaf_b))
+            np.testing.assert_array_equal(
+                np.asarray(online_estimate(a)), np.asarray(online_estimate(b)))
+
+    def test_dropout_mean_and_variance_unbiased(self):
+        """The pre-fix path normalized every sensor by the ROUND count, so a
+        sensor present in half the rows had its mean halved and its variance
+        inflated by the phantom zero rows.  Per-sensor counts repair both:
+        a constant present reading must estimate (mean=c, var=0)."""
+        rng = np.random.default_rng(0)
+        n, c = 64, 5.0
+        x = rng.normal(size=(n, P)).astype(np.float32)
+        x[:, 0] = c                                 # sensor 0: constant 5.0
+        mask = np.ones((n, P), np.float32)
+        mask[::2, 0] = 0.0                          # ... present in half rows
+        st = online_update(online_init(P, H), jnp.asarray(x),
+                           mask=jnp.asarray(mask), interpret=True)
+        t_i = np.asarray(st.t_i)
+        assert t_i[0] == n / 2 and t_i[1] == n      # per-sensor counts
+        mean0 = float(st.s[0] / t_i[0])
+        assert mean0 == pytest.approx(c, rel=1e-6)  # old path: c/2
+        est = np.asarray(online_estimate(st))
+        assert abs(est[H, 0]) < 1e-3                # old path: ~c^2/4
+        # untouched sensors keep the plain sample statistics
+        v1 = x[:, 1].var()
+        assert est[H, 1] == pytest.approx(v1, rel=1e-3)
+
+    def test_non_nested_dropout_cross_covariance_unbiased(self):
+        """Two perfectly correlated sensors with OVERLAPPING but non-nested
+        dropout: the cross-covariance must be normalized by the pairwise
+        present count (the t_band fix), not the round count or
+        min(t_i, t_j) — both of which shrink it toward zero."""
+        rng = np.random.default_rng(7)
+        n = 128
+        x = rng.normal(size=(n, P)).astype(np.float32)
+        x[:, 1] = x[:, 0]                       # corr(0, 1) = 1
+        mask = np.ones((n, P), np.float32)
+        mask[: n // 2, 0] = 0.0                 # sensor 0 absent first half
+        mask[n // 4: 3 * n // 4, 1] = 0.0       # sensor 1 absent mid half
+        both = (mask[:, 0] > 0) & (mask[:, 1] > 0)   # last quarter only
+        st = online_update(online_init(P, H), jnp.asarray(x),
+                           mask=jnp.asarray(mask), interpret=True)
+        assert float(st.t_band[H + 1, 0]) == both.sum() == n // 4
+        est = np.asarray(online_estimate(st))
+        # the oracle: second-moment over the common rows minus the product
+        # of each sensor's own-window mean
+        m0 = x[mask[:, 0] > 0, 0].mean()
+        m1 = x[mask[:, 1] > 0, 1].mean()
+        want = (x[both, 0] * x[both, 1]).mean() - m0 * m1
+        assert est[H + 1, 0] == pytest.approx(want, rel=1e-4)
+
+    def test_death_wave_pairwise_counts_match_batch_oracle(self):
+        """After a death wave, the covariance among the SURVIVORS must equal
+        the batch estimate over all rounds, and entries pairing a survivor
+        with a dead sensor must equal the batch estimate over the rounds
+        both were alive (the pairwise t_band window)."""
+        xs = np.asarray(_rounds(jax.random.PRNGKey(5), 8, 16))
+        dead = [0, 1]
+        st = online_init(P, H)
+        for r in range(8):
+            mask = np.ones(P, np.float32)
+            if r >= 4:
+                mask[dead] = 0.0                    # die at round 4, stay dead
+            st = online_update(st, jnp.asarray(xs[r]),
+                               mask=jnp.asarray(mask), interpret=True)
+        est = np.asarray(online_estimate(st))
+        flat = xs.reshape(-1, P)
+        batch_all = np.asarray(cov.banded_estimate(
+            cov.banded_update(cov.banded_init(P, H), jnp.asarray(flat))))
+        # survivors-only entries: normalized over every round
+        assert est[H, 4] == pytest.approx(batch_all[H, 4], rel=1e-3)
+        # dead sensor's own variance: over its alive rounds only
+        flat_alive = xs[:4].reshape(-1, P)
+        batch_alive = np.asarray(cov.banded_estimate(
+            cov.banded_update(cov.banded_init(P, H), jnp.asarray(flat_alive))))
+        assert est[H, 0] == pytest.approx(batch_alive[H, 0], rel=1e-3)
+        # cross entry survivor x dead: pairwise window = the alive rounds
+        # (the survivor's mean is taken over its full history, so the mean
+        # product differs from the alive-window oracle by O(sampling noise))
+        assert est[H + 2, 0] == pytest.approx(batch_alive[H + 2, 0],
+                                              abs=0.08)
+
 
 class TestBatchedKernelWrapper:
     def test_matches_per_network_kernel(self):

@@ -102,6 +102,20 @@ class TestCheckpoint:
         np.testing.assert_array_equal(np.asarray(out["a"]),
                                       np.asarray(tree["a"]))
 
+    def test_roundtrip_bfloat16(self, tmp_path):
+        """Regression: np.savez stores bfloat16 as raw |V2 void bytes, and
+        restore used to die with 'No cast function available' — breaking
+        EVERY resume of a bf16 training run (examples/train_lm.py).  The
+        manifest's dtype record now reinterprets the bytes."""
+        tree = {"w": jnp.arange(12.0, dtype=jnp.bfloat16).reshape(3, 4),
+                "b": jnp.ones((2,), jnp.float32)}
+        CKPT.save(str(tmp_path), 1, tree)
+        out, _ = CKPT.restore(str(tmp_path), tree)
+        assert out["w"].dtype == jnp.bfloat16
+        np.testing.assert_array_equal(
+            np.asarray(out["w"], np.float32), np.asarray(tree["w"],
+                                                         np.float32))
+
     def test_atomic_no_partial_visible(self, tmp_path):
         tree = {"a": jnp.ones((4,))}
         CKPT.save(str(tmp_path), 1, tree)
