@@ -22,6 +22,10 @@ def main() -> int:
     ap.add_argument("--events-json",
                     help="also write the event-detection rows gathered "
                          "during this run to a JSON artifact")
+    ap.add_argument("--streaming-json",
+                    help="also write the streaming-fleet rows (throughput, "
+                         "chunk sweep) gathered during this run to a JSON "
+                         "artifact")
     args = ap.parse_args()
     if args.full and args.smoke:
         ap.error("--full and --smoke are mutually exclusive")
@@ -48,7 +52,8 @@ def main() -> int:
     }
 
     failed = 0
-    gathered: dict[str, list] = {"compression": [], "events": []}
+    gathered: dict[str, list] = {"compression": [], "events": [],
+                                 "streaming": []}
     print("name,us_per_call,derived")
     for name, fn in modules.items():
         if args.only and args.only not in name:
@@ -61,12 +66,23 @@ def main() -> int:
         except Exception as e:  # noqa: BLE001 — report and continue
             failed += 1
             print(f"{name}/ERROR,0,{type(e).__name__}: {e}", file=sys.stdout)
-    for path, rows in ((args.compression_json, gathered["compression"]),
-                       (args.events_json, gathered["events"])):
-        if path and rows:
-            import json
-            with open(path, "w") as fh:
-                json.dump(rows, fh, indent=2)
+    # a requested JSON artifact with NO gathered rows means the benchmark
+    # silently never ran (filtered out, or it errored above): fail loudly —
+    # an empty BENCH_* trajectory is indistinguishable from a healthy one
+    for name, path, rows in (
+            ("compression", args.compression_json, gathered["compression"]),
+            ("events", args.events_json, gathered["events"]),
+            ("streaming", args.streaming_json, gathered["streaming"])):
+        if not path:
+            continue
+        if not rows:
+            failed += 1
+            print(f"{name}/ERROR,0,requested JSON artifact {path} but the "
+                  f"benchmark emitted no rows (never ran?)", file=sys.stdout)
+            continue
+        import json
+        with open(path, "w") as fh:
+            json.dump(rows, fh, indent=2)
     sys.stdout.flush()
     return 1 if (args.smoke and failed) else 0
 

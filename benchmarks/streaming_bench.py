@@ -1,12 +1,23 @@
-"""Streaming fleet benchmark: rounds/s and the accuracy-vs-comm frontier.
+"""Streaming fleet benchmark: rounds/s, chunking, and the accuracy frontier.
 
 Times the jitted vmap+scan fleet driver at a few fleet sizes (the serving
-hot path) and sweeps the drift threshold to chart the scheduler's
+hot path), sweeps the drift threshold to chart the scheduler's
 communication-vs-retained-variance tradeoff — the streaming analogue of the
-paper's Fig. 9/14 load curves.  CSV derived column:
+paper's Fig. 9/14 load curves — and sweeps the chunk size K of the
+chunk-granular driver (DESIGN.md Sec. 12) against the per-round path.
+CSV derived column:
 
 * ``stream/fleet{B}`` — network-rounds per second at fleet size B
 * ``stream/threshold{t}`` — "retained@end|refreshes|packets" per network
+* ``stream/perround_fleet{B}`` — the chunk sweep's per-round baseline
+* ``stream/chunk{K}_fleet{B}`` — "rounds/s|speedup|launches/round|selects/round"
+  where launches/round counts the cov-update Pallas launches per streamed
+  round and selects/round the refresh cond→selects, both read off the
+  traced chunk body's jaxpr (1/K each — the structural amortization claim)
+
+Standalone: ``python benchmarks/streaming_bench.py --smoke --chunk 2,8
+--json BENCH_streaming.json`` emits the same rows as a JSON artifact
+(benchmarks/run.py --streaming-json does this inside the CI smoke run).
 """
 
 from __future__ import annotations
@@ -36,7 +47,76 @@ def _states(cfg, n_networks: int):
     return jax.vmap(lambda k: stream_init(cfg, k))(keys)
 
 
-def run(smoke: bool = False):
+def _count_prims(jaxpr, names, acc=None):
+    """Recursively count primitive occurrences in a jaxpr (sub-jaxprs
+    included) — the structural launch accounting of the chunk sweep."""
+    acc = acc if acc is not None else {}
+    for eqn in jaxpr.eqns:
+        if eqn.primitive.name in names:
+            acc[eqn.primitive.name] = acc.get(eqn.primitive.name, 0) + 1
+        for v in eqn.params.values():
+            for sub in (v if isinstance(v, (list, tuple)) else [v]):
+                if hasattr(sub, "jaxpr"):
+                    _count_prims(sub.jaxpr, names, acc)
+    return acc
+
+
+def _chunk_body_counts(cfg, chunk: int) -> tuple[float, float]:
+    """(cov launches, refresh selects) per ROUND of the chunk body."""
+    from repro.streaming import stream_init as s_init
+    from repro.streaming.driver import chunk_stream_step
+
+    st = s_init(cfg, jax.random.PRNGKey(0))
+    jx = jax.make_jaxpr(lambda s, x: chunk_stream_step(cfg, s, x))(
+        st, jnp.zeros((chunk, N_PER_ROUND, P)))
+    counts = _count_prims(jx.jaxpr, {"pallas_call", "eigh"})
+    return (counts.get("pallas_call", 0) / chunk,
+            counts.get("eigh", 0) / chunk)
+
+
+def chunk_sweep(smoke: bool = False, chunks: tuple[int, ...] | None = None):
+    """Per-round vs chunk-granular fleet driver at a few chunk sizes.
+
+    Same data, same config: only the dispatch granularity changes.  The
+    derived column records rounds/s, the speedup over the per-round
+    baseline, and the structural cov-launch / refresh-select counts per
+    round (1/K — the per-chunk launch verified on the jaxpr).
+    """
+    out = []
+    chunks = chunks or ((2, 8) if smoke else (2, 4, 8, 16))
+    B = 4 if smoke else 16
+    # the scan must be long enough that steady-state body cost dominates
+    # scheduler-noise/dispatch jitter — 32 rounds keeps smoke in seconds
+    # while making the best-of-5 ratio stable on a loaded CI box
+    n_rounds = 32 if smoke else 64
+    repeat = 5
+    cfg = StreamConfig(p=P, q=Q, halfwidth=H, forgetting=0.9,
+                       drift_threshold=0.1, warmup_rounds=5)
+    xs = _fleet(jax.random.PRNGKey(0), B, n_rounds, shift_at=n_rounds // 2)
+    states = _states(cfg, B)
+
+    def _run(**kw):
+        res = batched_stream_run(cfg, states, xs, **kw)
+        jax.block_until_ready(res[1].rho)
+        return res
+
+    _run()                                           # compile outside timing
+    _, us0 = timed(_run, repeat=repeat)
+    rps0 = B * n_rounds / (us0 / 1e6)
+    out.append(row(f"stream/perround_fleet{B}", us0, f"{rps0:.0f} rounds/s"))
+    for k in chunks:
+        _run(chunk=k)                                # compile outside timing
+        _, us = timed(_run, chunk=k, repeat=repeat)
+        rps = B * n_rounds / (us / 1e6)
+        launches, selects = _chunk_body_counts(cfg, k)
+        out.append(row(
+            f"stream/chunk{k}_fleet{B}", us,
+            f"{rps:.0f} rounds/s|{us0 / us:.2f}x vs per-round|"
+            f"{launches:.3f} launches/round|{selects:.3f} selects/round"))
+    return out
+
+
+def run(smoke: bool = False, chunks: tuple[int, ...] | None = None):
     """``smoke`` shrinks the fleets and round counts to a seconds-scale
     pass over the same code paths (the CI entrypoint guard)."""
     out = []
@@ -76,4 +156,41 @@ def run(smoke: bool = False):
             f"stream/threshold{thr}", us,
             f"retained {rho_end:.3f}|{refreshes:.1f} refreshes|"
             f"{packets:.0f} packets"))
+
+    # -- chunk-granular dispatch sweep -------------------------------------
+    out.extend(chunk_sweep(smoke=smoke, chunks=chunks))
     return out
+
+
+def main() -> int:
+    import argparse
+    import json
+
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--smoke", action="store_true",
+                    help="seconds-scale sweep (the CI setting)")
+    ap.add_argument("--chunk",
+                    help="comma-separated chunk sizes to sweep "
+                         "(default: 2,8 smoke / 2,4,8,16 full)")
+    ap.add_argument("--json",
+                    help="write the gathered rows to this path "
+                         "(the BENCH_streaming.json artifact)")
+    args = ap.parse_args()
+    chunks = tuple(int(c) for c in args.chunk.split(",")) \
+        if args.chunk else None
+    rows = run(smoke=args.smoke, chunks=chunks)
+    print("name,us_per_call,derived")
+    for r in rows:
+        print(f"{r['name']},{r['us_per_call']},{r['derived']}")
+    if args.json:
+        if not rows:
+            print(f"ERROR: no rows gathered, refusing to write {args.json}")
+            return 1
+        with open(args.json, "w") as fh:
+            json.dump(rows, fh, indent=2)
+    return 0
+
+
+if __name__ == "__main__":
+    import sys
+    sys.exit(main())

@@ -19,7 +19,8 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
-__all__ = ["cov_band_update_pallas", "cov_band_update_masked_pallas"]
+__all__ = ["cov_band_update_pallas", "cov_band_update_masked_pallas",
+           "cov_band_update_chunk_pallas", "cov_band_update_chunk_masked_pallas"]
 
 
 def _kernel(x_ref, xpad_ref, out_ref, *, nb: int, block_p: int):
@@ -117,3 +118,124 @@ def cov_band_update_masked_pallas(x: jnp.ndarray, x_padded: jnp.ndarray,
         out_shape=jax.ShapeDtypeStruct((nb, p), jnp.float32),
         interpret=interpret,
     )(x, x_padded, mask, mask_padded)
+
+
+def _chunk_kernel(x_ref, xpad_ref, w_ref, out_ref, *, nb: int, block_p: int):
+    i = pl.program_id(0)
+    j = pl.program_id(1)
+    base = i * block_p
+
+    @pl.when(j == 0)
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    # the per-row chunk weight (the round's exponential-forgetting factor
+    # gamma^(K-1-t), or 0 for a padded row) is fused into the tile load
+    # exactly like the mask multiply; each band product carries its round's
+    # weight exactly once (the shifted operand stays unweighted)
+    x = x_ref[...].astype(jnp.float32) * w_ref[...].astype(jnp.float32)
+    rows = []
+    for k in range(nb):
+        xs = xpad_ref[:, pl.dslice(base + k, block_p)].astype(jnp.float32)
+        rows.append(jnp.sum(x * xs, axis=0))            # (block_p,)
+    out_ref[...] = out_ref[...] + jnp.stack(rows, axis=0).astype(out_ref.dtype)
+
+
+def cov_band_update_chunk_pallas(x: jnp.ndarray, x_padded: jnp.ndarray,
+                                 w: jnp.ndarray, *, halfwidth: int,
+                                 block_p: int, block_n: int,
+                                 interpret: bool = False) -> jnp.ndarray:
+    """Multi-round fused band update: one launch folds a whole chunk.
+
+    ``x`` is a chunk of rounds flattened on the row axis, (K*n, p);
+    ``w`` (K*n, 1) carries each row's round weight (the exponential-
+    forgetting factor of its round within the chunk; 0 for pad rows).
+    delta[k, i] = sum_r w[r] * x[r, i] * x[r, i + k - h].
+
+    Same tiling as :func:`cov_band_update_pallas` with the flattened row
+    axis as the inner grid dimension: the (2h+1, block_p) accumulator tile
+    is revisited in VMEM across the WHOLE chunk and written back to HBM
+    once per feature block — one band read-modify-write per chunk instead
+    of one per round.  At K=1 with w=1 the grid schedule and float
+    accumulation order are identical to the per-round kernel (x * 1.0 is a
+    bitwise identity), which is what makes the probe_every=1 differential
+    test in tests/test_chunked_streaming.py exact.
+    """
+    rows, p = x.shape
+    h = halfwidth
+    nb = 2 * h + 1
+    assert p % block_p == 0 and rows % block_n == 0, (rows, p, block_n, block_p)
+    assert x_padded.shape == (rows, p + 2 * h)
+    assert w.shape == (rows, 1)
+    grid = (p // block_p, rows // block_n)              # row axis innermost
+    return pl.pallas_call(
+        functools.partial(_chunk_kernel, nb=nb, block_p=block_p),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_n, block_p), lambda i, j: (j, i)),
+            pl.BlockSpec((block_n, p + 2 * h), lambda i, j: (j, 0)),
+            pl.BlockSpec((block_n, 1), lambda i, j: (j, 0)),
+        ],
+        out_specs=pl.BlockSpec((nb, block_p), lambda i, j: (0, i)),
+        out_shape=jax.ShapeDtypeStruct((nb, p), jnp.float32),
+        interpret=interpret,
+    )(x, x_padded, w)
+
+
+def _chunk_masked_kernel(x_ref, xpad_ref, m_ref, mpad_ref, w_ref, out_ref,
+                         *, nb: int, block_p: int):
+    i = pl.program_id(0)
+    j = pl.program_id(1)
+    base = i * block_p
+
+    @pl.when(j == 0)
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    # mask fused like the per-round masked kernel, then the round weight
+    # (same load order keeps K=1/w=1 bit-identical to that kernel)
+    x = (x_ref[...] * m_ref[...]).astype(jnp.float32) \
+        * w_ref[...].astype(jnp.float32)
+    rows = []
+    for k in range(nb):
+        sl = pl.dslice(base + k, block_p)
+        xs = (xpad_ref[:, sl] * mpad_ref[:, sl]).astype(jnp.float32)
+        rows.append(jnp.sum(x * xs, axis=0))            # (block_p,)
+    out_ref[...] = out_ref[...] + jnp.stack(rows, axis=0).astype(out_ref.dtype)
+
+
+def cov_band_update_chunk_masked_pallas(x: jnp.ndarray, x_padded: jnp.ndarray,
+                                        mask: jnp.ndarray,
+                                        mask_padded: jnp.ndarray,
+                                        w: jnp.ndarray, *, halfwidth: int,
+                                        block_p: int, block_n: int,
+                                        interpret: bool = False
+                                        ) -> jnp.ndarray:
+    """Masked chunk variant: delta[k,i] = sum_r w_r m[r,i] x[r,i] m[r,i'] x[r,i'].
+
+    Rows are the flattened (K*n) chunk; ``mask`` carries per-row validity
+    (liveness broadcast over the round's epochs, or per-reading dropout)
+    and ``w`` the per-row round weights, both fused into the tile loads.
+    """
+    rows, p = x.shape
+    h = halfwidth
+    nb = 2 * h + 1
+    assert p % block_p == 0 and rows % block_n == 0, (rows, p, block_n, block_p)
+    assert x_padded.shape == (rows, p + 2 * h)
+    assert mask.shape == (rows, p) and mask_padded.shape == (rows, p + 2 * h)
+    assert w.shape == (rows, 1)
+    grid = (p // block_p, rows // block_n)              # row axis innermost
+    return pl.pallas_call(
+        functools.partial(_chunk_masked_kernel, nb=nb, block_p=block_p),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_n, block_p), lambda i, j: (j, i)),
+            pl.BlockSpec((block_n, p + 2 * h), lambda i, j: (j, 0)),
+            pl.BlockSpec((block_n, block_p), lambda i, j: (j, i)),
+            pl.BlockSpec((block_n, p + 2 * h), lambda i, j: (j, 0)),
+            pl.BlockSpec((block_n, 1), lambda i, j: (j, 0)),
+        ],
+        out_specs=pl.BlockSpec((nb, block_p), lambda i, j: (0, i)),
+        out_shape=jax.ShapeDtypeStruct((nb, p), jnp.float32),
+        interpret=interpret,
+    )(x, x_padded, mask, mask_padded, w)

@@ -14,7 +14,9 @@ import jax
 import jax.numpy as jnp
 
 from repro.kernels.banded_matvec import banded_matvec_pallas, banded_matmul_pallas
-from repro.kernels.cov_update import (cov_band_update_pallas,
+from repro.kernels.cov_update import (cov_band_update_chunk_masked_pallas,
+                                      cov_band_update_chunk_pallas,
+                                      cov_band_update_pallas,
                                       cov_band_update_masked_pallas)
 from repro.kernels.pca_project import (pca_monitor_pallas,
                                        pca_project_pallas,
@@ -23,6 +25,7 @@ from repro.kernels.pca_project import (pca_monitor_pallas,
 
 __all__ = ["banded_matvec", "banded_matmul", "cov_band_update",
            "cov_band_update_masked", "cov_band_update_batched",
+           "cov_band_update_chunk", "cov_band_update_chunk_batched",
            "pca_project", "pca_reconstruct",
            "supervised_compress", "supervised_compress_batched",
            "pca_monitor", "pca_monitor_batched"]
@@ -181,6 +184,119 @@ def cov_band_update_batched(x: jnp.ndarray, halfwidth: int,
     itp = _auto_interpret(interpret)
     return jax.vmap(
         lambda xi: _cov_band_update(xi, halfwidth, bp, bn, itp))(x)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("halfwidth", "block_p", "block_n",
+                                    "interpret"))
+def _cov_band_update_chunk(x, w, halfwidth, block_p, block_n, interpret):
+    h = halfwidth
+    xpad = jnp.pad(x, ((0, 0), (h, h)))
+    return cov_band_update_chunk_pallas(x, xpad, w, halfwidth=h,
+                                        block_p=block_p, block_n=block_n,
+                                        interpret=interpret)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("halfwidth", "block_p", "block_n",
+                                    "interpret"))
+def _cov_band_update_chunk_masked(x, mask, w, halfwidth, block_p, block_n,
+                                  interpret):
+    h = halfwidth
+    xpad = jnp.pad(x, ((0, 0), (h, h)))
+    mpad = jnp.pad(mask, ((0, 0), (h, h)))
+    return cov_band_update_chunk_masked_pallas(
+        x, xpad, mask, mpad, w, halfwidth=h, block_p=block_p,
+        block_n=block_n, interpret=interpret)
+
+
+def cov_band_update_chunk(xs: jnp.ndarray, weights: jnp.ndarray,
+                          halfwidth: int, *,
+                          mask: jnp.ndarray | None = None,
+                          block_p: int | None = None,
+                          block_n: int | None = None,
+                          interpret: bool | None = None) -> jnp.ndarray:
+    """Fold a (K, n, p) chunk of rounds into one delta band in ONE launch.
+
+    ``weights`` (K,) scales each round's contribution —
+    ``delta[k, i] = sum_t w[t] sum_r xs[t, r, i] * xs[t, r, i + k - h]`` —
+    the per-round exponential-forgetting factors of the streaming fold
+    (``gamma^(K-1-t)``), with 0 marking a padded round.  ``mask`` is an
+    optional validity array, (K, p) per-round liveness or (K, n, p)
+    per-reading dropout, fused into the tile loads like
+    :func:`cov_band_update_masked`.
+
+    Pad-to-block treatment: the flattened (K·n) row axis is zero-padded to
+    the block grid with ZERO-WEIGHT rows (an exact no-op product), and an
+    awkward feature axis (e.g. prime p) is zero-padded and the band sliced
+    back, exactly like :func:`pca_project`; divisor-covered shapes keep the
+    historical tiling, so at K=1 / w=1 the result is bit-identical to
+    :func:`cov_band_update`.
+    """
+    if xs.ndim != 3:
+        raise ValueError(f"expected (chunk, n, p), got {xs.shape}")
+    K, n, p = xs.shape
+    weights = jnp.asarray(weights, jnp.float32)
+    if weights.shape != (K,):
+        raise ValueError(f"weights shape {weights.shape} != {(K,)}")
+    bp = block_p or _pick_block_padded(p, target=512)
+    # the row tile covers the FLATTENED chunk: a K-round chunk becomes
+    # ~K-fold fewer grid cells than K per-round launches (at K=1 the pick
+    # degenerates to the per-round choice — bit-identity preserved)
+    bn = block_n or _pick_block_padded(K * n, target=128)
+    itp = _auto_interpret(interpret)
+    x = xs.reshape(K * n, p)
+    w = jnp.repeat(weights, n)[:, None]                 # (K*n, 1) row weights
+    if mask is not None:
+        mask = jnp.asarray(mask, xs.dtype)
+        if mask.ndim == 2:
+            if mask.shape != (K, p):
+                raise ValueError(f"mask shape {mask.shape} != {(K, p)}")
+            mask = jnp.broadcast_to(mask[:, None, :], (K, n, p))
+        if mask.shape != (K, n, p):
+            raise ValueError(f"mask shape {mask.shape} != {(K, n, p)}")
+        mask = mask.reshape(K * n, p)
+    rows_pad = _pad_dim(K * n, bn)
+    p_pad = _pad_dim(p, bp)
+    if (rows_pad, p_pad) != (K * n, p):
+        x = jnp.pad(x, ((0, rows_pad - K * n), (0, p_pad - p)))
+        w = jnp.pad(w, ((0, rows_pad - K * n), (0, 0)))
+        if mask is not None:
+            mask = jnp.pad(mask, ((0, rows_pad - K * n), (0, p_pad - p)))
+    if mask is None:
+        out = _cov_band_update_chunk(x, w, halfwidth, bp, bn, itp)
+    else:
+        out = _cov_band_update_chunk_masked(x, mask, w, halfwidth, bp, bn,
+                                            itp)
+    return out[:, :p]
+
+
+def cov_band_update_chunk_batched(xs: jnp.ndarray, weights: jnp.ndarray,
+                                  halfwidth: int, *,
+                                  mask: jnp.ndarray | None = None,
+                                  block_p: int | None = None,
+                                  block_n: int | None = None,
+                                  interpret: bool | None = None
+                                  ) -> jnp.ndarray:
+    """Fleet form of :func:`cov_band_update_chunk` over xs (B, K, n, p).
+
+    ``weights`` is (B, K) per-network round weights (or (K,) shared),
+    ``mask`` (B, K, p) / (B, K, n, p) / None.  A ``vmap`` of the fused
+    chunk kernel: Pallas turns the networks axis into an extra outer grid
+    axis, keeping the per-network tiling identical.
+    """
+    if xs.ndim != 4:
+        raise ValueError(f"expected (networks, chunk, n, p), got {xs.shape}")
+    B, K, n, p = xs.shape
+    weights = jnp.asarray(weights, jnp.float32)
+    if weights.ndim == 1:
+        weights = jnp.broadcast_to(weights[None, :], (B, K))
+    run = lambda xi, wi, mi: cov_band_update_chunk(
+        xi, wi, halfwidth, mask=mi, block_p=block_p, block_n=block_n,
+        interpret=interpret)
+    if mask is None:
+        return jax.vmap(lambda xi, wi: run(xi, wi, None))(xs, weights)
+    return jax.vmap(run)(xs, weights, jnp.asarray(mask, xs.dtype))
 
 
 @functools.partial(jax.jit,

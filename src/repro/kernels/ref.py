@@ -14,7 +14,8 @@ from __future__ import annotations
 import jax.numpy as jnp
 
 __all__ = ["banded_matvec", "banded_matmul", "cov_band_update",
-           "cov_band_update_masked", "pca_project", "pca_reconstruct",
+           "cov_band_update_masked", "cov_band_update_chunk",
+           "cov_band_update_chunk_masked", "pca_project", "pca_reconstruct",
            "supervised_compress", "pca_monitor"]
 
 
@@ -63,6 +64,33 @@ def cov_band_update_masked(x: jnp.ndarray, mask: jnp.ndarray,
     if mask.ndim == 1:
         mask = jnp.broadcast_to(mask[None, :], x.shape)
     return cov_band_update(x * mask, halfwidth)
+
+
+def cov_band_update_chunk(xs: jnp.ndarray, weights: jnp.ndarray,
+                          halfwidth: int) -> jnp.ndarray:
+    """Multi-round weighted Eq. 10: the per-round bands scaled by each
+    round's chunk weight (gamma^(K-1-t) in the streaming fold; 0 for a
+    padded round) and summed — ``delta = sum_t w[t] * band(xs[t])``."""
+    weights = jnp.asarray(weights, jnp.float32)
+    bands = jnp.stack([cov_band_update(xs[t], halfwidth)
+                       for t in range(xs.shape[0])], axis=0)
+    return jnp.einsum("t,tkp->kp", weights, bands)
+
+
+def cov_band_update_chunk_masked(xs: jnp.ndarray, masks: jnp.ndarray,
+                                 weights: jnp.ndarray,
+                                 halfwidth: int) -> jnp.ndarray:
+    """Masked chunk variant: ``delta = sum_t w[t] * band(xs[t] * m[t])``.
+
+    ``masks`` is (K, p) per-round liveness or (K, n, p) per-reading
+    dropout, broadcast like :func:`cov_band_update_masked`."""
+    masks = jnp.asarray(masks, xs.dtype)
+    if masks.ndim == 2:
+        masks = jnp.broadcast_to(masks[:, None, :], xs.shape)
+    weights = jnp.asarray(weights, jnp.float32)
+    bands = jnp.stack([cov_band_update(xs[t] * masks[t], halfwidth)
+                       for t in range(xs.shape[0])], axis=0)
+    return jnp.einsum("t,tkp->kp", weights, bands)
 
 
 def pca_project(x: jnp.ndarray, w: jnp.ndarray) -> jnp.ndarray:

@@ -328,13 +328,29 @@ def _write_prefix(cache, k, v, positions):
 
 
 def prefill(params, cfg, tokens: jnp.ndarray, state: "DecodeState",
-            enc_input: jnp.ndarray | None = None):
+            enc_input: jnp.ndarray | None = None,
+            valid_len: jnp.ndarray | None = None):
     """Process a prompt, populating the decode state.
 
     tokens: (B, S) prompt (content tokens; hybrid meta tokens are handled
     internally and occupy cache slots [0, n_meta)).
     Returns (last-position logits (B, V) fp32, new state).  Decoding then
     continues from t = S (content position).
+
+    ``valid_len`` (traced scalar), if given, marks only the first
+    ``valid_len`` content tokens as real: the prompt may be zero-padded to
+    a bucketed length S so ONE compiled program serves every prompt in the
+    bucket (the serving engine pads to power-of-two buckets — compile
+    count O(log max_len) instead of one trace per distinct length).
+    Causality means padded future positions never influence the real
+    prefix; their cache slots are written with position -1, which every
+    decode-time attention mask already excludes, and the returned logits
+    are read at content position ``valid_len - 1``.  Only meaningful when
+    the pad suffix is truly inert — dense attention with position-indexed
+    caches.  An SSM scan state would absorb the pad tokens, and MoE
+    routing counts them against expert capacity (a pad token's top-1 slot
+    can evict a real token's lower choice), so callers keep exact lengths
+    for those families.
     """
     B, S = tokens.shape
     h = jnp.take(params["embed"], tokens, axis=0)
@@ -344,6 +360,8 @@ def prefill(params, cfg, tokens: jnp.ndarray, state: "DecodeState",
                                 (B, n_meta, cfg.d_model)).astype(h.dtype)
         h = jnp.concatenate([meta, h], axis=1)
     positions = jnp.arange(h.shape[1])
+    pos_write = positions if valid_len is None else jnp.where(
+        positions < n_meta + valid_len, positions, -1)
     windows = jnp.asarray(layer_windows(cfg))
 
     if cfg.family == "ssm":
@@ -366,7 +384,7 @@ def prefill(params, cfg, tokens: jnp.ndarray, state: "DecodeState",
             a, (k, v) = L.attention_apply(lp["attn"], cfg, xn, positions,
                                           causal=True, window=w,
                                           return_kv=True)
-            new_a = _write_prefix(acache, k, v, positions)
+            new_a = _write_prefix(acache, k, v, pos_write)
             s, new_s = SSM.ssd_apply(lp["ssm"], cfg, xn,
                                      chunk=min(128, hh.shape[1]),
                                      return_state=True)
@@ -392,7 +410,7 @@ def prefill(params, cfg, tokens: jnp.ndarray, state: "DecodeState",
             xn = L.rms_norm(hh, lp["ln1"], cfg.norm_eps)
             a, (k, v) = L.attention_apply(lp["attn"], cfg, xn, positions,
                                           causal=True, return_kv=True)
-            new_a = _write_prefix(acache, k, v, positions)
+            new_a = _write_prefix(acache, k, v, pos_write)
             hh = hh + a
             ck = jnp.einsum("bsd,dhk->bshk", enc_out, lp["cross"]["wk"])
             cv = jnp.einsum("bsd,dhk->bshk", enc_out, lp["cross"]["wv"])
@@ -422,7 +440,7 @@ def prefill(params, cfg, tokens: jnp.ndarray, state: "DecodeState",
             a, (k, v) = L.attention_apply(lp["attn"], cfg, xn, positions,
                                           causal=True, window=w,
                                           return_kv=True)
-            new_a = _write_prefix(acache, k, v, positions)
+            new_a = _write_prefix(acache, k, v, pos_write)
             hh = hh + a
             if cfg.family == "moe":
                 y, _ = MOE.moe_apply(lp["moe"], cfg,
@@ -438,7 +456,9 @@ def prefill(params, cfg, tokens: jnp.ndarray, state: "DecodeState",
         state = state._replace(attn=new_attn)
 
     h = L.rms_norm(h, params["final_norm"], cfg.norm_eps)
-    last = h[:, -1]
+    # last REAL content position: the bucket's pad suffix carries no signal
+    last = h[:, -1] if valid_len is None \
+        else jnp.take(h, n_meta + valid_len - 1, axis=1)
     logits = jnp.einsum("bd,dv->bv", last, params["out_head"],
                         preferred_element_type=jnp.float32)
     return logits, state

@@ -7,12 +7,13 @@ batch, host-side slot management, jitted steps*:
   slot's region of the decode state; **decode** advances all active slots one
   token per call; finished slots (EOS or max_tokens) are refilled from the
   queue.
-* :class:`StreamingPCAEngine` — the sensor path (DESIGN.md Sec. 8.4): each
-  slot holds one live sensor network; every engine step folds one measurement
-  round per slot through the jitted batched streaming step
-  (:func:`repro.streaming.driver.stream_step` under ``vmap``), drift-triggered
-  basis refreshes happen inside the step, and exhausted streams retire with
-  their final basis + Table-1 communication bill.
+* :class:`StreamingPCAEngine` — the sensor path (DESIGN.md Sec. 8.4/12):
+  each slot holds one live sensor network; every engine step pre-stages and
+  folds the next K-round chunk per slot through the jitted batched chunk
+  step (:func:`repro.streaming.driver.chunk_stream_step` under ``vmap``,
+  fleet state donated so XLA updates it in place), drift-triggered basis
+  refreshes happen at chunk boundaries inside the step, and exhausted
+  streams retire with their final basis + Table-1 communication bill.
 
 The streaming engine is fault-aware (DESIGN.md Sec. 9): each slot carries a
 :class:`repro.runtime.health.HealthMonitor` driven by a *logical* clock (one
@@ -40,8 +41,8 @@ import numpy as np
 from repro.models import transformer as T
 from repro.runtime.elastic import RescalePlan, plan_mesh
 from repro.runtime.health import HealthMonitor, StragglerPolicy
-from repro.streaming.driver import (StreamConfig, StreamState, stream_init,
-                                    stream_step)
+from repro.streaming.driver import (StreamConfig, StreamState,
+                                    chunk_stream_step, stream_init)
 
 __all__ = ["Request", "ServeConfig", "Engine",
            "StreamRequest", "StreamResult", "StreamingPCAEngine"]
@@ -79,7 +80,7 @@ class Engine:
         self._decode = jax.jit(
             lambda p, tok, st, t: T.decode_step(p, cfg, tok, st, t))
         self._prefill = jax.jit(
-            lambda p, tok, st: T.prefill(p, cfg, tok, st))
+            lambda p, tok, st, vl: T.prefill(p, cfg, tok, st, valid_len=vl))
         self._last_tok = np.zeros((scfg.slots, 1), np.int32)
 
     # -- request lifecycle ---------------------------------------------------
@@ -93,16 +94,36 @@ class Engine:
                 req = self.queue.pop(0)
                 self._prefill_slot(slot, req)
 
+    def _bucket_len(self, s_len: int) -> int:
+        """Power-of-two prompt bucket: one compiled prefill per bucket
+        instead of one re-trace per distinct prompt length — compile count
+        O(log max_len).  Dense attention only: its caches are
+        position-indexed, so the pad suffix is masked out exactly (pos -1).
+        An SSM scan state would absorb the pad tokens, and MoE expert
+        routing counts them against expert capacity (pad top-1 slots can
+        evict real tokens' lower choices, shifting logits), so those
+        families keep exact lengths.
+        """
+        if self.cfg.family != "dense":
+            return s_len
+        bucket = 1 << (max(s_len, 8) - 1).bit_length()
+        return max(s_len, min(bucket, self.scfg.max_len))
+
     def _prefill_slot(self, slot: int, req: Request) -> None:
         """Run prefill for one request and splice its state into the slot.
 
-        Implementation note: prefill is batched over a single row; the
+        Implementation note: prefill is batched over a single row, padded
+        to the power-of-two length bucket (masked via ``valid_len``); the
         resulting caches are written into slot ``slot`` of the engine state.
         """
-        prompt = jnp.asarray(req.prompt[None, :], jnp.int32)
+        s_len = len(req.prompt)
+        padded = np.zeros(self._bucket_len(s_len), np.int32)
+        padded[:s_len] = req.prompt
+        prompt = jnp.asarray(padded[None, :])
         single = T.init_decode_state(self.cfg, 1, self.scfg.max_len,
                                      dtype=jnp.dtype(self.scfg.dtype))
-        logits, single = self._prefill(self.params, prompt, single)
+        logits, single = self._prefill(self.params, prompt, single,
+                                       jnp.asarray(s_len, jnp.int32))
 
         def splice(full, one):
             # every stacked cache leaf has layout (L, B, ...): batch = axis 1
@@ -219,13 +240,26 @@ class StreamingPCAEngine:
     min_alive_fraction: a slot heartbeats only while at least this fraction
         of its sensors is alive; below it the network is considered
         unresponsive and the monitor's stall verdict retires it.
+    chunk: rounds folded per engine step (K).  Each step pre-stages every
+        slot's next K rounds device-side in ONE upload, folds them through
+        the fused chunk kernel, and evaluates ONE scheduler decision per
+        slot — the per-dispatch overhead (launches, refresh selects,
+        host→device transfers, slot bookkeeping) is amortized over K
+        measurement epochs while the Table-1 bill stays per-epoch exact.
+        Admission and retirement happen at chunk boundaries; a stream
+        whose tail is shorter than K folds only its real rounds (the
+        chunk step's per-round validity).  ``chunk=1`` reproduces the
+        per-round engine bit-exactly.
     """
 
     def __init__(self, cfg: StreamConfig, slots: int = 8, seed: int = 0,
                  health_policy: StragglerPolicy | None = None,
-                 min_alive_fraction: float = 0.25):
+                 min_alive_fraction: float = 0.25, chunk: int = 1):
+        if chunk < 1:
+            raise ValueError(f"chunk must be >= 1, got {chunk}")
         self.cfg = cfg
         self.slots = slots
+        self.chunk = chunk
         self.min_alive_fraction = min_alive_fraction
         self.health_policy = health_policy or StragglerPolicy(
             stall_timeout=2.5)          # logical steps, not seconds
@@ -236,16 +270,30 @@ class StreamingPCAEngine:
         self.active: list[StreamRequest | None] = [None] * slots
         self.cursor = np.zeros(slots, np.int64)     # next round per slot
         self.queue: list[StreamRequest] = []
-        # two jitted steps: the masked one only runs when some active
+        # two jitted chunk steps: the masked one only runs when some active
         # request actually carries a liveness schedule — fault-free fleets
-        # stay on the unmasked kernel (ops.py's mask=None fast path); the
-        # two are bit-identical under an all-ones mask, so the switch is
-        # invisible to results
+        # never build or upload a mask batch at all (and stay on the
+        # unmasked kernel); the two are bit-identical under an all-ones
+        # mask, so the switch is invisible to results.  The fleet state is
+        # DONATED: XLA updates the slot pytree in place instead of
+        # allocating a fresh copy every step (the states are never read
+        # after the call — the returned buffers replace them).
         self._step_fn = jax.jit(
-            jax.vmap(lambda s, x: stream_step(cfg, s, x)))
+            jax.vmap(lambda s, x, rv: chunk_stream_step(
+                cfg, s, x, round_valid=rv)),
+            donate_argnums=(0,))
         self._step_fn_masked = jax.jit(
-            jax.vmap(lambda s, x, m: stream_step(cfg, s, x, m)))
+            jax.vmap(lambda s, x, m, rv: chunk_stream_step(cfg, s, x, m, rv)),
+            donate_argnums=(0,))
         self._n: int | None = None       # epochs/round, fixed fleet-wide
+        # persistent zero/ones templates, allocated once on the first step
+        # (need _n).  The staging batch itself is a FRESH array per chunk
+        # — device_put may alias aligned host memory on CPU, so a reused
+        # fill buffer could be mutated under an in-flight upload; one
+        # slots×K×n×p allocation per K rounds is the amortized, safe form
+        # of the old per-round np.stack
+        self._zeros_chunk: np.ndarray | None = None
+        self._ones_chunk_mask: np.ndarray | None = None
         # ε-supervised compression accounting (cfg.compression only):
         # per-slot running worst sink error / flagged-raw extras / bits on
         # air for the current segment.  Accumulated ON DEVICE (jnp ops, no
@@ -304,39 +352,38 @@ class StreamingPCAEngine:
             raise ValueError(f"stream n={n} != engine n={self._n}")
         self.queue.append(req)
 
-    def _splice_reset(self, slot: int) -> None:
-        """Re-init slot ``slot`` of the stacked state (fresh network)."""
-        fresh = stream_init(self.cfg, self._slot_keys[slot])
-
-        def splice(full, one):
-            return full.at[slot].set(one)
-
-        self.states = jax.tree.map(splice, self.states, fresh)
-
     def _admit(self) -> None:
+        """Fill empty slots from the queue, then reset every admitted
+        slot's device state in ONE batched splice (one scatter per state
+        leaf and per accounting vector, however many slots were admitted —
+        the per-slot ``.at[slot].set`` loop re-dispatched a scatter per
+        slot per leaf)."""
+        newly: list[int] = []
         for slot in range(self.slots):
             if self.active[slot] is None and self.queue:
                 req = self.queue.pop(0)
                 self.active[slot] = req
                 self.cursor[slot] = req.resume_at
-                self._splice_reset(slot)
-                if self.cfg.compression is not None:
-                    self._comp_max_err = self._comp_max_err.at[slot].set(0.0)
-                    self._comp_extras = self._comp_extras.at[slot].set(0.0)
-                    self._comp_bits = self._comp_bits.at[slot].set(0.0)
-                if self.cfg.detection is not None:
-                    self._det_events = self._det_events.at[slot].set(0.0)
-                    self._det_alarm_packets = \
-                        self._det_alarm_packets.at[slot].set(0.0)
+                newly.append(slot)
                 monitor = HealthMonitor(self.health_policy,
                                         clock=lambda: float(self._clock))
                 monitor.heartbeat(step=self._clock, duration=1.0)
                 self.health[slot] = monitor
-
-    def _mask_at(self, req: StreamRequest, r: int) -> np.ndarray:
-        if req.liveness is None:
-            return np.ones(self.cfg.p, np.float32)
-        return np.asarray(req.liveness[r], np.float32)
+        if not newly:
+            return
+        idx_np = np.asarray(newly, np.int32)
+        idx = jnp.asarray(idx_np)
+        fresh = jax.vmap(lambda k: stream_init(self.cfg, k))(
+            self._slot_keys[idx_np])
+        self.states = jax.tree.map(lambda full, f: full.at[idx].set(f),
+                                   self.states, fresh)
+        if self.cfg.compression is not None:
+            self._comp_max_err = self._comp_max_err.at[idx].set(0.0)
+            self._comp_extras = self._comp_extras.at[idx].set(0.0)
+            self._comp_bits = self._comp_bits.at[idx].set(0.0)
+        if self.cfg.detection is not None:
+            self._det_events = self._det_events.at[idx].set(0.0)
+            self._det_alarm_packets = self._det_alarm_packets.at[idx].set(0.0)
 
     def _result(self, slot: int, reason: str) -> StreamResult:
         state_i = jax.tree.map(lambda a: a[slot], self.states)
@@ -420,14 +467,19 @@ class StreamingPCAEngine:
 
     # -- main loop ------------------------------------------------------------
     def step(self) -> int:
-        """Fold one measurement round for every active slot; returns #active.
+        """Fold the next K-round chunk for every active slot; returns #active.
 
-        Idle slots process a zero round (masked out at retirement — their
-        state is re-initialized on admission), keeping the device batch
-        static like the decode path.  Per step, each live slot heartbeats
-        its HealthMonitor iff enough of its sensors are alive this round;
-        slots ruled stalled afterwards are retired dead (and re-queued from
-        their revival round, if any).
+        Idle slots carry a zero chunk with zero round-validity (they fold
+        nothing and book nothing; their state is re-initialized on
+        admission), keeping the device batch static like the decode path.
+        A live slot whose stream ends mid-chunk folds only its real tail
+        rounds.  The hot loop is host-sync-free: one staging-buffer fill +
+        one upload per chunk, the jitted step updates the donated fleet
+        state in place, and the accounting stays on device — scalars are
+        pulled to host only at retirement.  Per step, each live slot
+        heartbeats its HealthMonitor iff enough of its sensors were alive
+        over the chunk's rounds; slots ruled stalled afterwards are
+        retired dead (and re-queued from their revival round, if any).
         """
         self._admit()
         self._clock += 1
@@ -435,25 +487,50 @@ class StreamingPCAEngine:
         self._replan(len(live))
         if not live:
             return 0
-        zeros_round = np.zeros((self._n, self.cfg.p), np.float32)
-        ones_mask = np.ones(self.cfg.p, np.float32)
-        batch = np.stack([
-            np.asarray(self.active[s].rounds[self.cursor[s]], np.float32)
-            if self.active[s] is not None else zeros_round
-            for s in range(self.slots)])
-        masks = np.stack([
-            self._mask_at(self.active[s], int(self.cursor[s]))
-            if self.active[s] is not None else ones_mask
-            for s in range(self.slots)])
+        K, p = self.chunk, self.cfg.p
+        if self._zeros_chunk is None:       # one-time template allocations
+            self._zeros_chunk = np.zeros((K, self._n, p), np.float32)
+            self._ones_chunk_mask = np.ones((K, p), np.float32)
+        batch = np.empty((self.slots, K, self._n, p), np.float32)
+        rv = np.zeros((self.slots, K), np.float32)
+        consumed = np.zeros(self.slots, np.int64)
+        start = self.cursor.copy()
+        for s in range(self.slots):
+            req = self.active[s]
+            if req is None:
+                batch[s] = self._zeros_chunk
+                continue
+            c = int(start[s])
+            take = min(K, req.rounds.shape[0] - c)
+            batch[s, :take] = req.rounds[c:c + take]
+            if take < K:
+                batch[s, take:] = 0.0
+            rv[s, :take] = 1.0
+            consumed[s] = take
+        # fast path: when no active request carries a liveness schedule the
+        # mask batch is neither built nor uploaded (the masked and unmasked
+        # steps are bit-identical under all-ones masks, so the switch is
+        # invisible to results)
         any_schedule = any(self.active[s] is not None
                            and self.active[s].liveness is not None
                            for s in live)
         if any_schedule:
+            masks = np.empty((self.slots, K, p), np.float32)
+            for s in range(self.slots):
+                req = self.active[s]
+                if req is None or req.liveness is None:
+                    masks[s] = self._ones_chunk_mask
+                    continue
+                c, take = int(start[s]), int(consumed[s])
+                masks[s, :take] = req.liveness[c:c + take]
+                if take < K:
+                    masks[s, take:] = 1.0
             self.states, metrics = self._step_fn_masked(
-                self.states, jnp.asarray(batch), jnp.asarray(masks))
+                self.states, jnp.asarray(batch), jnp.asarray(masks),
+                jnp.asarray(rv))
         else:
-            self.states, metrics = self._step_fn(self.states,
-                                                 jnp.asarray(batch))
+            self.states, metrics = self._step_fn(
+                self.states, jnp.asarray(batch), jnp.asarray(rv))
         # idle slots fold zero rounds: mask them out of the books
         # (where, not multiply — robust to any NaN in an idle slot)
         lm = np.zeros(self.slots, np.float32)
@@ -476,10 +553,14 @@ class StreamingPCAEngine:
             self._det_alarm_packets = (self._det_alarm_packets
                                        + alarms * self._det_alarm_price)
         for s in live:
-            if masks[s].mean() >= self.min_alive_fraction:
+            req = self.active[s]
+            c, take = int(start[s]), int(consumed[s])
+            frac = 1.0 if req.liveness is None \
+                else float(req.liveness[c:c + take].mean())
+            if frac >= self.min_alive_fraction:
                 self.health[s].heartbeat(step=self._clock, duration=1.0)
-            self.cursor[s] += 1
-            if self.cursor[s] >= self.active[s].rounds.shape[0]:
+            self.cursor[s] += take
+            if self.cursor[s] >= req.rounds.shape[0]:
                 self._retire(s)
             elif self.health[s].stalled():
                 self._retire_dead(s)

@@ -23,8 +23,8 @@ driver       single-network stream loop, ``jax.vmap`` batched multi-network
 """
 
 from repro.streaming.online_cov import (
-    OnlineCovariance, online_init, online_update, online_estimate,
-    stream_covariance,
+    OnlineCovariance, online_init, online_update, online_update_chunk,
+    online_estimate, stream_covariance,
 )
 from repro.streaming.scheduler import (
     RecomputeScheduler, SchedulerState, retained_fraction, ortho_refresh,
@@ -39,12 +39,13 @@ from repro.streaming.detector import (
 )
 from repro.streaming.driver import (
     StreamConfig, StreamState, RoundMetrics, stream_init, stream_step,
-    stream_run, batched_stream_run, sharded_stream_run,
+    chunk_stream_step, stream_run, chunked_stream_run, batched_stream_run,
+    sharded_stream_run,
 )
 
 __all__ = [
-    "OnlineCovariance", "online_init", "online_update", "online_estimate",
-    "stream_covariance",
+    "OnlineCovariance", "online_init", "online_update",
+    "online_update_chunk", "online_estimate", "stream_covariance",
     "RecomputeScheduler", "SchedulerState", "retained_fraction",
     "ortho_refresh", "ortho_refresh_evals",
     "CompressionConfig", "RoundCompression", "quantize_scores",
@@ -52,5 +53,6 @@ __all__ = [
     "DetectionConfig", "DetectorState", "RoundDetection", "detect_round",
     "detector_init", "wilson_hilferty",
     "StreamConfig", "StreamState", "RoundMetrics", "stream_init",
-    "stream_step", "stream_run", "batched_stream_run", "sharded_stream_run",
+    "stream_step", "chunk_stream_step", "stream_run", "chunked_stream_run",
+    "batched_stream_run", "sharded_stream_run",
 ]

@@ -7,6 +7,11 @@ Layering (DESIGN.md Sec. 8.3):
   one scheduler decision (drift probe + possible basis refresh).
 * :func:`stream_run` — ``lax.scan`` of the step over a (rounds, n, p) stream;
   this is the jittable single-network driver.
+* :func:`chunk_stream_step` / :func:`chunked_stream_run` — the
+  chunk-granular forms (DESIGN.md Sec. 12): K rounds per dispatch through
+  the fused multi-round cov-update kernel, one scheduler decision per
+  ``probe_every`` rounds, per-epoch cost booking kept exact.
+  ``probe_every=1`` is bit-identical to the per-round driver.
 * :func:`batched_stream_run` — ``jax.vmap`` of the run over a leading
   networks axis: hundreds of independent sensor networks stream concurrently
   in one program — the serving shape.  The scheduler's ``lax.cond`` lowers to
@@ -47,17 +52,18 @@ import jax.numpy as jnp
 from repro.core.faults import expected_transmissions
 from repro.streaming.compressor import (CompressionConfig, RoundCompression,
                                         compress_round,
-                                        compression_round_cost)
+                                        compression_round_cost,
+                                        epoch_packet_split)
 from repro.streaming.detector import (DetectionConfig, DetectorState,
                                       RoundDetection, detect_round,
                                       detection_packet_split, detector_init)
 from repro.streaming.online_cov import (OnlineCovariance, online_init,
-                                        online_update)
+                                        online_update, online_update_chunk)
 from repro.streaming.scheduler import RecomputeScheduler, SchedulerState
 
 __all__ = ["StreamConfig", "StreamState", "RoundMetrics", "stream_init",
-           "stream_step", "stream_run", "batched_stream_run",
-           "sharded_stream_run"]
+           "stream_step", "chunk_stream_step", "stream_run",
+           "chunked_stream_run", "batched_stream_run", "sharded_stream_run"]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -213,6 +219,127 @@ def stream_step(cfg: StreamConfig, state: StreamState, x_round: jnp.ndarray,
     return new, metrics
 
 
+def chunk_stream_step(cfg: StreamConfig, state: StreamState,
+                      x_chunk: jnp.ndarray,
+                      masks: jnp.ndarray | None = None,
+                      round_valid: jnp.ndarray | None = None,
+                      ) -> tuple[StreamState, RoundMetrics]:
+    """K rounds for one network in ONE dispatch: fused covariance fold of
+    the whole (K, n, p) chunk (:func:`online_update_chunk` — one kernel
+    launch, one HBM band writeback), then ONE scheduler decision at the
+    chunk boundary, then one compression/detection pass over the chunk's
+    (K·n, p) epoch view.
+
+    The Table-1 bill stays per-EPOCH exact: the chunk books K per-round
+    drift records (and K flag-free compression/monitoring epochs) even
+    though only one decision is evaluated — the WSN would still aggregate
+    every epoch; only the eigenvector-phase *decisions* are amortized.
+
+    ``masks`` is the chunk's (K, p) per-round liveness schedule; any
+    liveness change across the chunk (vs. the state's last-seen liveness)
+    raises the scheduler's churn trigger at the boundary.  ``round_valid``
+    (K,) flags which rounds are real — 0 rounds (stream tail padding, or
+    an engine slot whose stream ends mid-chunk) contribute nothing to the
+    fold, the stages, the books, or the round counter.
+
+    At K=1 this is bit-identical to :func:`stream_step` (the chunk kernel
+    with weight 1 is the per-round kernel, and every booking term reduces
+    to the per-round expression exactly) — the differential guarantee
+    behind ``chunked_stream_run(..., probe_every=1)``.
+    """
+    K, n, p = x_chunk.shape
+    cov = online_update_chunk(state.cov, x_chunk, forgetting=cfg.forgetting,
+                              masks=masks, round_valid=round_valid,
+                              interpret=cfg.interpret)
+    if round_valid is None:
+        rv = None
+        live = K                            # static: folds into constants
+        live_i = K
+    else:
+        rv = jnp.asarray(round_valid, jnp.float32)
+        live = jnp.sum(rv)
+        live_i = live.astype(jnp.int32)
+    if masks is None:
+        churn = jnp.zeros((), bool)
+        alive = state.alive
+    else:
+        masks = jnp.asarray(masks, state.alive.dtype)
+        churn = jnp.zeros((), bool)
+        alive = state.alive
+        for t in range(K):                  # static unroll, K is small
+            changed = jnp.any(masks[t] != alive)
+            if rv is None:
+                churn = churn | changed
+                alive = masks[t]
+            else:
+                v_t = rv[t] > 0
+                churn = churn | (v_t & changed)
+                alive = jnp.where(v_t, masks[t], alive)
+    # one decision at the boundary, indexed at the LAST folded round (the
+    # same warmup arithmetic the per-round path would apply at that round)
+    sched, rho, fired = cfg.scheduler().step(state.sched, cov,
+                                             state.rounds + (live_i - 1),
+                                             churn=churn)
+    # step() booked one per-round record; book the chunk's remaining live
+    # rounds (static no-op at K=1)
+    extra = live - 1
+    if not (isinstance(extra, int) and extra == 0):
+        sched = sched._replace(
+            comm_packets=sched.comm_packets
+            + extra * cfg.scheduler().round_cost())
+    mean_est = cov.s / jnp.maximum(cov.t_i, 1.0)
+    factor = expected_transmissions(cfg.link_loss, cfg.max_retries)
+    # the stages already vectorize over epochs: give them the (K·n, p)
+    # chunk view against the post-decision basis, with pad/idle rounds
+    # masked out (a padded epoch is a dead epoch: no record, no flag)
+    x_view = x_chunk.reshape(K * n, p)
+    mask_view = None
+    has_stage = cfg.compression is not None or cfg.detection is not None
+    if has_stage and (masks is not None or rv is not None):
+        m3 = jnp.ones((K, n, p), x_view.dtype) if masks is None \
+            else jnp.broadcast_to(masks[:, None, :], (K, n, p))
+        if rv is not None:
+            m3 = m3 * rv[:, None, None].astype(m3.dtype)
+        mask_view = m3.reshape(K * n, p)
+    compression = None
+    if cfg.compression is not None:
+        compression = compress_round(
+            sched.W, mean_est, x_view, cfg.compression, cfg.c_max,
+            mask=mask_view, interpret=cfg.interpret)
+        flagfree = compression_round_cost(cfg.q, cfg.c_max, cfg.compression)
+        bill = (flagfree * live + compression.extra_packets) * factor
+        sched = sched._replace(comm_packets=sched.comm_packets + bill)
+        # compress_round's fixed A/F record (and its bits) covers ONE
+        # epoch round; this metrics row covers the chunk's live rounds —
+        # scale the per-round constants so the books a consumer sums from
+        # metrics (the engine's bits_on_air account) stay per-epoch exact
+        # like comm_packets above (static no-op at K=1)
+        if not (isinstance(live, int) and live == 1):
+            a_pk, f_pk = epoch_packet_split(cfg.q, cfg.c_max,
+                                            cfg.compression)
+            compression = compression._replace(
+                score_packets=compression.score_packets * live,
+                feedback_packets=compression.feedback_packets * live,
+                bits_on_air=compression.bits_on_air
+                + (live - 1) * (a_pk + f_pk) * cfg.compression.word_bits)
+    det_state, detection = state.det, None
+    if cfg.detection is not None:
+        det_state, detection = detect_round(
+            sched.W, mean_est, sched.lam, x_view, state.det, cfg.detection,
+            refreshed=fired, mask=mask_view, interpret=cfg.interpret)
+        flagfree, per_alarm = detection_packet_split(cfg.q, cfg.c_max)
+        bill = (flagfree * live + detection.alarms * per_alarm) * factor
+        sched = sched._replace(comm_packets=sched.comm_packets + bill)
+    new = StreamState(cov=cov, sched=sched, rounds=state.rounds + live_i,
+                      alive=alive, det=det_state)
+    metrics = RoundMetrics(rho=rho, did_refresh=fired,
+                           refreshes=sched.refreshes,
+                           comm_packets=sched.comm_packets,
+                           compression=compression,
+                           detection=detection)
+    return new, metrics
+
+
 @functools.partial(jax.jit, static_argnums=0)
 def stream_run(cfg: StreamConfig, state: StreamState, xs: jnp.ndarray,
                masks: jnp.ndarray | None = None,
@@ -234,6 +361,83 @@ def stream_run(cfg: StreamConfig, state: StreamState, xs: jnp.ndarray,
     return jax.lax.scan(step, state, (xs, masks))
 
 
+@functools.partial(jax.jit, static_argnums=0,
+                   static_argnames=("chunk", "probe_every"))
+def chunked_stream_run(cfg: StreamConfig, state: StreamState,
+                       xs: jnp.ndarray,
+                       masks: jnp.ndarray | None = None, *,
+                       chunk: int = 8,
+                       probe_every: int | None = None,
+                       ) -> tuple[StreamState, RoundMetrics]:
+    """Chunk-granular scan driver: K rounds per dispatch.
+
+    ``xs`` is (rounds, n, p) like :func:`stream_run`; the scan advances
+    ``probe_every`` rounds per step (default: the whole ``chunk``), each
+    step one fused covariance fold + one scheduler decision + one
+    compression/detection pass (:func:`chunk_stream_step`).  A decision
+    needs the covariance at its own boundary, so the fold granularity IS
+    the decision granularity: with ``probe_every`` set below ``chunk``
+    (it must divide it) every dispatch fuses ``probe_every`` rounds —
+    ``chunk`` then only names the K the caller is A/B-ing against.
+    Metrics come back with one entry per DECISION, i.e.
+    ``ceil(rounds / probe_every)`` rows; ``comm_packets`` still accounts
+    every epoch (per-round booking is exact, only decisions are
+    amortized).
+
+    ``probe_every=1`` reproduces today's per-round trajectory bit-exactly
+    (states and metrics identical to :func:`stream_run` — the differential
+    suite in tests/test_chunked_streaming.py pins this), so the decision
+    cadence is a pure perf/accuracy knob, not a semantic fork.  A stream
+    whose length is not divisible by the step is padded with invalid
+    rounds that contribute nothing (the tail chunk folds and books only
+    its real rounds).
+    """
+    R = xs.shape[0]
+    step_rounds = chunk if probe_every is None else probe_every
+    if chunk < 1 or step_rounds < 1:
+        raise ValueError(f"chunk/probe_every must be >= 1, got "
+                         f"{chunk}/{probe_every}")
+    if chunk % step_rounds != 0:
+        raise ValueError(
+            f"probe_every ({step_rounds}) must divide chunk ({chunk})")
+    S = step_rounds
+    n_steps = -(-R // S)
+    pad = n_steps * S - R
+    if pad:
+        xs = jnp.concatenate(
+            [xs, jnp.zeros((pad,) + xs.shape[1:], xs.dtype)], axis=0)
+        if masks is not None:
+            masks = jnp.concatenate(
+                [masks, jnp.zeros((pad,) + masks.shape[1:], masks.dtype)],
+                axis=0)
+        rv = jnp.concatenate([jnp.ones((R,), jnp.float32),
+                              jnp.zeros((pad,), jnp.float32)])
+        rv = rv.reshape(n_steps, S)
+    xs_c = xs.reshape(n_steps, S, *xs.shape[1:])
+    masks_c = None if masks is None \
+        else masks.reshape(n_steps, S, *masks.shape[1:])
+    if not pad and masks is None:
+        def step(carry, xc):
+            return chunk_stream_step(cfg, carry, xc)
+        return jax.lax.scan(step, state, xs_c)
+    if not pad:
+        def step(carry, xm):
+            xc, mc = xm
+            return chunk_stream_step(cfg, carry, xc, mc)
+        return jax.lax.scan(step, state, (xs_c, masks_c))
+    if masks is None:
+        def step(carry, xm):
+            xc, rc = xm
+            return chunk_stream_step(cfg, carry, xc, round_valid=rc)
+        return jax.lax.scan(step, state, (xs_c, rv))
+
+    def step(carry, xm):
+        xc, mc, rc = xm
+        return chunk_stream_step(cfg, carry, xc, mc, rc)
+
+    return jax.lax.scan(step, state, (xs_c, masks_c, rv))
+
+
 def batched_stream_init(cfg: StreamConfig, key: jax.Array, n_networks: int,
                         dtype=jnp.float32) -> StreamState:
     """Per-network states stacked on a leading networks axis."""
@@ -241,31 +445,55 @@ def batched_stream_init(cfg: StreamConfig, key: jax.Array, n_networks: int,
     return jax.vmap(lambda k: stream_init(cfg, k, dtype=dtype))(keys)
 
 
-@functools.partial(jax.jit, static_argnums=0)
+@functools.partial(jax.jit, static_argnums=0,
+                   static_argnames=("chunk", "probe_every"))
 def batched_stream_run(cfg: StreamConfig, states: StreamState,
                        xs: jnp.ndarray,
-                       masks: jnp.ndarray | None = None,
+                       masks: jnp.ndarray | None = None, *,
+                       chunk: int | None = None,
+                       probe_every: int | None = None,
                        ) -> tuple[StreamState, RoundMetrics]:
     """vmap the scan over a fleet: ``xs`` is (networks, rounds, n, p).
 
     ``masks`` (networks, rounds, p), if given, is the per-network liveness
     schedule.  Metrics come back as (networks, rounds) leaves.
+
+    ``chunk``, if set, switches every network to the chunk-granular driver
+    (:func:`chunked_stream_run` under the same vmap): one fused cov launch
+    and ONE refresh select per chunk for the whole fleet — the per-round
+    path pays the ``lax.cond``→select refresh for every round of every
+    network — with metrics at decision granularity.  ``chunk=None`` is the
+    per-round path, unchanged (``probe_every`` requires it).
     """
+    if chunk is None:
+        if probe_every is not None:
+            raise ValueError("probe_every requires chunk (the per-round "
+                             "path has no dispatch granularity to probe)")
+        if masks is None:
+            return jax.vmap(lambda s, x: stream_run(cfg, s, x))(states, xs)
+        return jax.vmap(lambda s, x, m: stream_run(cfg, s, x, m))(
+            states, xs, masks)
     if masks is None:
-        return jax.vmap(lambda s, x: stream_run(cfg, s, x))(states, xs)
-    return jax.vmap(lambda s, x, m: stream_run(cfg, s, x, m))(
+        return jax.vmap(lambda s, x: chunked_stream_run(
+            cfg, s, x, chunk=chunk, probe_every=probe_every))(states, xs)
+    return jax.vmap(lambda s, x, m: chunked_stream_run(
+        cfg, s, x, m, chunk=chunk, probe_every=probe_every))(
         states, xs, masks)
 
 
 def sharded_stream_run(cfg: StreamConfig, mesh, states: StreamState,
-                       xs: jnp.ndarray, axis: str = "data",
+                       xs: jnp.ndarray, axis: str = "data", *,
+                       chunk: int | None = None,
+                       probe_every: int | None = None,
                        ) -> tuple[StreamState, RoundMetrics]:
     """The batched run with the networks axis sharded over ``axis``.
 
     Each device streams its local slice of the fleet; no collective touches
     per-network state (checked with ``check_rep=False`` because the body is
     collective-free by construction).  Requires the number of networks to be
-    divisible by the axis size.
+    divisible by the axis size.  ``chunk``/``probe_every`` thread through to
+    :func:`batched_stream_run` per shard (the chunked body is just as
+    collective-free).
     """
     from jax.experimental.shard_map import shard_map
     from jax.sharding import PartitionSpec
@@ -281,7 +509,8 @@ def sharded_stream_run(cfg: StreamConfig, mesh, states: StreamState,
             f"of size {axis_size}")
 
     def local_run(states_l, xs_l):
-        return batched_stream_run(cfg, states_l, xs_l)
+        return batched_stream_run(cfg, states_l, xs_l, chunk=chunk,
+                                  probe_every=probe_every)
 
     fm = shard_map(
         local_run, mesh=mesh,

@@ -31,7 +31,8 @@ from repro.core import covariance as cov
 from repro.kernels import ops
 
 __all__ = ["OnlineCovariance", "online_init", "online_update",
-           "online_estimate", "online_total_variance", "stream_covariance"]
+           "online_update_chunk", "online_estimate", "online_total_variance",
+           "stream_covariance"]
 
 
 class OnlineCovariance(NamedTuple):
@@ -139,6 +140,79 @@ def online_update(state: OnlineCovariance, x: jnp.ndarray,
         s=beta * state.s + delta_s,
         band=beta * state.band + delta_band.astype(state.band.dtype),
         t_band=beta * state.t_band + delta_tb,
+    )
+
+
+def online_update_chunk(state: OnlineCovariance, xs: jnp.ndarray,
+                        forgetting: float = 1.0,
+                        masks: jnp.ndarray | None = None,
+                        round_valid: jnp.ndarray | None = None,
+                        interpret: bool | None = None) -> OnlineCovariance:
+    """Fold a (K, n, p) chunk of rounds in ONE fused kernel launch.
+
+    Mathematically identical to K sequential :func:`online_update` calls:
+    the per-round forgetting weights ``beta^(K-1-t)`` are fused into the
+    chunk kernel's tile loads (each round's products enter the band already
+    carrying the decay they would have accumulated by the end of the
+    chunk), and the carried statistics decay once by ``beta^K``.  The decay
+    powers come from a host-side table (no traced ``pow``), so at K=1 the
+    fold is bit-identical to the per-round update — the probe_every=1
+    differential guarantee.
+
+    ``masks`` is (K, p) per-round liveness or (K, n, p) per-reading
+    dropout.  ``round_valid`` (K,) flags which rounds of the chunk are
+    real: a 0 round contributes nothing anywhere (weight 0) and does not
+    advance the decay — this is how a tail chunk shorter than K rides the
+    same traced program (the driver pads the stream and marks the pad
+    invalid) and how the serving engine folds slots whose streams end
+    mid-chunk.
+    """
+    xs = jnp.asarray(xs, state.s.dtype)
+    K, n, p = xs.shape
+    h = state.halfwidth
+    beta = float(forgetting)
+    # beta^j for j in [0, K]: host-computed constants, gathered on device —
+    # pow(traced, traced) would lower to exp/log and break the K=1
+    # bit-identity (pow_table[1] is beta itself, exactly)
+    pow_table = jnp.asarray([beta ** j for j in range(K + 1)],
+                            dtype=state.s.dtype)
+    if round_valid is None:
+        w = pow_table[jnp.arange(K - 1, -1, -1)]
+        beta_eff = pow_table[K]
+    else:
+        rv = jnp.asarray(round_valid, state.s.dtype)
+        # each valid round decays once per valid round AFTER it in the chunk
+        after = (jnp.cumsum(rv[::-1])[::-1] - rv).astype(jnp.int32)
+        w = pow_table[after] * rv
+        beta_eff = pow_table[jnp.sum(rv).astype(jnp.int32)]
+    valid = _band_valid(p, h).astype(state.t_band.dtype)
+    if masks is None:
+        delta_band = ops.cov_band_update_chunk(xs, w, h, interpret=interpret)
+        delta_s = jnp.einsum("t,tp->p", w, xs.sum(axis=1))
+        delta_tb = (jnp.sum(w) * n) * valid
+    else:
+        masks = jnp.asarray(masks, state.s.dtype)
+        delta_band = ops.cov_band_update_chunk(xs, w, h, mask=masks,
+                                               interpret=interpret)
+        if masks.ndim == 2:
+            delta_s = jnp.einsum("t,tp->p", w,
+                                 (xs * masks[:, None, :]).sum(axis=1))
+            # pairwise counts stay analytic: n * m_i * m_j per round,
+            # chunk-weighted (no extra kernel pass for a liveness mask)
+            mj = jnp.stack([cov._shifted(masks, k - h)
+                            for k in range(2 * h + 1)], axis=0)  # (nb, K, p)
+            delta_tb = jnp.einsum("t,tp,ktp->kp", w * n, masks, mj) \
+                .astype(state.t_band.dtype)
+        else:
+            delta_s = jnp.einsum("t,tp->p", w, (xs * masks).sum(axis=1))
+            delta_tb = ops.cov_band_update_chunk(masks, w, h,
+                                                 interpret=interpret) \
+                .astype(state.t_band.dtype)
+    return OnlineCovariance(
+        t=beta_eff * state.t + jnp.sum(w) * n,
+        s=beta_eff * state.s + delta_s,
+        band=beta_eff * state.band + delta_band.astype(state.band.dtype),
+        t_band=beta_eff * state.t_band + delta_tb,
     )
 
 
