@@ -26,6 +26,10 @@ def main() -> int:
                     help="also write the streaming-fleet rows (throughput, "
                          "chunk sweep) gathered during this run to a JSON "
                          "artifact")
+    ap.add_argument("--scale-json",
+                    help="also write the hierarchical weak-scaling rows "
+                         "(regions sweep + wsn-1m smoke replica) gathered "
+                         "during this run to a JSON artifact")
     args = ap.parse_args()
     if args.full and args.smoke:
         ap.error("--full and --smoke are mutually exclusive")
@@ -33,8 +37,8 @@ def main() -> int:
     from benchmarks import (compression_bench, event_bench, fault_bench,
                             fig7_retained_variance, fig9_comm_costs,
                             fig11_local_cov, fig13_pim_convergence,
-                            fig14_load_vs_q, kernels_bench, streaming_bench,
-                            table1_complexity)
+                            fig14_load_vs_q, kernels_bench, scale_bench,
+                            streaming_bench, table1_complexity)
 
     modules = {
         "fig7": lambda: fig7_retained_variance.run(
@@ -49,11 +53,12 @@ def main() -> int:
         "fault": lambda: fault_bench.run(smoke=args.smoke),
         "compression": lambda: compression_bench.run(smoke=args.smoke),
         "events": lambda: event_bench.run(smoke=args.smoke),
+        "scale": lambda: scale_bench.run(smoke=args.smoke),
     }
 
     failed = 0
     gathered: dict[str, list] = {"compression": [], "events": [],
-                                 "streaming": []}
+                                 "streaming": [], "scale": []}
     print("name,us_per_call,derived")
     for name, fn in modules.items():
         if args.only and args.only not in name:
@@ -72,7 +77,8 @@ def main() -> int:
     for name, path, rows in (
             ("compression", args.compression_json, gathered["compression"]),
             ("events", args.events_json, gathered["events"]),
-            ("streaming", args.streaming_json, gathered["streaming"])):
+            ("streaming", args.streaming_json, gathered["streaming"]),
+            ("scale", args.scale_json, gathered["scale"])):
         if not path:
             continue
         if not rows:

@@ -1,0 +1,151 @@
+"""Weak-scaling benchmark: hierarchical fleets at growing region counts.
+
+Times the two-level driver (:func:`repro.streaming.hierarchy.
+hierarchical_stream_run` — per-region streaming + one cross-host energy
+merge per refresh boundary, DESIGN.md Sec. 13) while the fleet grows and
+the per-region work stays FIXED: p_region sensors, the same round count,
+the same refresh schedule.  Perfect weak scaling would hold rounds/s
+constant per region as regions are added; the measured curve charts what
+the merge collectives and the region-axis sharding actually cost.
+
+* ``scale/regions{R}`` — "rounds/s|fleet_rho|merge_packets|p_total" at R
+  regions on a ``make_fleet_mesh`` whose region axis spans the largest
+  divisor of R that fits the local devices
+* ``scale/wsn_1m_smoke`` — the CI-sized wsn-1m replica
+  (:meth:`repro.configs.wsn_1m.WSNConfig.smoke`) streamed END TO END
+  through the hierarchy: the acceptance row that the production config's
+  two-level shape actually runs, not just lowers
+
+Standalone: ``python benchmarks/scale_bench.py --smoke --json
+BENCH_scale.json`` (benchmarks/run.py --scale-json does this inside the CI
+smoke run).  Multi-device weak scaling: force host devices first, e.g.
+``XLA_FLAGS=--xla_force_host_platform_device_count=8``.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import row, timed
+from repro.configs.wsn_1m import CONFIG as WSN
+from repro.launch.mesh import make_fleet_mesh
+from repro.streaming import StreamConfig
+from repro.streaming.hierarchy import (hierarchical_stream_init,
+                                       hierarchical_stream_run)
+
+P_REGION, Q, H = 64, 4, 4
+N_PER_ROUND = 8
+
+
+def _region_axis(n_regions: int) -> int:
+    """Largest divisor of ``n_regions`` spannable by the local devices."""
+    return max(d for d in range(1, jax.device_count() + 1)
+               if n_regions % d == 0)
+
+
+def _fleet_data(key, cfg: StreamConfig, n_regions: int, n_rounds: int):
+    """Per-region low-rank structure with distinct energy scales, so the
+    level-2 merge has a real selection to make."""
+    x = jax.random.normal(key, (n_regions, n_rounds, N_PER_ROUND, cfg.p))
+    scale = jnp.linspace(4.0, 1.0, cfg.p)[None, None, None, :]
+    region_gain = (1.0 + jnp.arange(n_regions, dtype=jnp.float32)
+                   / max(n_regions, 1))[:, None, None, None]
+    return x * scale * region_gain
+
+
+def _one_scale_point(cfg: StreamConfig, n_regions: int, n_rounds: int,
+                     repeat: int = 3):
+    mesh = make_fleet_mesh(region=_region_axis(n_regions))
+    key = jax.random.PRNGKey(7)
+    states = hierarchical_stream_init(cfg, key, n_regions)
+    xs = _fleet_data(jax.random.PRNGKey(3), cfg, n_regions, n_rounds)
+
+    def _run():
+        res = hierarchical_stream_run(cfg, mesh, states, xs)
+        jax.block_until_ready(res[2].basis.rho)
+        return res
+
+    _run()                                           # compile outside timing
+    (fin, metrics, fleet), us = timed(_run, repeat=repeat)
+    rps = n_regions * n_rounds / (us / 1e6)
+    return row(
+        f"scale/regions{n_regions}", us,
+        f"{rps:.0f} rounds/s|rho {float(fleet.basis.rho):.3f}|"
+        f"{float(fleet.merge_packets):.0f} merge packets|"
+        f"p_total {n_regions * cfg.p}")
+
+
+def wsn_smoke_row(n_rounds: int = 4, repeat: int = 3):
+    """Stream the wsn-1m smoke replica end to end through the hierarchy."""
+    wsn = WSN.smoke()
+    cfg = StreamConfig(p=wsn.region_p, q=wsn.q, halfwidth=wsn.halfwidth,
+                       forgetting=0.95, drift_threshold=0.1,
+                       warmup_rounds=1)
+    mesh = make_fleet_mesh(region=_region_axis(wsn.n_regions))
+    states = hierarchical_stream_init(cfg, jax.random.PRNGKey(11),
+                                      wsn.n_regions)
+    xs = _fleet_data(jax.random.PRNGKey(13), cfg, wsn.n_regions, n_rounds)
+
+    def _run():
+        res = hierarchical_stream_run(cfg, mesh, states, xs)
+        jax.block_until_ready(res[2].basis.rho)
+        return res
+
+    _run()                                           # compile outside timing
+    (fin, metrics, fleet), us = timed(_run, repeat=repeat)
+    rps = wsn.n_regions * n_rounds / (us / 1e6)
+    return row(
+        "scale/wsn_1m_smoke", us,
+        f"{rps:.0f} rounds/s|rho {float(fleet.basis.rho):.3f}|"
+        f"{float(fleet.merge_packets):.0f} merge packets|"
+        f"p_total {wsn.p}")
+
+
+def run(smoke: bool = False, regions: tuple[int, ...] | None = None):
+    """``smoke`` keeps the sweep seconds-scale; the region counts still
+    cover >= 3 points so the weak-scaling curve exists in CI."""
+    out = []
+    regions = regions or ((1, 2, 4) if smoke else (1, 2, 4, 8, 16))
+    n_rounds = 8 if smoke else 32
+    cfg = StreamConfig(p=P_REGION, q=Q, halfwidth=H, forgetting=0.9,
+                       drift_threshold=0.1, warmup_rounds=2)
+    for n_regions in regions:
+        out.append(_one_scale_point(cfg, n_regions, n_rounds))
+    out.append(wsn_smoke_row(n_rounds=4 if smoke else 16))
+    return out
+
+
+def main() -> int:
+    import argparse
+    import json
+
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--smoke", action="store_true",
+                    help="seconds-scale sweep (the CI setting)")
+    ap.add_argument("--regions",
+                    help="comma-separated region counts to sweep "
+                         "(default: 1,2,4 smoke / 1,2,4,8,16 full)")
+    ap.add_argument("--json",
+                    help="write the gathered rows to this path "
+                         "(the BENCH_scale.json artifact)")
+    args = ap.parse_args()
+    regions = tuple(int(c) for c in args.regions.split(",")) \
+        if args.regions else None
+    rows = run(smoke=args.smoke, regions=regions)
+    print("name,us_per_call,derived")
+    for r in rows:
+        print(f"{r['name']},{r['us_per_call']},{r['derived']}")
+    if args.json:
+        if not rows:
+            print(f"ERROR: no rows gathered, refusing to write {args.json}")
+            return 1
+        with open(args.json, "w") as fh:
+            json.dump(rows, fh, indent=2)
+    return 0
+
+
+if __name__ == "__main__":
+    import sys
+    sys.exit(main())

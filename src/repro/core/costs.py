@@ -23,7 +23,7 @@ __all__ = ["CostReport", "centralized_covariance", "distributed_covariance",
            "centralized_eigenvectors", "distributed_eigenvectors",
            "streaming_round_cost", "streaming_refresh_cost",
            "supervised_round_cost", "quantized_supervised_round_cost",
-           "detection_round_cost",
+           "detection_round_cost", "merge_round_cost", "lossy_merge_cost",
            "lossy_round_cost", "lossy_refresh_cost", "lossy_epoch_load",
            "pcag_epoch_load", "default_epoch_load", "table1"]
 
@@ -174,6 +174,41 @@ def detection_round_cost(q: int, c_max: int,
         computation=2 * q + 3,
         memory=q + 2,
     )
+
+
+def merge_round_cost(q_local: int, c_regions: int) -> CostReport:
+    """One fleet-level merge epoch of the two-level hierarchy (DESIGN.md
+    Sec. 13), highest-region-head load.
+
+    The region heads aggregate ONE (q_local + 1)-element record up the
+    region-level routing tree — the region's per-component subspace energies
+    ``diag(W^T C W)`` plus its total-variance partial ``trace(C)``, exactly
+    the quantities the intra-network drift probe already aggregates
+    (:func:`streaming_round_cost`) one level down — and the sink floods one
+    scalar back (the global selection threshold λ_min: a region keeps a
+    component in the fleet basis iff its energy clears it).  So the
+    highest-loaded region head processes ``(q_local + 1) (C_r* + 1)``
+    aggregation packets plus the scalar verdict, the same shape as the
+    intra-network round bill.
+
+    Computation per region head: merging ``C_r*`` children records of
+    ``q_local + 1`` elements; memory: its own record plus the threshold.
+    """
+    return CostReport(
+        communication=(q_local + 1) * (c_regions + 1) + 1,
+        computation=(q_local + 1) * c_regions,
+        memory=q_local + 2,
+    )
+
+
+def lossy_merge_cost(q_local: int, c_regions: int, link_loss: float,
+                     max_retries: int) -> CostReport:
+    """Expected fleet-merge cost over lossy region-head links (the same ARQ
+    scaling as :func:`lossy_round_cost`; zero loss books the reliable
+    figure exactly)."""
+    from repro.core.faults import expected_transmissions
+    return _scale(merge_round_cost(q_local, c_regions),
+                  expected_transmissions(link_loss, max_retries))
 
 
 def _scale(report: CostReport, factor: float) -> CostReport:

@@ -1,5 +1,6 @@
 import os
-os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+os.environ.setdefault("XLA_FLAGS",
+                      "--xla_force_host_platform_device_count=512")
 
 """Multi-pod dry-run: lower + compile every (architecture x shape x mesh).
 
@@ -41,13 +42,15 @@ from repro.core import production as wsn_prod
 from repro.distributed.sharding import (activation_sharding, act_rules,
                                         param_rules)
 from repro.launch import hlo_analysis as H
-from repro.launch.mesh import make_production_mesh, mesh_axis_sizes
+from repro.launch.mesh import (make_local_mesh, make_production_mesh,
+                               mesh_axis_sizes)
 from repro.models import transformer as T
 from repro.models.params import param_pspecs
 from repro.train.optimizer import AdamWConfig
 from repro.train.trainer import TrainConfig, make_train_step
 
-WSN_SHAPES = ["cov_update", "pim_block", "pim_deflated", "transform"]
+WSN_SHAPES = ["cov_update", "pim_block", "pim_deflated", "transform",
+              "hier_merge"]
 
 
 # ---------------------------------------------------------------------------
@@ -234,10 +237,10 @@ def build_lm_cell(arch: str, shape_name: str, mesh,
     return fn, (params, tokens, state, t), {"donate": (2,)}
 
 
-def build_wsn_cell(shape_name: str, mesh):
+def build_wsn_cell(shape_name: str, mesh, wsn=WSN):
     """The paper's production system; feature axis over every mesh axis."""
     all_axes = tuple(mesh.axis_names)
-    p, h, q, n = WSN.p, WSN.halfwidth, WSN.q, WSN.batch_epochs
+    p, h, q, n = wsn.p, wsn.halfwidth, wsn.q, wsn.batch_epochs
     nb = 2 * h + 1
     band = _sds((nb, p), jnp.float32, mesh, (None, all_axes))
 
@@ -268,6 +271,14 @@ def build_wsn_cell(shape_name: str, mesh):
         x = _sds((n, p), jnp.float32, mesh, (None, all_axes))
         fn = lambda ww, mm, xx: wsn_prod.transform_step(ww, mm, xx)
         return fn, (w, mean, x), {}
+    if shape_name == "hier_merge":
+        # level-2 fleet merge (DESIGN.md Sec. 13): global top-q selection
+        # over the gathered (regions, q_local) energy table
+        from repro.streaming.hierarchy import merge_fleet
+        lam = _sds((wsn.n_regions, q), jnp.float32, mesh, (all_axes, None))
+        tv = jax.ShapeDtypeStruct((), jnp.float32)
+        fn = lambda ll, dd: merge_fleet(ll, dd, q)
+        return fn, (lam, tv), {}
     raise KeyError(shape_name)
 
 
@@ -296,15 +307,23 @@ def skipped_cells() -> list[tuple[str, str, str]]:
 
 
 def run_cell(arch: str, shape_name: str, multi_pod: bool,
-             opt_level: int = 0) -> dict:
-    mesh = make_production_mesh(multi_pod=multi_pod)
+             opt_level: int = 0, smoke: bool = False) -> dict:
+    if smoke:
+        # CI-sized end-to-end check: the same cells at the smoke config's
+        # scaled-down shapes, on a mesh over whatever local devices exist
+        mesh = make_local_mesh(data=jax.device_count(), model=1)
+        mesh_name = f"local{jax.device_count()}"
+    else:
+        mesh = make_production_mesh(multi_pod=multi_pod)
+        mesh_name = "2x16x16" if multi_pod else "16x16"
     n_dev = int(np.prod(mesh.devices.shape))
     rec = {"arch": arch, "shape": shape_name, "opt_level": opt_level,
-           "mesh": "2x16x16" if multi_pod else "16x16", "ok": False}
+           "mesh": mesh_name, "ok": False}
     t0 = time.time()
     try:
         if arch == "wsn-1m":
-            fn, args, extra = build_wsn_cell(shape_name, mesh)
+            wsn = WSN.smoke() if smoke else WSN
+            fn, args, extra = build_wsn_cell(shape_name, mesh, wsn=wsn)
         else:
             fn, args, extra = build_lm_cell(arch, shape_name, mesh,
                                             opt_level=opt_level)
@@ -330,6 +349,8 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool,
             ma.argument_size_in_bytes + ma.temp_size_in_bytes
             - ma.alias_size_in_bytes)
         ca = compiled.cost_analysis()
+        if isinstance(ca, (list, tuple)):   # CPU backend wraps in a list
+            ca = ca[0] if ca else {}
         rec["cost"] = {"flops": float(ca.get("flops", 0.0)),
                        "bytes accessed": float(ca.get("bytes accessed", 0.0))}
         coll = H.parse_collectives(compiled.as_text(), n_devices=n_dev)
@@ -361,6 +382,9 @@ def main() -> None:
                     default="both")
     ap.add_argument("--out", default="dryrun_results.jsonl")
     ap.add_argument("--opt-level", type=int, default=0)
+    ap.add_argument("--smoke", action="store_true",
+                    help="WSNConfig.smoke() shapes on a local-device mesh "
+                         "(CI end-to-end check; wsn-1m cells only)")
     ap.add_argument("--list", action="store_true")
     args = ap.parse_args()
 
@@ -372,16 +396,21 @@ def main() -> None:
         return
 
     cells = all_cells()
+    if args.smoke:
+        cells = [(a, s) for a, s in cells if a == "wsn-1m"]
     if args.arch:
         cells = [(a, s) for a, s in cells if a == args.arch]
     if args.shape:
         cells = [(a, s) for a, s in cells if s == args.shape]
     meshes = {"pod": [False], "multipod": [True],
               "both": [False, True]}[args.mesh]
+    if args.smoke:
+        meshes = [False]            # one local mesh — run_cell builds it
 
     for arch, shape in cells:
         for mp in meshes:
-            rec = run_cell(arch, shape, mp, opt_level=args.opt_level)
+            rec = run_cell(arch, shape, mp, opt_level=args.opt_level,
+                           smoke=args.smoke)
             line = json.dumps(rec)
             with open(args.out, "a") as f:
                 f.write(line + "\n")

@@ -10,7 +10,8 @@ from __future__ import annotations
 
 import jax
 
-__all__ = ["make_production_mesh", "make_local_mesh", "mesh_axis_sizes"]
+__all__ = ["make_production_mesh", "make_local_mesh", "make_fleet_mesh",
+           "mesh_axis_sizes"]
 
 
 def make_production_mesh(*, multi_pod: bool = False):
@@ -27,6 +28,18 @@ def make_production_mesh(*, multi_pod: bool = False):
 def make_local_mesh(data: int = 1, model: int = 1):
     """Small mesh over however many local devices exist (tests/examples)."""
     return jax.make_mesh((data, model), ("data", "model"))
+
+
+def make_fleet_mesh(region: int | None = None, data: int = 1):
+    """Two-level fleet mesh: 'region' carries the cross-host hierarchy axis
+    (one shard per group of regions, the only axis the per-refresh merge
+    collectives cross — DESIGN.md Sec. 13), 'data' the intra-shard networks
+    axis.  ``region=None`` spreads the region axis over every local device
+    (the multi-host simulation shape: ``XLA_FLAGS
+    --xla_force_host_platform_device_count=N`` forced before jax init).
+    """
+    n = (jax.device_count() // data) if region is None else region
+    return jax.make_mesh((n, data), ("region", "data"))
 
 
 def mesh_axis_sizes(mesh) -> dict[str, int]:

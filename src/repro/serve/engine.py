@@ -45,7 +45,8 @@ from repro.streaming.driver import (StreamConfig, StreamState,
                                     chunk_stream_step, stream_init)
 
 __all__ = ["Request", "ServeConfig", "Engine",
-           "StreamRequest", "StreamResult", "StreamingPCAEngine"]
+           "StreamRequest", "StreamResult", "FleetSummary",
+           "StreamingPCAEngine"]
 
 
 @dataclasses.dataclass
@@ -179,10 +180,17 @@ class StreamRequest:
     ``liveness`` is an optional (R, p) per-round sensor-liveness schedule
     (1 = alive), e.g. from :meth:`repro.core.faults.NodeChurn.liveness`;
     ``None`` means every sensor is alive for the whole stream.
+
+    ``region`` tags the network with its region id in a two-level fleet
+    (DESIGN.md Sec. 13): slots are region-aware — the engine tracks which
+    region each slot is streaming, and :meth:`StreamingPCAEngine.fleet_summary`
+    merges the retired regions' bases into the fleet-level basis with the
+    merge's Table-1 bill.  The default region 0 keeps flat fleets unchanged.
     """
 
     rounds: np.ndarray               # (R, n, p) float32 measurement rounds
     liveness: np.ndarray | None = None   # (R, p) per-round sensor liveness
+    region: int = 0                  # region id in the two-level fleet
     # filled by the engine:
     result: "StreamResult | None" = None
     done: bool = False
@@ -216,6 +224,11 @@ class StreamResult:
     comm_packets: float              # Table-1 communication bill (packets)
     rounds: int                      # rounds streamed
     reason: str = "completed"        # "completed" | "dead"
+    # the region head's level-2 merge record (DESIGN.md Sec. 13): live
+    # per-component subspace energies diag(W^T C W) and the trace partial —
+    # exactly what fleet_summary aggregates across regions
+    energies: np.ndarray | None = None    # (q,) subspace energies
+    total_variance: float | None = None   # trace(C) partial
     compression_max_err: float | None = None
     compression_extra_packets: float | None = None
     compression_bits_on_air: float | None = None
@@ -223,6 +236,26 @@ class StreamResult:
     detection_alarm_packets: float | None = None
     detection_t2_threshold: float | None = None
     detection_spe_threshold: float | None = None
+
+
+@dataclasses.dataclass(frozen=True)
+class FleetSummary:
+    """The two-level fleet basis merged from retired region results.
+
+    ``basis`` is the dense block-embedded (p_fleet, q_fleet) fleet basis
+    (orthonormal by construction — disjoint region supports); ``region``/
+    ``col``/``lam`` the compact selection; ``merge_packets`` the Table-1
+    bill of the merge epoch that produced it (one (q+1)-record region-tree
+    aggregation, ARQ-scaled — :func:`repro.core.costs.lossy_merge_cost`).
+    """
+
+    basis: np.ndarray                # (p_fleet, q_fleet)
+    region: np.ndarray               # (q_fleet,) owning region per component
+    col: np.ndarray                  # (q_fleet,) column within that region
+    lam: np.ndarray                  # (q_fleet,) energies, descending
+    rho: float                       # fleet retained fraction
+    regions: tuple                   # region ids merged, ascending
+    merge_packets: float             # region-head bill of this merge epoch
 
 
 class StreamingPCAEngine:
@@ -270,6 +303,11 @@ class StreamingPCAEngine:
         self.active: list[StreamRequest | None] = [None] * slots
         self.cursor = np.zeros(slots, np.int64)     # next round per slot
         self.queue: list[StreamRequest] = []
+        # region-aware slots (DESIGN.md Sec. 13): which region each slot is
+        # streaming right now (-1 = idle), and the latest final result per
+        # region — the merge inputs of fleet_summary()
+        self.slot_region = np.full(slots, -1, np.int64)
+        self.region_results: dict[int, StreamResult] = {}
         # two jitted chunk steps: the masked one only runs when some active
         # request actually carries a liveness schedule — fault-free fleets
         # never build or upload a mask batch at all (and stay on the
@@ -364,6 +402,7 @@ class StreamingPCAEngine:
                 req = self.queue.pop(0)
                 self.active[slot] = req
                 self.cursor[slot] = req.resume_at
+                self.slot_region[slot] = req.region
                 newly.append(slot)
                 monitor = HealthMonitor(self.health_policy,
                                         clock=lambda: float(self._clock))
@@ -393,6 +432,8 @@ class StreamingPCAEngine:
         rho = retained_fraction(online_estimate(state_i.cov),
                                 state_i.sched.W,
                                 online_total_variance(state_i.cov))
+        from repro.streaming.hierarchy import region_energies
+        lam, total_var = region_energies(state_i)
         comp: dict = {}
         if self.cfg.compression is not None:
             comp = dict(
@@ -415,6 +456,8 @@ class StreamingPCAEngine:
             comm_packets=float(state_i.sched.comm_packets),
             rounds=int(state_i.rounds),
             reason=reason,
+            energies=np.asarray(lam),
+            total_variance=float(total_var),
             **comp,
         )
 
@@ -423,7 +466,9 @@ class StreamingPCAEngine:
         req.result = self._result(slot, "completed")
         req.done = True
         self.retired_log.append((req, "completed"))
+        self.region_results[req.region] = req.result
         self.active[slot] = None
+        self.slot_region[slot] = -1
         self.health[slot] = None
 
     def _retire_dead(self, slot: int) -> None:
@@ -439,6 +484,7 @@ class StreamingPCAEngine:
         partial = self._result(slot, "dead")
         self.retired_log.append((req, "dead"))
         self.active[slot] = None
+        self.slot_region[slot] = -1
         self.health[slot] = None
         revive = None
         if req.liveness is not None:
@@ -456,6 +502,7 @@ class StreamingPCAEngine:
             # retirements so segment bills sum without double-counting)
             req.result = partial
             req.done = True
+            self.region_results[req.region] = partial
 
     def _replan(self, n_live: int) -> None:
         """Elastic fleet mesh: one virtual device per live network."""
@@ -570,3 +617,41 @@ class StreamingPCAEngine:
         for _ in range(max_steps):
             if self.step() == 0 and not self.queue:
                 return
+
+    # -- two-level fleet merge (DESIGN.md Sec. 13) ---------------------------
+    def fleet_summary(self, q_fleet: int | None = None,
+                      c_regions: int | None = None) -> FleetSummary:
+        """Merge the retired regions' bases into the fleet-level basis.
+
+        One level-2 merge epoch over the region results collected so far
+        (latest final result per region id): global top-``q_fleet``
+        selection by subspace energy (:func:`repro.streaming.hierarchy.
+        merge_fleet` — the same jittable core the cross-host driver runs
+        after its ``all_gather``), dense block embedding, and the merge's
+        Table-1 bill at region-tree fan-out ``c_regions`` (default
+        ``cfg.c_max``), ARQ-scaled like every intra-network packet.
+        """
+        from repro.core import costs
+        from repro.streaming.hierarchy import fleet_basis_dense, merge_fleet
+        if not self.region_results:
+            raise ValueError("no retired region results to merge")
+        regions = sorted(self.region_results)
+        results = [self.region_results[r] for r in regions]
+        lam_table = jnp.asarray(np.stack([r.energies for r in results]))
+        total = jnp.asarray(sum(r.total_variance for r in results),
+                            jnp.float32)
+        qf = self.cfg.q if q_fleet is None else q_fleet
+        basis = merge_fleet(lam_table, total, qf)
+        W_regions = jnp.asarray(np.stack([r.components for r in results]))
+        cr = self.cfg.c_max if c_regions is None else c_regions
+        bill = costs.lossy_merge_cost(self.cfg.q, cr, self.cfg.link_loss,
+                                      self.cfg.max_retries).communication
+        return FleetSummary(
+            basis=np.asarray(fleet_basis_dense(basis, W_regions)),
+            region=np.asarray(basis.region),
+            col=np.asarray(basis.col),
+            lam=np.asarray(basis.lam),
+            rho=float(basis.rho),
+            regions=tuple(regions),
+            merge_packets=float(bill),
+        )

@@ -20,6 +20,9 @@ detector     T²/SPE event-detection stage (Sec. 2.4.3 on device): fused
              healthy-window recalibration after every basis refresh
 driver       single-network stream loop, ``jax.vmap`` batched multi-network
              driver and the ``shard_map`` sharded runner
+hierarchy    two-level million-sensor fleets (DESIGN.md Sec. 13): per-region
+             streaming + cross-host energy-merge collectives over the
+             ``region`` mesh axis, Table-1 merge billing
 """
 
 from repro.streaming.online_cov import (
@@ -42,6 +45,10 @@ from repro.streaming.driver import (
     chunk_stream_step, stream_run, chunked_stream_run, batched_stream_run,
     sharded_stream_run,
 )
+from repro.streaming.hierarchy import (
+    FleetBasis, FleetMerge, region_energies, merge_fleet, fleet_basis_dense,
+    hierarchical_stream_init, hierarchical_stream_run,
+)
 
 __all__ = [
     "OnlineCovariance", "online_init", "online_update",
@@ -55,4 +62,7 @@ __all__ = [
     "StreamConfig", "StreamState", "RoundMetrics", "stream_init",
     "stream_step", "chunk_stream_step", "stream_run", "chunked_stream_run",
     "batched_stream_run", "sharded_stream_run",
+    "FleetBasis", "FleetMerge", "region_energies", "merge_fleet",
+    "fleet_basis_dense", "hierarchical_stream_init",
+    "hierarchical_stream_run",
 ]

@@ -21,6 +21,12 @@ Layering (DESIGN.md Sec. 8.3):
   networks axis split over the mesh data axis
   (:func:`repro.distributed.sharding.network_axis_spec`); per-network state
   never crosses devices, so the fleet scales linearly with chips.
+* :func:`repro.streaming.hierarchy.hierarchical_stream_run` — the two-level
+  fleet form (DESIGN.md Sec. 13): the batched run per *region* shard over a
+  cross-host ``region`` mesh axis, topped by one ``all_gather``/``psum``
+  merge of region bases per refresh — the million-sensor shape where every
+  band fold stays a local problem and only (q+1)-element energy records
+  ever cross hosts.
 
 With ``StreamConfig.compression`` set, every round additionally runs the
 ε-supervised compression stage (:mod:`repro.streaming.compressor`) against

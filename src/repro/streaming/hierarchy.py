@@ -1,0 +1,234 @@
+"""Hierarchical two-level streaming decomposition (DESIGN.md Sec. 13).
+
+The paper distributes power iteration *inside* one sensor network; at the
+million-sensor scale of ``configs/wsn_1m.py`` the fleet itself needs a second
+level.  Following Wiesel & Hero's decomposable PCA (the global basis can be
+computed per-region and merged) and Elgamal & Hefeeda's observation that
+synchronization rounds — not FLOPs — bound distributed PCA at scale
+(PAPERS.md), the decomposition is:
+
+* **Level 1 (intra-region, no cross-host traffic):** every region streams its
+  own online banded covariance and drift-triggered orthogonal-iteration
+  refreshes through the existing chunked drivers
+  (:func:`repro.streaming.driver.batched_stream_run` — one fused cov-update
+  kernel launch per chunk, PR 5).  Under the banded/local-covariance
+  hypothesis a region boundary cuts only the ±h cross terms, so per-region
+  bases span the global top-q subspace up to the boundary coupling.
+* **Level 2 (cross-host, ONE collective per refresh):** the fleet basis is
+  the block-diagonal embedding of per-region components, globally *selected*
+  by subspace energy.  Each region contributes its (q_local + 1)-element
+  record — the live Rayleigh energies ``diag(W^T C W)`` plus its trace
+  partial — via ``all_gather``/``psum`` over the ``region`` mesh axis
+  (:func:`repro.distributed.sharding.region_axis_spec`); the top
+  ``q_fleet`` components by energy form the fleet basis, and the fleet
+  retained fraction is ``sum(selected energies) / psum(trace partials)``.
+
+The merge's packet bill is booked against the Table-1 accounting exactly
+like intra-network rounds: one region-level aggregation epoch of a
+(q_local + 1)-record per merge (:func:`repro.core.costs.merge_round_cost`),
+lossy-scaled by the same ARQ expectation as every other packet.  One merge
+is booked per decision boundary at which ANY region refreshed its basis
+(a fleet whose regions never refresh pays for exactly one merge — the final
+one that produced the returned basis).
+
+With ``regions=1`` the hierarchy is the flat driver bit-exactly (one region
+IS the whole fleet; the merge selects the identity) — the differential
+anchor in tests/test_hierarchy.py.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import costs
+from repro.core.covariance import banded_matmul_ref
+from repro.streaming.driver import (RoundMetrics, StreamConfig, StreamState,
+                                    _metrics_template, batched_stream_init,
+                                    batched_stream_run)
+from repro.streaming.online_cov import online_estimate, online_total_variance
+
+__all__ = ["FleetBasis", "FleetMerge", "region_energies", "merge_fleet",
+           "fleet_basis_dense", "hierarchical_stream_init",
+           "hierarchical_stream_run"]
+
+
+class FleetBasis(NamedTuple):
+    """The fleet-level basis in compact (region, column) form.
+
+    Component ``j`` of the fleet basis is column ``col[j]`` of region
+    ``region[j]``'s local basis, embedded at that region's sensor offset —
+    the block-diagonal structure of the decomposable merge means the dense
+    (p_fleet, q_fleet) form (:func:`fleet_basis_dense`) is orthonormal by
+    construction (disjoint supports, orthonormal within each region) and
+    never needs to exist on any single host.
+    """
+
+    region: jnp.ndarray          # (q_fleet,) int32 owning region per component
+    col: jnp.ndarray             # (q_fleet,) int32 column within that region
+    lam: jnp.ndarray             # (q_fleet,) subspace energies, descending
+    rho: jnp.ndarray             # () fleet retained fraction of the selection
+    lam_table: jnp.ndarray       # (regions, q_local) gathered energy records
+    total_variance: jnp.ndarray  # () psum of per-region trace partials
+
+
+class FleetMerge(NamedTuple):
+    """Level-2 output of a hierarchical run: basis + merge accounting."""
+
+    basis: FleetBasis
+    merge_epochs: jnp.ndarray    # () int32 cross-host merges performed
+    merge_packets: jnp.ndarray   # () region-head Table-1 bill, lossy-scaled
+
+
+def region_energies(state: StreamState) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """The (q_local,) live subspace energies ``diag(W^T C W)`` of a region's
+    basis against its online covariance estimate, plus the region's trace
+    partial — the exact record one region head sends up the region tree
+    (the per-component split of the drift probe's ``(q+1)``-record).
+    """
+    band = online_estimate(state.cov)
+    W = state.sched.W
+    lam = jnp.sum(W * banded_matmul_ref(band, W), axis=0)
+    return lam, online_total_variance(state.cov)
+
+
+def merge_fleet(lam_table: jnp.ndarray, total_variance: jnp.ndarray,
+                q_fleet: int) -> FleetBasis:
+    """Select the global top-``q_fleet`` components by subspace energy.
+
+    ``lam_table`` is the (regions, q_local) gathered energy records;
+    ``total_variance`` the psum of trace partials.  Pure jnp and replicated:
+    after the all_gather every shard computes the identical selection, so
+    the F flood one level down is a single scalar (the energy threshold).
+    """
+    n_regions, q_local = lam_table.shape
+    if q_fleet > n_regions * q_local:
+        raise ValueError(
+            f"q_fleet={q_fleet} > regions*q_local={n_regions * q_local}")
+    flat = lam_table.reshape(-1)
+    order = jnp.argsort(-flat)[:q_fleet]
+    lam = flat[order]
+    return FleetBasis(
+        region=(order // q_local).astype(jnp.int32),
+        col=(order % q_local).astype(jnp.int32),
+        lam=lam,
+        rho=jnp.sum(lam) / jnp.maximum(total_variance, 1e-30),
+        lam_table=lam_table,
+        total_variance=total_variance,
+    )
+
+
+def fleet_basis_dense(basis: FleetBasis,
+                      W_regions: jnp.ndarray) -> jnp.ndarray:
+    """Materialize the (p_fleet, q_fleet) block-embedded fleet basis.
+
+    ``W_regions`` is the (regions, p_region, q_local) stack of local bases.
+    Test/small-fleet utility: at p=1M the compact form is the deployment
+    artifact and this dense embed never leaves the differential suite.
+    """
+    n_regions, p_region, _ = W_regions.shape
+    q_fleet = basis.region.shape[0]
+    cols = W_regions[basis.region, :, basis.col]          # (q_fleet, p_region)
+    dense = jnp.zeros((q_fleet, n_regions * p_region), cols.dtype)
+    idx = (basis.region * p_region)[:, None] + jnp.arange(p_region)[None, :]
+    dense = dense.at[jnp.arange(q_fleet)[:, None], idx].set(cols)
+    return dense.T
+
+
+def hierarchical_stream_init(cfg: StreamConfig, key: jax.Array,
+                             n_regions: int,
+                             dtype=jnp.float32) -> StreamState:
+    """Per-region states stacked on a leading regions axis (``cfg.p`` is the
+    per-REGION sensor count; the fleet has ``n_regions * cfg.p`` sensors)."""
+    return batched_stream_init(cfg, key, n_regions, dtype=dtype)
+
+
+@functools.partial(jax.jit, static_argnums=(0, 1),
+                   static_argnames=("q_fleet", "c_regions", "axis", "chunk",
+                                    "probe_every"))
+def hierarchical_stream_run(cfg: StreamConfig, mesh, states: StreamState,
+                            xs: jnp.ndarray,
+                            masks: jnp.ndarray | None = None, *,
+                            q_fleet: int | None = None,
+                            c_regions: int | None = None,
+                            axis: str = "region",
+                            chunk: int | None = None,
+                            probe_every: int | None = None,
+                            ) -> tuple[StreamState, RoundMetrics, FleetMerge]:
+    """Two-level run: per-region streaming + one cross-host fleet merge.
+
+    ``xs`` is (regions, rounds, n, p_region); ``masks`` the optional
+    (regions, rounds, p_region) liveness schedule.  The regions axis is
+    sharded over mesh axis ``axis`` (:func:`region_axis_spec`); each shard
+    streams its local regions through :func:`batched_stream_run` (with the
+    PR 5 chunk/probe_every knobs threaded through) with NO cross-shard
+    traffic, then the merge runs as the run's only collectives: one tiled
+    ``all_gather`` of the (q_local,) energy records and one ``psum`` each
+    of the trace partials and the refresh-boundary flags.
+
+    Returns ``(final_states, metrics, fleet)`` where states/metrics are the
+    per-region leaves of the flat driver (regions-leading) and ``fleet``
+    carries the merged basis plus the merge's Table-1 bill: one
+    (q_local + 1)-record region-tree epoch per decision boundary at which
+    any region refreshed (min. one — the final merge), at fan-out
+    ``c_regions`` (default ``cfg.c_max``), ARQ-scaled like every
+    intra-network packet.
+    """
+    from jax.experimental.shard_map import shard_map
+    from jax.sharding import PartitionSpec
+
+    from repro.distributed.sharding import region_axis_spec
+
+    n_regions = xs.shape[0]
+    qf = cfg.q if q_fleet is None else q_fleet
+    cr = cfg.c_max if c_regions is None else c_regions
+    if qf > n_regions * cfg.q:
+        raise ValueError(f"q_fleet={qf} > regions*q_local="
+                         f"{n_regions * cfg.q}")
+    spec = region_axis_spec(mesh, axis)
+    axis_size = dict(zip(mesh.axis_names, mesh.devices.shape))[axis]
+    if n_regions % axis_size != 0:
+        raise ValueError(f"{n_regions} regions not divisible by axis "
+                         f"{axis!r} of size {axis_size}")
+    merge_price = costs.lossy_merge_cost(
+        cfg.q, cr, cfg.link_loss, cfg.max_retries).communication
+
+    def local_run(states_l, xs_l, masks_l=None):
+        fin, metrics = batched_stream_run(cfg, states_l, xs_l, masks_l,
+                                          chunk=chunk,
+                                          probe_every=probe_every)
+        # level-2 records: per-region energies + trace partials
+        lam_l, den_l = jax.vmap(region_energies)(fin)
+        lam_table = jax.lax.all_gather(lam_l, axis, tiled=True)
+        total_var = jax.lax.psum(jnp.sum(den_l), axis)
+        basis = merge_fleet(lam_table, total_var, qf)
+        # one merge per decision boundary at which ANY region refreshed
+        # (psum of the per-boundary flags = fleet-wide refresh count per
+        # boundary), plus the final merge when no boundary fired
+        fired = jax.lax.psum(
+            jnp.sum(metrics.did_refresh.astype(jnp.float32), axis=0), axis)
+        merges = jnp.maximum(jnp.sum(fired > 0), 1).astype(jnp.int32)
+        fleet = FleetMerge(basis=basis, merge_epochs=merges,
+                           merge_packets=merges * jnp.asarray(merge_price,
+                                                              jnp.float32))
+        return fin, metrics, fleet
+
+    state_specs = jax.tree.map(lambda _: spec, states)
+    metric_specs = jax.tree.map(lambda _: spec, _metrics_template(cfg))
+    rep = PartitionSpec()
+    fleet_specs = FleetMerge(
+        basis=FleetBasis(region=rep, col=rep, lam=rep, rho=rep,
+                         lam_table=rep, total_variance=rep),
+        merge_epochs=rep, merge_packets=rep)
+    out_specs = (state_specs, metric_specs, fleet_specs)
+    if masks is None:
+        fm = shard_map(local_run, mesh=mesh, in_specs=(state_specs, spec),
+                       out_specs=out_specs, check_rep=False)
+        return fm(states, xs)
+    fm = shard_map(local_run, mesh=mesh,
+                   in_specs=(state_specs, spec, spec),
+                   out_specs=out_specs, check_rep=False)
+    return fm(states, xs, masks)

@@ -1,0 +1,317 @@
+"""Hierarchical fleet differential suite (DESIGN.md Sec. 13).
+
+The two-level decomposition's acceptance properties:
+
+1. ``regions=1`` IS the flat driver — bit-exact states and metrics (one
+   region is the whole fleet; the merge selects the identity),
+2. the merged fleet basis matches flat single-device PCA (dense ``eigh`` on
+   the full sample covariance) within principal-angle tolerance across
+   region counts 1 / 2 / 8, on block-structured data,
+3. masked and forgetting<1 variants stay differentially tied to the flat
+   per-region driver,
+4. the cross-region merge's Table-1 bill is booked-equals-counted: the
+   (q_local + 1)-record region-head aggregation simulated over lossy links
+   reproduces :func:`repro.core.costs.lossy_epoch_load`, and at zero loss
+   collapses to :func:`repro.core.costs.merge_round_cost` (hypothesis),
+5. the region-aware serving engine merges retired regions into an
+   orthonormal fleet basis with the same bill,
+6. the ``test_mh_*`` worker tests run the merge collectives on a REAL
+   8-device region mesh (tests/multihost.py relaunch; also a dedicated CI
+   job step).
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+import multihost
+from repro.core import costs
+from repro.launch.mesh import make_fleet_mesh
+from repro.streaming import (StreamConfig, batched_stream_run, merge_fleet,
+                             fleet_basis_dense, hierarchical_stream_init,
+                             hierarchical_stream_run, stream_init, stream_run)
+from repro.streaming.hierarchy import region_energies
+
+P_REGION, Q, H = 8, 2, 7
+
+
+def _cfg(**kw):
+    base = dict(p=P_REGION, q=Q, halfwidth=H, forgetting=1.0,
+                drift_threshold=0.05, warmup_rounds=2, refresh_iters=16)
+    base.update(kw)
+    return StreamConfig(**base)
+
+
+def _block_data(seed, n_regions, n_rounds, n_per_round=8):
+    """Per-region low-rank rounds with well-separated energy scales.
+
+    Region r draws from q=2 fixed orthogonal directions with geometrically
+    separated gains (2^r), so the global energy ranking is unambiguous
+    (no near-ties for the merge's top-q selection to flip on sample
+    noise); regions are statistically independent, so the full-fleet
+    covariance is block diagonal in expectation and the global top
+    components are region-supported — the regime where the decomposable
+    merge provably recovers flat PCA.  ``halfwidth=7`` covers every sensor
+    pair of an 8-sensor region: the banded estimate is the full per-region
+    covariance, isolating hierarchy error from band truncation.
+    """
+    rng = np.random.default_rng(seed)
+    xs = np.zeros((n_regions, n_rounds, n_per_round, P_REGION), np.float32)
+    for r in range(n_regions):
+        basis, _ = np.linalg.qr(rng.normal(size=(P_REGION, Q)))
+        gains = (2.0 ** r) * np.array([3.0, 1.8])
+        z = rng.normal(size=(n_rounds, n_per_round, Q))
+        clean = np.einsum("tnk,pk->tnp", z * gains, basis)
+        noise = 0.05 * rng.normal(size=(n_rounds, n_per_round, P_REGION))
+        xs[r] = (clean + noise).astype(np.float32)
+    return jnp.asarray(xs)
+
+
+def _principal_angle(U, V):
+    """Largest principal angle (radians) between the column spaces."""
+    Uq, _ = np.linalg.qr(np.asarray(U))
+    Vq, _ = np.linalg.qr(np.asarray(V))
+    s = np.linalg.svd(Uq.T @ Vq, compute_uv=False)
+    return float(np.arccos(np.clip(s.min(), -1.0, 1.0)))
+
+
+def _align_columns(W, W_ref):
+    """Flip W's column signs to match W_ref (a PCA basis is sign-free per
+    component; ±1 scaling is exact in float, so bitwise checks survive)."""
+    s = np.sign(np.sum(np.asarray(W) * np.asarray(W_ref), axis=0))
+    s[s == 0] = 1.0
+    return np.asarray(W) * s
+
+
+def _strip_W(state):
+    """The state pytree with the basis zeroed (compared separately)."""
+    return state._replace(sched=state.sched._replace(
+        W=jnp.zeros_like(state.sched.W)))
+
+
+def _run_hierarchy(cfg, xs, masks=None, q_fleet=None):
+    n_regions = xs.shape[0]
+    mesh = make_fleet_mesh(region=1)
+    states = hierarchical_stream_init(cfg, jax.random.PRNGKey(5), n_regions)
+    return hierarchical_stream_run(cfg, mesh, states, xs, masks,
+                                   q_fleet=q_fleet)
+
+
+class TestRegionsOneIsFlat:
+    def test_bitwise_matches_flat_driver(self):
+        """One region on a one-device region mesh IS stream_run, bit for
+        bit: covariance band, counters, liveness, packets, and the per-round
+        metrics are all exactly equal, and the merge selects the identity.
+        The one exception is the refreshed basis itself — the lane-batched
+        refresh lowers its QR/eigh differently from the unbatched one, so W
+        is compared up to column sign and float32 ulps."""
+        cfg = _cfg()
+        xs = _block_data(0, 1, 10)
+        fin_h, m_h, fleet = _run_hierarchy(cfg, xs)
+        flat0 = stream_init(cfg, jax.random.split(jax.random.PRNGKey(5), 1)[0])
+        fin_f, m_f = stream_run(cfg, flat0, xs[0])
+        for a, b in zip(jax.tree.leaves(_strip_W(fin_h)),
+                        jax.tree.leaves(_strip_W(fin_f))):
+            np.testing.assert_array_equal(np.asarray(a)[0], np.asarray(b))
+        np.testing.assert_allclose(
+            _align_columns(np.asarray(fin_h.sched.W)[0], fin_f.sched.W),
+            np.asarray(fin_f.sched.W), rtol=0, atol=1e-6)
+        np.testing.assert_array_equal(np.asarray(m_h.rho)[0],
+                                      np.asarray(m_f.rho))
+        np.testing.assert_array_equal(np.asarray(m_h.comm_packets)[0],
+                                      np.asarray(m_f.comm_packets))
+        # the merge over one region selects exactly its q columns
+        assert set(np.asarray(fleet.basis.col)) == set(range(Q))
+        assert np.all(np.asarray(fleet.basis.region) == 0)
+        assert np.all(np.diff(np.asarray(fleet.basis.lam)) <= 1e-7)
+
+    def test_merge_epochs_min_one(self):
+        """A fleet whose regions never refresh still pays for the final
+        merge that produced the returned basis."""
+        cfg = _cfg(drift_threshold=0.9, warmup_rounds=100)
+        xs = _block_data(1, 2, 4)
+        _, _, fleet = _run_hierarchy(cfg, xs)
+        assert int(fleet.merge_epochs) == 1
+        expected = costs.lossy_merge_cost(
+            cfg.q, cfg.c_max, cfg.link_loss, cfg.max_retries).communication
+        assert float(fleet.merge_packets) == pytest.approx(expected)
+
+
+class TestMergeVsFlatPCA:
+    @pytest.mark.parametrize("n_regions", [1, 2, 8])
+    def test_principal_angle_vs_dense_eigh(self, n_regions):
+        """The merged fleet basis spans the flat single-device PCA subspace
+        (dense eigh of the full sample covariance) within tolerance."""
+        cfg = _cfg(drift_threshold=0.01, warmup_rounds=2)
+        xs = _block_data(2 + n_regions, n_regions, 32)
+        fin, _, fleet = _run_hierarchy(cfg, xs, q_fleet=Q)
+        dense = fleet_basis_dense(fleet.basis, fin.sched.W)
+        # flat reference: every sensor of every region in one matrix
+        flat = np.moveaxis(np.asarray(xs), 0, 2)          # (T, n, R, p)
+        flat = flat.reshape(-1, n_regions * P_REGION)
+        C = np.cov(flat, rowvar=False, bias=True)
+        w, v = np.linalg.eigh(C)
+        ref = v[:, np.argsort(w)[::-1][:Q]]
+        angle = _principal_angle(dense, ref)
+        assert angle < 0.15, f"principal angle {angle:.3f} rad"
+
+    def test_q_fleet_too_large_raises(self):
+        cfg = _cfg()
+        xs = _block_data(3, 2, 4)
+        with pytest.raises(ValueError, match="q_fleet"):
+            _run_hierarchy(cfg, xs, q_fleet=2 * Q + 1)
+
+
+class TestVariants:
+    def test_masked_matches_flat_per_region(self):
+        """Liveness masks thread through: each region's final state equals
+        the flat masked driver's, and the merge stays well formed."""
+        cfg = _cfg()
+        n_regions, n_rounds = 2, 8
+        xs = _block_data(4, n_regions, n_rounds)
+        rng = np.random.default_rng(7)
+        masks = jnp.asarray(
+            (rng.random((n_regions, n_rounds, P_REGION)) > 0.2)
+            .astype(np.float32))
+        fin_h, _, fleet = _run_hierarchy(cfg, xs, masks=masks)
+        keys = jax.random.split(jax.random.PRNGKey(5), n_regions)
+        for r in range(n_regions):
+            fin_f, _ = stream_run(cfg, stream_init(cfg, keys[r]),
+                                  xs[r], masks[r])
+            for a, b in zip(jax.tree.leaves(_strip_W(fin_h)),
+                            jax.tree.leaves(_strip_W(fin_f))):
+                np.testing.assert_array_equal(np.asarray(a)[r],
+                                              np.asarray(b))
+            np.testing.assert_array_equal(
+                _align_columns(np.asarray(fin_h.sched.W)[r],
+                               fin_f.sched.W),
+                np.asarray(fin_f.sched.W))
+        assert np.isfinite(float(fleet.basis.rho))
+
+    def test_forgetting_variant(self):
+        """forgetting<1 flows through both levels: per-region states match
+        the flat driver and the merge energies stay sorted/positive."""
+        cfg = _cfg(forgetting=0.9)
+        n_regions = 2
+        xs = _block_data(5, n_regions, 10)
+        fin_h, _, fleet = _run_hierarchy(cfg, xs)
+        keys = jax.random.split(jax.random.PRNGKey(5), n_regions)
+        for r in range(n_regions):
+            fin_f, _ = stream_run(cfg, stream_init(cfg, keys[r]), xs[r])
+            # vmap lanes vs the single-network run agree to float32 ulps
+            # (lane-batched QR/eigh aren't bit-scheduled identically)
+            np.testing.assert_allclose(
+                _align_columns(np.asarray(fin_h.sched.W)[r],
+                               fin_f.sched.W),
+                np.asarray(fin_f.sched.W), rtol=2e-6, atol=2e-6)
+        lam = np.asarray(fleet.basis.lam)
+        assert np.all(np.diff(lam) <= 1e-7) and np.all(lam > 0)
+        assert 0.0 < float(fleet.basis.rho) <= 1.0 + 1e-6
+
+
+class TestEngineFleet:
+    def test_region_tagged_streams_merge(self):
+        from repro.serve.engine import StreamingPCAEngine, StreamRequest
+
+        cfg = _cfg()
+        eng = StreamingPCAEngine(cfg, slots=2, seed=0)
+        n_regions = 3
+        xs = _block_data(9, n_regions, 8)
+        for r in range(n_regions):
+            eng.submit(StreamRequest(rounds=np.asarray(xs[r]), region=r))
+        eng.run_until_done()
+        summ = eng.fleet_summary()
+        assert summ.regions == tuple(range(n_regions))
+        assert summ.basis.shape == (n_regions * P_REGION, Q)
+        gram = summ.basis.T @ summ.basis
+        np.testing.assert_allclose(gram, np.eye(Q), atol=1e-5)
+        assert 0.0 < summ.rho <= 1.0 + 1e-6
+        assert summ.merge_packets == pytest.approx(
+            costs.lossy_merge_cost(cfg.q, cfg.c_max, cfg.link_loss,
+                                   cfg.max_retries).communication)
+
+    def test_fleet_summary_empty_raises(self):
+        from repro.serve.engine import StreamingPCAEngine
+
+        eng = StreamingPCAEngine(_cfg(), slots=1, seed=0)
+        with pytest.raises(ValueError, match="no retired region"):
+            eng.fleet_summary()
+
+
+# ---------------------------------------------------------------------------
+# Multi-host: the merge collectives on a REAL 8-device region mesh
+# ---------------------------------------------------------------------------
+@pytest.mark.skipif(multihost.in_worker(),
+                    reason="outer launcher — already inside the worker")
+def test_multihost_suite():
+    """Relaunch this module on 8 forced host devices and run the mh_
+    selection there (shard_map's all_gather/psum actually cross devices)."""
+    proc = multihost.relaunch_in_worker(__file__, n_devices=8, select="mh_")
+    assert proc.returncode == 0, \
+        proc.stdout[-2000:] + "\n" + proc.stderr[-2000:]
+
+
+needs_worker = pytest.mark.skipif(
+    not multihost.in_worker(),
+    reason="needs 8 forced devices (run via test_multihost_suite or the CI "
+           "multihost step)")
+
+
+@needs_worker
+def test_mh_eight_region_mesh_matches_host_merge():
+    """8 regions, one per device: the cross-device gather/psum merge equals
+    the host-side computation on the same final states."""
+    assert jax.device_count() >= 8
+    cfg = _cfg()
+    n_regions = 8
+    xs = _block_data(11, n_regions, 8)
+    mesh = make_fleet_mesh(region=8)
+    states = hierarchical_stream_init(cfg, jax.random.PRNGKey(5), n_regions)
+    fin, metrics, fleet = hierarchical_stream_run(cfg, mesh, states, xs)
+    # host reference: same per-region streaming, merge computed locally
+    fin_ref, m_ref = batched_stream_run(cfg, states, xs)
+    for a, b in zip(jax.tree.leaves(fin), jax.tree.leaves(fin_ref)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=1e-6, atol=1e-6)
+    lam_ref, den_ref = jax.vmap(region_energies)(fin_ref)
+    basis_ref = merge_fleet(lam_ref, jnp.sum(den_ref), cfg.q)
+    np.testing.assert_allclose(np.asarray(fleet.basis.lam_table),
+                               np.asarray(lam_ref), rtol=1e-6, atol=1e-6)
+    np.testing.assert_array_equal(np.asarray(fleet.basis.region),
+                                  np.asarray(basis_ref.region))
+    np.testing.assert_array_equal(np.asarray(fleet.basis.col),
+                                  np.asarray(basis_ref.col))
+    np.testing.assert_allclose(float(fleet.basis.rho),
+                               float(basis_ref.rho), rtol=1e-6)
+
+
+@needs_worker
+def test_mh_sharded_data_axis_matches_batched():
+    """The PR 5 data-axis sharded runner on 8 real devices still equals the
+    single-device batched driver (regression guard for the mesh split)."""
+    from repro.streaming import sharded_stream_run
+
+    assert jax.device_count() >= 8
+    cfg = _cfg()
+    n_networks = 8
+    xs = _block_data(13, n_networks, 6)
+    states = hierarchical_stream_init(cfg, jax.random.PRNGKey(5), n_networks)
+    mesh = jax.make_mesh((8, 1), ("data", "model"))
+    fin_s, m_s = sharded_stream_run(cfg, mesh, states, xs)
+    fin_b, m_b = batched_stream_run(cfg, states, xs)
+    for a, b in zip(jax.tree.leaves(fin_s), jax.tree.leaves(fin_b)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=1e-6, atol=1e-6)
+    np.testing.assert_allclose(np.asarray(m_s.rho), np.asarray(m_b.rho),
+                               rtol=1e-6, atol=1e-6)
+
+
+@needs_worker
+def test_mh_fleet_mesh_spans_local_devices():
+    from repro.launch.mesh import mesh_axis_sizes
+
+    mesh = make_fleet_mesh()
+    sizes = mesh_axis_sizes(mesh)
+    assert sizes["region"] == jax.device_count()
+    assert sizes["data"] == 1
