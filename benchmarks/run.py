@@ -5,7 +5,51 @@
 from __future__ import annotations
 
 import argparse
+import os
+import re
 import sys
+
+# committed streaming throughput baseline (smoke settings); regenerate with
+#   python benchmarks/run.py --only streaming --smoke \
+#       --streaming-json benchmarks/baselines/BENCH_streaming.json
+_STREAMING_BASELINE = os.path.join(
+    os.path.dirname(os.path.abspath(__file__)), "baselines",
+    "BENCH_streaming.json")
+
+# a measured rounds/s below this fraction of the committed baseline fails
+# the run — the fail-loud guard against silently shipping a slow hot loop
+_REGRESSION_FLOOR = 0.8
+
+
+def _rounds_per_sec(derived: str) -> float | None:
+    m = re.match(r"^(\d+(?:\.\d+)?) rounds/s", str(derived))
+    return float(m.group(1)) if m else None
+
+
+def check_streaming_regression(rows: list, baseline_path: str) -> list[str]:
+    """Compare this run's rounds/s rows against the committed baseline.
+
+    Returns a list of human-readable failures for every row whose
+    throughput fell below ``_REGRESSION_FLOOR`` x baseline.  Rows without
+    a rounds/s figure (the threshold-frontier rows) and names absent from
+    the baseline (new sweeps, different fleet sizes) are skipped — the
+    gate only ever compares like with like.
+    """
+    import json
+    with open(baseline_path) as fh:
+        base = {r["name"]: _rounds_per_sec(r["derived"])
+                for r in json.load(fh)}
+    failures = []
+    for r in rows:
+        rps = _rounds_per_sec(r["derived"])
+        ref = base.get(r["name"])
+        if rps is None or ref is None or ref <= 0:
+            continue
+        if rps < _REGRESSION_FLOOR * ref:
+            failures.append(
+                f"{r['name']}: {rps:.0f} rounds/s vs baseline {ref:.0f} "
+                f"({rps / ref:.2f}x < {_REGRESSION_FLOOR:.2f}x floor)")
+    return failures
 
 
 def main() -> int:
@@ -30,6 +74,10 @@ def main() -> int:
                     help="also write the hierarchical weak-scaling rows "
                          "(regions sweep + wsn-1m smoke replica) gathered "
                          "during this run to a JSON artifact")
+    ap.add_argument("--streaming-baseline", default=_STREAMING_BASELINE,
+                    help="committed rounds/s baseline to gate against "
+                         "(>20%% regression fails the run); pass an empty "
+                         "string to skip the gate")
     args = ap.parse_args()
     if args.full and args.smoke:
         ap.error("--full and --smoke are mutually exclusive")
@@ -89,8 +137,18 @@ def main() -> int:
         import json
         with open(path, "w") as fh:
             json.dump(rows, fh, indent=2)
+    # rounds/s regression gate: ANY streaming row more than 20% below the
+    # committed baseline fails the run outright (not just under --smoke) —
+    # a quiet throughput cliff on the hot loop must never merge silently
+    regressed = 0
+    if (gathered["streaming"] and args.streaming_baseline
+            and os.path.exists(args.streaming_baseline)):
+        for msg in check_streaming_regression(gathered["streaming"],
+                                              args.streaming_baseline):
+            regressed += 1
+            print(f"streaming/REGRESSION,0,{msg}", file=sys.stdout)
     sys.stdout.flush()
-    return 1 if (args.smoke and failed) else 0
+    return 1 if ((args.smoke and failed) or regressed) else 0
 
 
 if __name__ == "__main__":

@@ -14,6 +14,10 @@ CSV derived column:
   where launches/round counts the cov-update Pallas launches per streamed
   round and selects/round the refresh cond→selects, both read off the
   traced chunk body's jaxpr (1/K each — the structural amortization claim)
+* ``stream/{split_fp32,fused_fp32,fused_bf16}_fleet{B}`` — the mega-kernel
+  sweep (DESIGN.md Sec. 14): same data and chunk size with compression AND
+  detection enabled, "rounds/s|speedup vs split|launches/chunk" (3 split →
+  1 fused, read off the traced jaxpr); ``--fused`` runs only this sweep
 
 Standalone: ``python benchmarks/streaming_bench.py --smoke --chunk 2,8
 --json BENCH_streaming.json`` emits the same rows as a JSON artifact
@@ -27,7 +31,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from benchmarks.common import row, timed
-from repro.streaming import StreamConfig, batched_stream_run, stream_init
+from repro.streaming import (CompressionConfig, DetectionConfig,
+                             StreamConfig, batched_stream_run, stream_init)
 
 P, Q, H = 32, 3, 4
 N_PER_ROUND = 8
@@ -116,6 +121,51 @@ def chunk_sweep(smoke: bool = False, chunks: tuple[int, ...] | None = None):
     return out
 
 
+def fused_sweep(smoke: bool = False):
+    """Split vs fused chunk body, fp32 vs bf16 tiles (DESIGN.md Sec. 14).
+
+    Same data, same chunk size, compression AND detection enabled (the
+    configuration where the split body pays 3 stage launches per chunk):
+    only the launch fusion and the tile-load dtype change.  The derived
+    column records rounds/s, the speedup over the split body, and the
+    structural pallas-launch count per chunk read off the traced jaxpr
+    (3 split → 1 fused — the amortization claim of the mega-kernel).
+    """
+    out = []
+    B = 4 if smoke else 16
+    n_rounds = 32 if smoke else 64
+    K = 8
+    repeat = 5
+    xs = _fleet(jax.random.PRNGKey(0), B, n_rounds, shift_at=n_rounds // 2)
+    base = dict(p=P, q=Q, halfwidth=H, forgetting=0.9, drift_threshold=0.1,
+                warmup_rounds=5,
+                compression=CompressionConfig(epsilon=0.5,
+                                              emit_reconstruction=False),
+                detection=DetectionConfig(alpha=1e-3, calib_rounds=5))
+    us_split = None
+    for name, kw in (("split_fp32", dict(fused=False)),
+                     ("fused_fp32", dict(fused=True)),
+                     ("fused_bf16", dict(fused=True, precision="bf16"))):
+        cfg = StreamConfig(**base, **kw)
+        states = _states(cfg, B)
+
+        def _run(c=cfg, s=states):
+            res = batched_stream_run(c, s, xs, chunk=K)
+            jax.block_until_ready(res[1].rho)
+            return res
+
+        _run()                                       # compile outside timing
+        _, us = timed(_run, repeat=repeat)
+        us_split = us_split or us
+        rps = B * n_rounds / (us / 1e6)
+        launches = _chunk_body_counts(cfg, K)[0] * K
+        out.append(row(
+            f"stream/{name}_fleet{B}", us,
+            f"{rps:.0f} rounds/s|{us_split / us:.2f}x vs split|"
+            f"{launches:.0f} launches/chunk"))
+    return out
+
+
 def run(smoke: bool = False, chunks: tuple[int, ...] | None = None):
     """``smoke`` shrinks the fleets and round counts to a seconds-scale
     pass over the same code paths (the CI entrypoint guard)."""
@@ -159,6 +209,9 @@ def run(smoke: bool = False, chunks: tuple[int, ...] | None = None):
 
     # -- chunk-granular dispatch sweep -------------------------------------
     out.extend(chunk_sweep(smoke=smoke, chunks=chunks))
+
+    # -- fused mega-kernel sweep (split vs fused x fp32 vs bf16) -----------
+    out.extend(fused_sweep(smoke=smoke))
     return out
 
 
@@ -172,13 +225,16 @@ def main() -> int:
     ap.add_argument("--chunk",
                     help="comma-separated chunk sizes to sweep "
                          "(default: 2,8 smoke / 2,4,8,16 full)")
+    ap.add_argument("--fused", action="store_true",
+                    help="run only the fused-vs-split x fp32-vs-bf16 sweep")
     ap.add_argument("--json",
                     help="write the gathered rows to this path "
                          "(the BENCH_streaming.json artifact)")
     args = ap.parse_args()
     chunks = tuple(int(c) for c in args.chunk.split(",")) \
         if args.chunk else None
-    rows = run(smoke=args.smoke, chunks=chunks)
+    rows = fused_sweep(smoke=args.smoke) if args.fused \
+        else run(smoke=args.smoke, chunks=chunks)
     print("name,us_per_call,derived")
     for r in rows:
         print(f"{r['name']},{r['us_per_call']},{r['derived']}")

@@ -1,0 +1,215 @@
+"""Pallas TPU kernel: one-pass fused streaming chunk update (DESIGN.md
+Sec. 14).
+
+The chunked streaming hot loop used to pay up to three HBM passes over the
+same flattened (K·n, p) chunk — the banded cov-update
+(:mod:`repro.kernels.cov_update`), the ε-supervised compression pass and
+the T²/SPE monitoring pass (:mod:`repro.kernels.pca_project`) are separate
+``pallas_call``s reading identical tiles.  The paper's whole Sec.-2.4
+argument is that ONE aggregation pass per epoch amortizes all per-round
+work; Elgamal & Hefeeda (PAPERS.md) show the memory-traffic term dominating
+distributed-PCA cost at scale.  This kernel loads each tile of the chunk
+into VMEM once and produces, from the same tiles,
+
+* the forgetting-weighted band accumulator
+  ``delta[k, i] = Σ_r w_r m[r,i] x[r,i] m[r,i'] x[r,i']`` (the multi-round
+  fold of :func:`repro.kernels.cov_update.cov_band_update_chunk_pallas`),
+* the compression stage ``Z = ((X − mean)·m) W``, ``X_hat = Z Wᵀ + mean``,
+  ``flags = (|X − X_hat| > ε) & m`` (when ``with_compress``),
+* the monitoring stage ``T² = Σ_k z_k² inv_λ_k``,
+  ``SPE = ‖((X − mean)·m − Z Wᵀ)·m‖²`` (when ``with_monitor``),
+
+collapsing the chunk body from 3 kernel launches to 1.
+
+Tiling: the grid is (feature blocks, row blocks) — EXACTLY the cov chunk
+kernel's grid, with the same block specs and the same fold body, so the
+band accumulator is produced by the same sequence of loads, multiplies and
+row reductions and its fp32 bits are identical to the split kernel's (the
+differential guarantee of tests/test_fused_stream.py; XLA re-vectorizes a
+reduction when the tile shapes around it change, so structural congruence
+is what carries bit-equality, not just the math).  The band output block
+has a j-constant index map and is revisited consecutively across the row
+sweep of each feature block — the Pallas in-VMEM accumulation pattern.
+
+The stages run once per row block, on the FIRST feature step
+(``pl.program_id(0) == 0``), reading the full-width rows back out of the
+halo slab (which is resident anyway for the shifted band products) at the
+exact unpadded sensor count — a feature-padded chunk (awkward p) must not
+change the stage dots' reduction width, or their bits would drift from the
+standalone stage kernels.  The stage outputs advance with the row block
+and are written only on that first feature step; with more than one
+feature block those output blocks are technically revisited (idly) later
+in the sweep, which interpret mode carries through untouched — on a real
+TPU backend the roofline feature targets (:mod:`repro.launch.tiling`) keep
+p inside one feature block for every WSN-scale network, so the idle
+revisit never materializes there.
+
+Precision: every tile is cast to fp32 on load and every accumulation runs
+in fp32 (``preferred_element_type=jnp.float32``), whatever the operand
+dtype — so the optional bf16 mode (the ops wrapper casts the large
+operands x/xpad/mask/W to bfloat16 before the call) halves the HBM tile
+traffic while the band fold and the stage reductions keep fp32
+accumulators.  With fp32 operands the arithmetic (and hence, in interpret
+mode, the bits) is identical to the three split kernels: the band part
+replicates ``_chunk_masked_kernel`` load-for-load and the stage part
+replicates ``_supervised_kernel``/``_monitor_kernel`` op-for-op per
+(block_n, p) slab.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+__all__ = ["fused_stream_pallas"]
+
+
+def _fused_kernel(x_ref, xpad_ref, m_ref, mpad_ref, w_ref, basis_ref,
+                  mean_ref, invlam_ref, *out_refs,
+                  nb: int, p: int, eps: float, with_compress: bool,
+                  with_monitor: bool):
+    i = pl.program_id(0)                    # feature block (band fold)
+    j = pl.program_id(1)                    # row block
+    block_p = x_ref.shape[1]
+    base = i * block_p
+    h = (nb - 1) // 2
+    band_ref = out_refs[0]
+    z_ref = out_refs[1]
+    k_out = 2
+    if with_compress:
+        xh_ref, flag_ref = out_refs[k_out], out_refs[k_out + 1]
+        k_out += 2
+    if with_monitor:
+        t2_ref, spe_ref = out_refs[k_out], out_refs[k_out + 1]
+
+    @pl.when(j == 0)
+    def _init():
+        band_ref[...] = jnp.zeros_like(band_ref)
+
+    # --- band fold: line-for-line _chunk_masked_kernel (mask fused into
+    # the tile load, then the per-row round weight; shifted operand masked
+    # but unweighted, so each product carries its weight once)
+    xw = (x_ref[...] * m_ref[...]).astype(jnp.float32) \
+        * w_ref[...].astype(jnp.float32)
+    rows = []
+    for k in range(nb):
+        sl = pl.dslice(base + k, block_p)
+        xs = (xpad_ref[:, sl] * mpad_ref[:, sl]).astype(jnp.float32)
+        rows.append(jnp.sum(xw * xs, axis=0))           # (block_p,)
+    band_ref[...] = band_ref[...] \
+        + jnp.stack(rows, axis=0).astype(band_ref.dtype)
+
+    # --- stages, once per row block on the first feature step: identical
+    # op order to _supervised_kernel/_monitor_kernel (the projection and
+    # the VMEM-resident reconstruction are shared — the split kernels each
+    # recomputed them from their own tile loads).  Rows come back out of
+    # the halo slab at the EXACT width p, so a feature-padded chunk does
+    # not widen the stage dots.
+    @pl.when(i == 0)
+    def _stages():
+        x = xpad_ref[:, pl.dslice(h, p)].astype(jnp.float32)
+        m = mpad_ref[:, pl.dslice(h, p)].astype(jnp.float32)
+        w = basis_ref[...].astype(jnp.float32)          # (p, q)
+        mean = mean_ref[...].astype(jnp.float32)        # (1, p)
+        xc = (x - mean) * m
+        z = jnp.dot(xc, w, preferred_element_type=jnp.float32)
+        xh_r = jnp.dot(z, w.T, preferred_element_type=jnp.float32)
+        z_ref[...] = z.astype(z_ref.dtype)
+        if with_compress:
+            xh = xh_r + mean
+            err = jnp.abs(x - xh)
+            flags = jnp.where((err > eps) & (m > 0.0), 1.0, 0.0)
+            xh_ref[...] = xh.astype(xh_ref.dtype)
+            flag_ref[...] = flags.astype(flag_ref.dtype)
+        if with_monitor:
+            il = invlam_ref[...].astype(jnp.float32)    # (1, q)
+            resid = (xc - xh_r) * m
+            t2_ref[...] = jnp.sum(z * z * il, axis=1,
+                                  keepdims=True).astype(t2_ref.dtype)
+            spe_ref[...] = jnp.sum(resid * resid, axis=1,
+                                   keepdims=True).astype(spe_ref.dtype)
+
+
+def fused_stream_pallas(x: jnp.ndarray, x_padded: jnp.ndarray,
+                        mask: jnp.ndarray, mask_padded: jnp.ndarray,
+                        w_rows: jnp.ndarray, basis: jnp.ndarray,
+                        mean: jnp.ndarray, inv_lam: jnp.ndarray,
+                        *, halfwidth: int, epsilon: float,
+                        with_compress: bool, with_monitor: bool,
+                        block_p: int, block_n: int, interpret: bool = False,
+                        ) -> tuple[jnp.ndarray, ...]:
+    """One fused chunk pass: band fold + compression + monitoring.
+
+    ``x`` is the flattened chunk (rows, p_pad) (rows = K·n padded to
+    ``block_n``, features padded to ``block_p``); ``x_padded`` its
+    (rows, p_pad + 2h) halo form; ``mask`` / ``mask_padded`` the per-row
+    0/1 validity (liveness × round validity — pad rows carry mask 0 AND
+    weight 0, pad features mask 0); ``w_rows`` (rows, 1) the per-row
+    forgetting weights; ``basis`` (p, q), ``mean`` (1, p) and ``inv_lam``
+    (1, q) the stage operands at the EXACT sensor count p (p <= p_pad),
+    replicated to every grid step.
+
+    Returns ``(band, z[, x_hat, flags][, t2, spe])`` — band (2h+1, p_pad)
+    and per-row stage outputs at exact width, all fp32, gated by the
+    static ``with_*`` flags (at least one must be set; a band-only chunk
+    has no reason to pay the stage operand traffic — use the cov-update
+    kernel).
+    """
+    rows, p_pad = x.shape
+    h = halfwidth
+    nb = 2 * h + 1
+    p, q = basis.shape
+    assert p <= p_pad, (p, p_pad)
+    assert with_compress or with_monitor, "band-only: use cov_band_update"
+    assert rows % block_n == 0, (rows, block_n)
+    assert p_pad % block_p == 0, (p_pad, block_p)
+    assert x_padded.shape == (rows, p_pad + 2 * h)
+    assert mask.shape == (rows, p_pad)
+    assert mask_padded.shape == (rows, p_pad + 2 * h)
+    assert w_rows.shape == (rows, 1)
+    assert mean.shape == (1, p) and inv_lam.shape == (1, q)
+    grid = (p_pad // block_p, rows // block_n)
+    in_specs = [
+        pl.BlockSpec((block_n, block_p), lambda i, j: (j, i)),      # x
+        pl.BlockSpec((block_n, p_pad + 2 * h), lambda i, j: (j, 0)),
+        pl.BlockSpec((block_n, block_p), lambda i, j: (j, i)),      # mask
+        pl.BlockSpec((block_n, p_pad + 2 * h), lambda i, j: (j, 0)),
+        pl.BlockSpec((block_n, 1), lambda i, j: (j, 0)),            # weights
+        pl.BlockSpec((p, q), lambda i, j: (0, 0)),                  # basis
+        pl.BlockSpec((1, p), lambda i, j: (0, 0)),                  # mean
+        pl.BlockSpec((1, q), lambda i, j: (0, 0)),                  # inv_lam
+    ]
+    # the band accumulator block is revisited consecutively by the row
+    # sweep of its feature block (j-constant index map); the stage outputs
+    # advance with the row blocks and are written on the first feature step
+    out_specs = [
+        pl.BlockSpec((nb, block_p), lambda i, j: (0, i)),           # band
+        pl.BlockSpec((block_n, q), lambda i, j: (j, 0)),            # z
+    ]
+    out_shape = [
+        jax.ShapeDtypeStruct((nb, p_pad), jnp.float32),
+        jax.ShapeDtypeStruct((rows, q), jnp.float32),
+    ]
+    if with_compress:
+        out_specs += [pl.BlockSpec((block_n, p), lambda i, j: (j, 0)),
+                      pl.BlockSpec((block_n, p), lambda i, j: (j, 0))]
+        out_shape += [jax.ShapeDtypeStruct((rows, p), jnp.float32),
+                      jax.ShapeDtypeStruct((rows, p), jnp.float32)]
+    if with_monitor:
+        out_specs += [pl.BlockSpec((block_n, 1), lambda i, j: (j, 0)),
+                      pl.BlockSpec((block_n, 1), lambda i, j: (j, 0))]
+        out_shape += [jax.ShapeDtypeStruct((rows, 1), jnp.float32),
+                      jax.ShapeDtypeStruct((rows, 1), jnp.float32)]
+    return pl.pallas_call(
+        functools.partial(_fused_kernel, nb=nb, p=p, eps=float(epsilon),
+                          with_compress=with_compress,
+                          with_monitor=with_monitor),
+        grid=grid,
+        in_specs=in_specs,
+        out_specs=out_specs,
+        out_shape=out_shape,
+        interpret=interpret,
+    )(x, x_padded, mask, mask_padded, w_rows, basis, mean, inv_lam)

@@ -18,6 +18,7 @@ from repro.kernels.cov_update import (cov_band_update_chunk_masked_pallas,
                                       cov_band_update_chunk_pallas,
                                       cov_band_update_pallas,
                                       cov_band_update_masked_pallas)
+from repro.kernels.fused_stream import fused_stream_pallas
 from repro.kernels.pca_project import (pca_monitor_pallas,
                                        pca_project_pallas,
                                        pca_reconstruct_pallas,
@@ -28,13 +29,26 @@ __all__ = ["banded_matvec", "banded_matmul", "cov_band_update",
            "cov_band_update_chunk", "cov_band_update_chunk_batched",
            "pca_project", "pca_reconstruct",
            "supervised_compress", "supervised_compress_batched",
-           "pca_monitor", "pca_monitor_batched"]
+           "pca_monitor", "pca_monitor_batched",
+           "fused_stream_update", "fused_stream_stages_blocked"]
 
 
 def _auto_interpret(interpret: bool | None) -> bool:
     if interpret is None:
         return jax.default_backend() != "tpu"
     return interpret
+
+
+@functools.lru_cache(maxsize=None)
+def _targets(kind: str, dtype: str = "fp32") -> tuple[int, int]:
+    """(row target, feature target) for a kernel family — resolved per
+    backend through :func:`repro.launch.tiling.block_targets` instead of
+    the old hard-coded (128, 512).  Non-TPU backends (this CI container)
+    get the historical numbers back, so interpret-mode bits are unchanged.
+    """
+    from repro.launch.tiling import block_targets
+    t = block_targets(kind, dtype=dtype)
+    return t["rows"], t["features"]
 
 
 def _pick_block(p: int, target: int = 512) -> int:
@@ -77,11 +91,25 @@ def _banded_matvec(band, v, block_p, interpret):
 
 def banded_matvec(band: jnp.ndarray, v: jnp.ndarray,
                   block_p: int | None = None,
-                  interpret: bool | None = None) -> jnp.ndarray:
-    """y = C v with C banded (2h+1, p) diagonals; v (p,)."""
+                  interpret: bool | None = None,
+                  out_dtype=None) -> jnp.ndarray:
+    """y = C v with C banded (2h+1, p) diagonals; v (p,).
+
+    Accumulates in fp32 inside the kernel whatever the operand dtype; the
+    output is ``out_dtype`` (default: the band's dtype — a bf16 band stays
+    bf16 instead of silently upcasting).  An awkward ``p`` (e.g. prime —
+    the old divisor fallback tiled it by 1, a pathological grid) is
+    zero-padded to the block and sliced back: pad columns hold zero band
+    entries, so the surviving region is bit-identical.
+    """
     nb, p = band.shape
-    bp = block_p or _pick_block(p)
-    return _banded_matvec(band, v, bp, _auto_interpret(interpret))
+    bp = block_p or _pick_block_padded(p, _targets("banded")[1])
+    p_pad = _pad_dim(p, bp)
+    if p_pad != p:
+        band = jnp.pad(band, ((0, 0), (0, p_pad - p)))
+        v = jnp.pad(v, (0, p_pad - p))
+    out = _banded_matvec(band, v, bp, _auto_interpret(interpret))[:p]
+    return out if out_dtype is None else out.astype(out_dtype)
 
 
 @functools.partial(jax.jit, static_argnames=("block_p", "interpret"))
@@ -94,11 +122,21 @@ def _banded_matmul(band, V, block_p, interpret):
 
 def banded_matmul(band: jnp.ndarray, V: jnp.ndarray,
                   block_p: int | None = None,
-                  interpret: bool | None = None) -> jnp.ndarray:
-    """Y = C V with C banded; V (p, q)."""
+                  interpret: bool | None = None,
+                  out_dtype=None) -> jnp.ndarray:
+    """Y = C V with C banded; V (p, q).
+
+    Same pad-to-block treatment and dtype policy as
+    :func:`banded_matvec` (fp32 accumulate; output follows the band).
+    """
     nb, p = band.shape
-    bp = block_p or _pick_block(p)
-    return _banded_matmul(band, V, bp, _auto_interpret(interpret))
+    bp = block_p or _pick_block_padded(p, _targets("banded")[1])
+    p_pad = _pad_dim(p, bp)
+    if p_pad != p:
+        band = jnp.pad(band, ((0, 0), (0, p_pad - p)))
+        V = jnp.pad(V, ((0, p_pad - p), (0, 0)))
+    out = _banded_matmul(band, V, bp, _auto_interpret(interpret))[:p]
+    return out if out_dtype is None else out.astype(out_dtype)
 
 
 @functools.partial(jax.jit,
@@ -113,12 +151,30 @@ def _cov_band_update(x, halfwidth, block_p, block_n, interpret):
 
 def cov_band_update(x: jnp.ndarray, halfwidth: int,
                     block_p: int | None = None, block_n: int | None = None,
-                    interpret: bool | None = None) -> jnp.ndarray:
-    """delta band (2h+1, p) = sum_t outer(x_t, x_t) restricted to the band."""
+                    interpret: bool | None = None,
+                    out_dtype=None) -> jnp.ndarray:
+    """delta band (2h+1, p) = sum_t outer(x_t, x_t) restricted to the band.
+
+    Accumulates in fp32 inside the kernel whatever ``x``'s dtype; the
+    output is ``out_dtype`` (default fp32 — the historical contract; pass
+    the state dtype to keep a bf16-configured engine's sufficient
+    statistics in bf16 without a silent upcast).  Awkward shapes (e.g.
+    prime ``p`` — the old divisor fallback degraded to ``block_p=1``, a
+    silent up-to-512× tiling pessimization on the per-round path) are
+    zero-padded to the block grid and sliced back: pad rows/columns are
+    exact zero contributions, and every divisor-covered shape keeps its
+    historical tiling bit-identically.
+    """
     n, p = x.shape
-    bp = block_p or _pick_block(p)
-    bn = block_n or _pick_block(n, target=128)
-    return _cov_band_update(x, halfwidth, bp, bn, _auto_interpret(interpret))
+    rt, ft = _targets("cov")
+    bp = block_p or _pick_block_padded(p, ft)
+    bn = block_n or _pick_block_padded(n, rt)
+    n_pad, p_pad = _pad_dim(n, bn), _pad_dim(p, bp)
+    if (n_pad, p_pad) != (n, p):
+        x = jnp.pad(x, ((0, n_pad - n), (0, p_pad - p)))
+    out = _cov_band_update(x, halfwidth, bp, bn,
+                           _auto_interpret(interpret))[:, :p]
+    return out if out_dtype is None else out.astype(out_dtype)
 
 
 @functools.partial(jax.jit,
@@ -155,10 +211,16 @@ def cov_band_update_masked(x: jnp.ndarray, mask: jnp.ndarray, halfwidth: int,
         mask = jnp.broadcast_to(mask[None, :], (n, p))
     if mask.shape != (n, p):
         raise ValueError(f"mask shape {mask.shape} incompatible with {(n, p)}")
-    bp = block_p or _pick_block(p)
-    bn = block_n or _pick_block(n, target=128)
-    return _cov_band_update_masked(x, mask, halfwidth, bp, bn,
-                                   _auto_interpret(interpret))
+    rt, ft = _targets("cov")
+    bp = block_p or _pick_block_padded(p, ft)
+    bn = block_n or _pick_block_padded(n, rt)
+    n_pad, p_pad = _pad_dim(n, bn), _pad_dim(p, bp)
+    if (n_pad, p_pad) != (n, p):
+        x = jnp.pad(x, ((0, n_pad - n), (0, p_pad - p)))
+        mask = jnp.pad(mask, ((0, n_pad - n), (0, p_pad - p)))
+    out = _cov_band_update_masked(x, mask, halfwidth, bp, bn,
+                                  _auto_interpret(interpret))
+    return out[:, :p]
 
 
 def cov_band_update_batched(x: jnp.ndarray, halfwidth: int,
@@ -179,11 +241,10 @@ def cov_band_update_batched(x: jnp.ndarray, halfwidth: int,
     if x.ndim != 3:
         raise ValueError(f"expected (networks, n, p), got {x.shape}")
     _, n, p = x.shape
-    bp = block_p or _pick_block(p)
-    bn = block_n or _pick_block(n, target=128)
     itp = _auto_interpret(interpret)
     return jax.vmap(
-        lambda xi: _cov_band_update(xi, halfwidth, bp, bn, itp))(x)
+        lambda xi: cov_band_update(xi, halfwidth, block_p=block_p,
+                                   block_n=block_n, interpret=itp))(x)
 
 
 @functools.partial(jax.jit,
@@ -239,11 +300,12 @@ def cov_band_update_chunk(xs: jnp.ndarray, weights: jnp.ndarray,
     weights = jnp.asarray(weights, jnp.float32)
     if weights.shape != (K,):
         raise ValueError(f"weights shape {weights.shape} != {(K,)}")
-    bp = block_p or _pick_block_padded(p, target=512)
+    rt, ft = _targets("cov")
+    bp = block_p or _pick_block_padded(p, ft)
     # the row tile covers the FLATTENED chunk: a K-round chunk becomes
     # ~K-fold fewer grid cells than K per-round launches (at K=1 the pick
     # degenerates to the per-round choice — bit-identity preserved)
-    bn = block_n or _pick_block_padded(K * n, target=128)
+    bn = block_n or _pick_block_padded(K * n, rt)
     itp = _auto_interpret(interpret)
     x = xs.reshape(K * n, p)
     w = jnp.repeat(weights, n)[:, None]                 # (K*n, 1) row weights
@@ -318,8 +380,9 @@ def pca_project(x: jnp.ndarray, w: jnp.ndarray,
     result is bit-identical to the unpadded kernel at the same block sizes.
     """
     n, p = x.shape
-    bn = block_n or _pick_block_padded(n, target=128)
-    bk = block_k or _pick_block_padded(p, target=512)
+    rt, ft = _targets("stage")
+    bn = block_n or _pick_block_padded(n, rt)
+    bk = block_k or _pick_block_padded(p, ft)
     n_pad, p_pad = _pad_dim(n, bn), _pad_dim(p, bk)
     if (n_pad, p_pad) != (n, p):
         x = jnp.pad(x, ((0, n_pad - n), (0, p_pad - p)))
@@ -346,8 +409,9 @@ def pca_reconstruct(z: jnp.ndarray, w: jnp.ndarray,
     """
     n, q = z.shape
     p = w.shape[0]
-    bn = block_n or _pick_block_padded(n, target=128)
-    bp = block_p or _pick_block_padded(p, target=512)
+    rt, ft = _targets("stage")
+    bn = block_n or _pick_block_padded(n, rt)
+    bp = block_p or _pick_block_padded(p, ft)
     n_pad, p_pad = _pad_dim(n, bn), _pad_dim(p, bp)
     if (n_pad, p_pad) != (n, p):
         z = jnp.pad(z, ((0, n_pad - n), (0, 0)))
@@ -393,7 +457,7 @@ def supervised_compress(x: jnp.ndarray, w: jnp.ndarray,
         mask = jnp.asarray(mask, jnp.float32)
         if mask.ndim == 1:
             mask = jnp.broadcast_to(mask[None, :], (n, p))
-    bn = block_n or _pick_block_padded(n, target=128)
+    bn = block_n or _pick_block_padded(n, _targets("stage")[0])
     n_pad = _pad_dim(n, bn)
     if n_pad != n:
         x = jnp.pad(x, ((0, n_pad - n), (0, 0)))
@@ -445,7 +509,7 @@ def pca_monitor(x: jnp.ndarray, w: jnp.ndarray,
         mask = jnp.asarray(mask, jnp.float32)
         if mask.ndim == 1:
             mask = jnp.broadcast_to(mask[None, :], (n, p))
-    bn = block_n or _pick_block_padded(n, target=128)
+    bn = block_n or _pick_block_padded(n, _targets("stage")[0])
     n_pad = _pad_dim(n, bn)
     if n_pad != n:
         x = jnp.pad(x, ((0, n_pad - n), (0, 0)))
@@ -535,3 +599,192 @@ def supervised_compress_batched(x: jnp.ndarray, w: jnp.ndarray,
         lambda xi, wi, mi, ki: supervised_compress(
             xi, wi, mi, epsilon=epsilon, mask=ki, block_n=block_n,
             interpret=interpret))(x, w, mean, mask)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("halfwidth", "epsilon", "with_compress",
+                                    "with_monitor", "block_p", "block_n",
+                                    "interpret"))
+def _fused_stream(x, mask, w_rows, basis, mean2d, invlam2d, halfwidth,
+                  epsilon, with_compress, with_monitor, block_p, block_n,
+                  interpret):
+    h = halfwidth
+    xpad = jnp.pad(x, ((0, 0), (h, h)))
+    mpad = jnp.pad(mask, ((0, 0), (h, h)))
+    return fused_stream_pallas(
+        x, xpad, mask, mpad, w_rows, basis, mean2d, invlam2d,
+        halfwidth=h, epsilon=epsilon, with_compress=with_compress,
+        with_monitor=with_monitor, block_p=block_p, block_n=block_n,
+        interpret=interpret)
+
+
+def _fused_prep(x, basis, mean, inv_lam, mask, precision):
+    """Shared operand normalization of the fused wrapper and its blocked
+    jnp twin: fp32 canonical forms, ones mask default, optional bf16
+    downcast of the LARGE operands only (x/mask/basis — the tile traffic;
+    mean, inv_lam and the row weights are replicated scalars/rows and stay
+    fp32, as do every in-kernel accumulator and every output)."""
+    rows, p = x.shape
+    q = basis.shape[1]
+    x = jnp.asarray(x, jnp.float32)
+    mean2d = (jnp.zeros((1, p), jnp.float32) if mean is None
+              else jnp.asarray(mean, jnp.float32).reshape(1, p))
+    invlam2d = (jnp.ones((1, q), jnp.float32) if inv_lam is None
+                else jnp.asarray(inv_lam, jnp.float32).reshape(1, q))
+    if mask is None:
+        mask = jnp.ones((rows, p), jnp.float32)
+    else:
+        mask = jnp.asarray(mask, jnp.float32)
+        if mask.ndim == 1:
+            mask = jnp.broadcast_to(mask[None, :], (rows, p))
+    basis = jnp.asarray(basis, jnp.float32)
+    if precision not in ("fp32", "bf16"):
+        raise ValueError(f"precision must be 'fp32' or 'bf16', "
+                         f"got {precision!r}")
+    if precision == "bf16":
+        x = x.astype(jnp.bfloat16)
+        mask = mask.astype(jnp.bfloat16)     # 0/1: exact in bf16
+        basis = basis.astype(jnp.bfloat16)
+    return x, mask, basis, mean2d, invlam2d
+
+
+def fused_stream_update(x: jnp.ndarray, weights: jnp.ndarray,
+                        basis: jnp.ndarray,
+                        mean: jnp.ndarray | None = None,
+                        inv_lam: jnp.ndarray | None = None, *,
+                        halfwidth: int, epsilon: float = 0.0,
+                        with_compress: bool, with_monitor: bool,
+                        mask: jnp.ndarray | None = None,
+                        precision: str = "fp32",
+                        block_p: int | None = None,
+                        block_n: int | None = None,
+                        interpret: bool | None = None,
+                        ) -> tuple[jnp.ndarray, jnp.ndarray,
+                                   jnp.ndarray | None, jnp.ndarray | None,
+                                   jnp.ndarray | None, jnp.ndarray | None]:
+    """ONE kernel pass over a flattened (rows, p) chunk: the forgetting-
+    weighted band fold plus the configured per-row stages
+    (:func:`repro.kernels.fused_stream.fused_stream_pallas`).
+
+    ``weights`` (rows,) carries each row's round weight (γ^(live after)
+    with 0 for pad/invalid rows); ``mask`` the per-row 0/1 validity
+    ((rows, p), (p,) broadcast, or None = all live).  ``basis`` (p, q),
+    ``mean`` (p,) and ``inv_lam`` (q,) are the stage operands.
+
+    Returns ``(band, z, x_hat, flagged, t2, spe)`` — band (2h+1, p) fp32;
+    z (rows, q); x_hat (rows, p) and bool ``flagged`` (compression, else
+    None); t2/spe (rows,) (monitoring, else None).  With fp32 operands
+    the band is bit-identical to :func:`cov_band_update_chunk` at the
+    same blocks and the stages to :func:`supervised_compress` /
+    :func:`pca_monitor`; ``precision="bf16"`` downcasts the tile-load
+    operands (x, mask, basis) to bfloat16 — halving the chunk's HBM
+    traffic — while every accumulator and output stays fp32.
+
+    The row axis is padded to the block with zero-weight zero-mask rows
+    (exact no-ops everywhere), an awkward feature axis is zero-padded to
+    the band's feature block exactly like :func:`cov_band_update_chunk`
+    (the stage dots stay at the exact width — the kernel re-slices the
+    halo slab), and every output is sliced back.
+    """
+    rows, p = x.shape
+    x, mask, basis, mean2d, invlam2d = _fused_prep(
+        x, basis, mean, inv_lam, mask, precision)
+    weights = jnp.asarray(weights, jnp.float32).reshape(rows, 1)
+    rt, ft = _targets("fused", precision)
+    bp = block_p or _pick_block_padded(p, ft)
+    bn = block_n or _pick_block_padded(rows, rt)
+    rows_pad = _pad_dim(rows, bn)
+    p_pad = _pad_dim(p, bp)
+    if (rows_pad, p_pad) != (rows, p):
+        x = jnp.pad(x, ((0, rows_pad - rows), (0, p_pad - p)))
+        mask = jnp.pad(mask, ((0, rows_pad - rows), (0, p_pad - p)))
+        weights = jnp.pad(weights, ((0, rows_pad - rows), (0, 0)))
+    out = _fused_stream(x, mask, weights, basis, mean2d, invlam2d,
+                        halfwidth, float(epsilon), with_compress,
+                        with_monitor, bp, bn, _auto_interpret(interpret))
+    band, z = out[0][:, :p], out[1][:rows]
+    i = 2
+    x_hat = flagged = t2 = spe = None
+    if with_compress:
+        x_hat = out[i][:rows]
+        flagged = out[i + 1][:rows] > 0.0
+        i += 2
+    if with_monitor:
+        t2 = out[i][:rows, 0]
+        spe = out[i + 1][:rows, 0]
+    return band, z, x_hat, flagged, t2, spe
+
+
+def fused_stream_stages_blocked(x: jnp.ndarray, basis: jnp.ndarray,
+                                mean: jnp.ndarray | None = None,
+                                inv_lam: jnp.ndarray | None = None, *,
+                                epsilon: float = 0.0,
+                                with_compress: bool, with_monitor: bool,
+                                mask: jnp.ndarray | None = None,
+                                precision: str = "fp32",
+                                block_n: int | None = None,
+                                ) -> tuple[jnp.ndarray,
+                                           jnp.ndarray | None,
+                                           jnp.ndarray | None,
+                                           jnp.ndarray | None,
+                                           jnp.ndarray | None]:
+    """The fused kernel's STAGE arithmetic as a plain-jnp scan over row
+    blocks — same tile shapes, same op order, same fp32 accumulation as
+    the kernel body, and therefore (in interpret mode) the same bits.
+    A ``lax.scan`` (not an unrolled python loop) mirrors the interpret
+    grid loop structurally: unrolling lets XLA fuse across blocks and
+    re-vectorize the SPE reduction, which drifts bits at multi-block
+    shapes.
+
+    This is the post-refresh fix-up of the fused driver path
+    (:func:`repro.streaming.driver.chunk_stream_step`): the kernel runs
+    ONCE against the pre-decision basis; when the scheduler then rotates
+    W, the stages must be re-evaluated against the post-decision basis —
+    re-launching the kernel would double the chunk's HBM traffic on every
+    refresh AND put a second ``pallas_call`` into the traced chunk body
+    (the jaxpr launch-count guarantee counts both ``lax.cond`` branches).
+    A pure-jnp twin recomputes only the MXU/VPU stage math (no band fold —
+    the fold is basis-independent) with identical per-block shapes.
+
+    Returns ``(z, x_hat, flagged, t2, spe)`` with None for disabled
+    stages, like :func:`fused_stream_update` minus the band.
+    """
+    rows, p = x.shape
+    x, mask, basis, mean2d, invlam2d = _fused_prep(
+        x, basis, mean, inv_lam, mask, precision)
+    bn = block_n or _pick_block_padded(rows, _targets("fused", precision)[0])
+    rows_pad = _pad_dim(rows, bn)
+    if rows_pad != rows:
+        x = jnp.pad(x, ((0, rows_pad - rows), (0, 0)))
+        mask = jnp.pad(mask, ((0, rows_pad - rows), (0, 0)))
+    w = basis.astype(jnp.float32)
+    nblk = rows_pad // bn
+
+    def _block(_, xm):
+        xb, mb = xm
+        xb = xb.astype(jnp.float32)
+        mb = mb.astype(jnp.float32)
+        xc = (xb - mean2d) * mb
+        z = jnp.dot(xc, w, preferred_element_type=jnp.float32)
+        xh_r = jnp.dot(z, w.T, preferred_element_type=jnp.float32)
+        if with_compress:
+            xh = xh_r + mean2d
+            fl = (jnp.abs(xb - xh) > epsilon) & (mb > 0.0)
+        else:
+            xh = fl = jnp.zeros((), jnp.float32)
+        if with_monitor:
+            resid = (xc - xh_r) * mb
+            t2 = jnp.sum(z * z * invlam2d, axis=1)
+            spe = jnp.sum(resid * resid, axis=1)
+        else:
+            t2 = spe = jnp.zeros((), jnp.float32)
+        return None, (z, xh, fl, t2, spe)
+
+    _, (z, xh, fl, t2, spe) = jax.lax.scan(
+        _block, None, (x.reshape(nblk, bn, p), mask.reshape(nblk, bn, p)))
+    flat = lambda a: a.reshape((rows_pad,) + a.shape[2:])[:rows]
+    return (flat(z),
+            flat(xh) if with_compress else None,
+            flat(fl) if with_compress else None,
+            flat(t2) if with_monitor else None,
+            flat(spe) if with_monitor else None)

@@ -16,7 +16,8 @@ import jax.numpy as jnp
 __all__ = ["banded_matvec", "banded_matmul", "cov_band_update",
            "cov_band_update_masked", "cov_band_update_chunk",
            "cov_band_update_chunk_masked", "pca_project", "pca_reconstruct",
-           "supervised_compress", "pca_monitor"]
+           "supervised_compress", "pca_monitor",
+           "fused_stream"]
 
 
 def _shifted_cols(x: jnp.ndarray, offset: int) -> jnp.ndarray:
@@ -150,3 +151,30 @@ def pca_monitor(x: jnp.ndarray, w: jnp.ndarray, mean: jnp.ndarray,
     t2 = jnp.sum(z * z * inv_lam, axis=1)
     spe = jnp.sum(resid * resid, axis=1)
     return z, t2, spe
+
+
+def fused_stream(xs: jnp.ndarray, weights: jnp.ndarray, w: jnp.ndarray,
+                 mean: jnp.ndarray, inv_lam: jnp.ndarray, halfwidth: int,
+                 epsilon: float, mask: jnp.ndarray | None = None,
+                 ) -> tuple[jnp.ndarray, ...]:
+    """The one-pass fused chunk epoch (DESIGN.md Sec. 14), unfused.
+
+    ``xs`` is the flattened chunk (rows, p), ``weights`` (rows,) the
+    per-row forgetting weights, ``mask`` per-row 0/1 validity (None = all
+    live).  Composes the existing oracles: the forgetting-weighted band
+    fold of :func:`cov_band_update_chunk_masked` (rows treated as a
+    K=rows, n=1 chunk), :func:`supervised_compress` and
+    :func:`pca_monitor` — returns ``(band, z, x_hat, flags, t2, spe)``.
+    """
+    rows, p = xs.shape
+    if mask is None:
+        mask = jnp.ones((rows, p), jnp.float32)
+    mask = jnp.asarray(mask, jnp.float32)
+    if mask.ndim == 1:
+        mask = jnp.broadcast_to(mask[None, :], (rows, p))
+    band = cov_band_update_chunk_masked(xs[:, None, :], mask[:, None, :],
+                                        jnp.asarray(weights, jnp.float32),
+                                        halfwidth)
+    z, xh, flags = supervised_compress(xs, w, mean, mask, epsilon)
+    _, t2, spe = pca_monitor(xs, w, mean, inv_lam, mask)
+    return band, z, xh, flags, t2, spe

@@ -1,0 +1,96 @@
+"""Roofline-informed kernel tile targets (per backend, per dtype).
+
+The kernel wrappers in :mod:`repro.kernels.ops` used to hard-code their
+block-size targets (rows 128, features 512 — the shapes the kernels were
+first tuned at).  This module derives the targets instead, from the same
+machine model :mod:`repro.launch.hlo_analysis` uses for the dry-run
+roofline (:data:`PEAK_FLOPS` / :data:`HBM_BW` of a v5e core) plus the VMEM
+capacity, so a backend with different balance points picks different tiles
+without touching kernel code.
+
+Derivation (TPU branch):
+
+* the minimum profitable tile is the register-file native shape — (8, 128)
+  sublanes × lanes at fp32, (16, 128) at bf16 (packed sublanes);
+* the row-block target is sized so a double-buffered working set of the
+  fused kernel (x + halo slab + stage outputs, ~4 (block_n, p)-sized tiles
+  in flight) stays under half of VMEM at the largest supported feature
+  width — rounded down to a power of two;
+* the feature target keeps the arithmetic intensity of the band fold above
+  the HBM ridge point (FLOPs/byte = PEAK_FLOPS / HBM_BW): each band
+  product reads 8 bytes/feature and does 2·(2h+1) FLOPs, so wider feature
+  tiles only help until the slab exceeds VMEM — the cap lands at the
+  historical 512 for fp32 and doubles for bf16 (half the bytes per lane).
+
+Non-TPU backends (the CPU CI container runs every kernel in interpret
+mode) return the historical targets unchanged, so every existing result is
+bit-identical: tiling is part of the accumulation order, and the
+differential suites pin bits, not just values.
+"""
+
+from __future__ import annotations
+
+import jax
+
+from repro.launch.hlo_analysis import HBM_BW, PEAK_FLOPS
+
+__all__ = ["VMEM_BYTES", "MIN_TILE", "RIDGE_FLOPS_PER_BYTE",
+           "block_targets"]
+
+# v5e per-core VMEM (the budget the fused kernel's working set must fit)
+VMEM_BYTES = 16 * 2 ** 20
+
+# the HBM ridge point of the machine model: an op under this arithmetic
+# intensity is bandwidth-bound regardless of tile shape — which the band
+# fold (2·(2h+1) FLOPs per 8 bytes) always is, hence width-greedy slabs
+RIDGE_FLOPS_PER_BYTE = PEAK_FLOPS / HBM_BW
+
+# native register tile (sublanes, lanes) per dtype byte-width
+MIN_TILE = {4: (8, 128), 2: (16, 128)}
+
+# the shapes the kernels were tuned at before this module existed — every
+# non-TPU backend keeps them so interpret-mode results stay bit-identical
+_HISTORICAL = {"rows": 128, "features": 512}
+
+
+def _dtype_bytes(dtype: str) -> int:
+    return {"fp32": 4, "float32": 4, "bf16": 2, "bfloat16": 2}[dtype]
+
+
+def block_targets(kind: str, dtype: str = "fp32",
+                  backend: str | None = None) -> dict[str, int]:
+    """Tile-size targets ``{"rows": ..., "features": ...}`` for a kernel
+    family.
+
+    ``kind`` names the wrapper family (``"cov"``, ``"stage"``,
+    ``"fused"``, ``"banded"`` — they share the row/feature split);
+    ``dtype`` the tile-load dtype (``"fp32"``/``"bf16"``); ``backend``
+    overrides the detected JAX backend (tests pass ``"tpu"`` explicitly —
+    the CI container is CPU-only).
+
+    The returned numbers are *targets*: the wrappers still clamp to exact
+    divisors where that preserves historical bit-exactness, and pad
+    otherwise (:func:`repro.kernels.ops._pick_block_padded`).
+    """
+    if kind not in ("cov", "stage", "fused", "banded"):
+        raise ValueError(f"unknown kernel family {kind!r}")
+    be = backend or jax.default_backend()
+    if be != "tpu":
+        return dict(_HISTORICAL)
+    nbytes = _dtype_bytes(dtype)
+    sub, lanes = MIN_TILE[nbytes]
+    # feature target: the band fold reads 8 bytes/feature for 2·(2h+1)
+    # FLOPs, far under the ridge point (PEAK_FLOPS / HBM_BW), so the fold
+    # is bandwidth-bound at any width — the slab goes as wide as the byte
+    # budget allows: the historical 512 lanes at fp32, double at bf16
+    # (half the bytes per lane buys double the features per slab)
+    features = 512 * (4 // nbytes)
+    # row target: largest power of two whose double-buffered working set
+    # (~4 (rows, features) tiles in flight: x + halo slab + stage outputs)
+    # still fits half of VMEM
+    rows = sub
+    while (4 * 2 * (2 * rows) * features * nbytes <= VMEM_BYTES // 2
+           and rows < 1024):
+        rows *= 2
+    return {"rows": max(rows, _HISTORICAL["rows"]),
+            "features": max(features, lanes)}

@@ -14,6 +14,10 @@ batch, host-side slot management, jitted steps*:
   fleet state donated so XLA updates it in place), drift-triggered basis
   refreshes happen at chunk boundaries inside the step, and exhausted
   streams retire with their final basis + Table-1 communication bill.
+  ``StreamConfig.fused``/``precision`` flow straight through the vmapped
+  step: with stages configured each slot's chunk body is the one-launch
+  mega-kernel (DESIGN.md Sec. 14), and ``precision="bf16"`` stages the
+  chunk tiles in bf16 while all engine-visible state stays fp32.
 
 The streaming engine is fault-aware (DESIGN.md Sec. 9): each slot carries a
 :class:`repro.runtime.health.HealthMonitor` driven by a *logical* clock (one

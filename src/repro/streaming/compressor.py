@@ -32,7 +32,8 @@ from repro.core import costs
 from repro.kernels import ops
 
 __all__ = ["CompressionConfig", "RoundCompression", "quantize_scores",
-           "compress_round", "compression_round_cost", "epoch_packet_split"]
+           "compress_round", "compression_books", "compression_round_cost",
+           "epoch_packet_split"]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -186,6 +187,21 @@ def compress_round(W: jnp.ndarray, mean: jnp.ndarray | None,
             + mean_row[None, :]
         flagged = (jnp.abs(x - x_hat) > eps) & (mask2d > 0.0)
 
+    return compression_books(x, z, x_hat, flagged, mask2d, cfg, q, c_max)
+
+
+def compression_books(x: jnp.ndarray, z: jnp.ndarray, x_hat: jnp.ndarray,
+                      flagged: jnp.ndarray, mask2d: jnp.ndarray,
+                      cfg: CompressionConfig, q: int, c_max: int,
+                      ) -> RoundCompression:
+    """Turn one round's stage outputs (scores, reconstruction, flag mask)
+    into the :class:`RoundCompression` record — sink view, max error over
+    live sensors, and the Sec.-2.4.1 packet books.
+
+    The tail of :func:`compress_round`, split out so the fused driver path
+    (:func:`repro.streaming.driver.chunk_stream_step`) can build identical
+    books from the mega-kernel's outputs without re-running a stage kernel.
+    """
     fl = flagged.astype(jnp.float32)
     x_sink = jnp.where(flagged, x, x_hat)
     err = jnp.abs(x - x_sink) * mask2d          # dead sensors owe no bound

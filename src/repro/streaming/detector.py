@@ -44,6 +44,7 @@ from __future__ import annotations
 import dataclasses
 from typing import NamedTuple
 
+import jax
 import jax.numpy as jnp
 
 from repro.core import costs
@@ -51,8 +52,8 @@ from repro.core.events import _norm_quantile
 from repro.kernels import ops
 
 __all__ = ["DetectionConfig", "DetectorState", "RoundDetection",
-           "detector_init", "detect_round", "wilson_hilferty",
-           "detection_packet_split"]
+           "detector_init", "detect_round", "detect_apply", "inv_lambda",
+           "row_liveness", "wilson_hilferty", "detection_packet_split"]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -171,6 +172,64 @@ def _moment_threshold(s: jnp.ndarray, ss: jnp.ndarray, cnt: jnp.ndarray,
     return g * wilson_hilferty(h, z)
 
 
+@jax.custom_batching.custom_vmap
+def _stat_barrier(stats):
+    """``optimization_barrier`` with a vmap rule (the stock primitive has
+    none): each batching level peels off by re-entering the wrapper, so
+    the barrier composes with the batched/sharded fleet drivers."""
+    return jax.lax.optimization_barrier(stats)
+
+
+@_stat_barrier.def_vmap
+def _stat_barrier_vmap(axis_size, in_batched, stats):
+    return _stat_barrier(stats), in_batched[0]
+
+
+def _ordered_sum(v: jnp.ndarray) -> jnp.ndarray:
+    """Sum over the last axis with a FIXED pairwise association.
+
+    ``jnp.sum`` lowers to a ``reduce`` whose accumulation order is an
+    implementation choice — XLA picks a vectorization per fusion context,
+    so the same fp32 inputs can sum to different bits in the split and
+    fused driver programs (observed: the T² window moment drifting ~1 ulp
+    between the two batched runs).  A static halving tree spells every add
+    out as its own elementwise HLO op; fp addition is non-associative, so
+    the compiler must preserve the written order — the bits are pinned by
+    construction in ANY surrounding program.  Zero-padding to a power of
+    two is exact (x + 0 == x).
+    """
+    n = v.shape[-1]
+    m = 1 << max(n - 1, 0).bit_length()
+    if m != n:
+        v = jnp.concatenate(
+            [v, jnp.zeros(v.shape[:-1] + (m - n,), v.dtype)], axis=-1)
+    while m > 1:
+        m //= 2
+        v = v[..., :m] + v[..., m:]
+    return v[..., 0]
+
+
+def inv_lambda(lam: jnp.ndarray, cfg: DetectionConfig) -> jnp.ndarray:
+    """Clamped inverse of the per-component variance estimates — the T²
+    standardization weights.  One expression shared by the split path
+    (:func:`detect_round`) and the fused driver path, so both feed the
+    monitoring kernel bit-identical operands."""
+    return 1.0 / jnp.maximum(jnp.asarray(lam, jnp.float32), cfg.min_lambda)
+
+
+def row_liveness(mask: jnp.ndarray | None, n: int,
+                 dtype=jnp.float32) -> jnp.ndarray:
+    """(n,) 0/1 weight of each epoch in the healthy-window moments: an
+    epoch with NO live sensor carries no statistic — folding its zeros
+    into the window would drag both thresholds toward (or below) zero and
+    arm an alarm siren."""
+    if mask is None:
+        return jnp.ones((n,), dtype)
+    m = jnp.asarray(mask, dtype)
+    return (jnp.max(m) > 0) * jnp.ones((n,), dtype) \
+        if m.ndim == 1 else (jnp.max(m, axis=1) > 0).astype(dtype)
+
+
 def detect_round(W: jnp.ndarray, mean: jnp.ndarray, lam: jnp.ndarray,
                  x: jnp.ndarray, state: DetectorState, cfg: DetectionConfig,
                  refreshed: jnp.ndarray,
@@ -188,20 +247,35 @@ def detect_round(W: jnp.ndarray, mean: jnp.ndarray, lam: jnp.ndarray,
     sensors contribute no score record and no residual energy.
     """
     n = x.shape[0]
-    inv_lam = 1.0 / jnp.maximum(jnp.asarray(lam, jnp.float32),
-                                cfg.min_lambda)
     _, t2, spe = ops.pca_monitor(jnp.asarray(x, jnp.float32), W, mean,
-                                 inv_lam, mask=mask, interpret=interpret)
-    # (n,) 0/1 weight: an epoch with NO live sensor carries no statistic —
-    # folding its zeros into the healthy-window moments would drag both
-    # thresholds toward (or below) zero and arm an alarm siren
-    if mask is None:
-        row_live = jnp.ones((n,), t2.dtype)
-    else:
-        m = jnp.asarray(mask, t2.dtype)
-        row_live = (jnp.max(m) > 0) * jnp.ones((n,), t2.dtype) \
-            if m.ndim == 1 else (jnp.max(m, axis=1) > 0).astype(t2.dtype)
+                                 inv_lambda(lam, cfg), mask=mask,
+                                 interpret=interpret)
+    return detect_apply(t2, spe, row_liveness(mask, n, t2.dtype),
+                        W.shape[1], state, cfg, refreshed)
 
+
+def detect_apply(t2: jnp.ndarray, spe: jnp.ndarray, row_live: jnp.ndarray,
+                 q: int, state: DetectorState, cfg: DetectionConfig,
+                 refreshed: jnp.ndarray,
+                 ) -> tuple[DetectorState, RoundDetection]:
+    """The detector state machine on already-computed statistics: healthy
+    window fold, threshold re-arm, alarm evaluation.
+
+    Split out of :func:`detect_round` so the fused driver path
+    (:func:`repro.streaming.driver.chunk_stream_step`) can feed it the
+    mega-kernel's T²/SPE reductions without re-running the monitoring
+    kernel — the state machine is pure VPU-scalar work either way.
+
+    The statistics pass an ``optimization_barrier`` before the healthy-
+    window moment sums: those sums are order-sensitive fp32 reductions,
+    and XLA picks their vectorization from the producer they fuse with —
+    the split and fused paths produce ``spe`` through different producers
+    (stage kernel vs mega-kernel vs the cond'd twin), so without the cut
+    the same bit-identical statistics could fold into different moment
+    bits.  The barrier pins the reduction to a materialized input in
+    every path (bit-parity is structural, not just mathematical).
+    """
+    t2, spe = _stat_barrier((t2, spe))
     # a refresh rotates the basis: reset the healthy window FIRST so this
     # round's statistics (computed against the new W) seed the new window
     refreshed = jnp.asarray(refreshed, bool)
@@ -218,10 +292,12 @@ def detect_round(W: jnp.ndarray, mean: jnp.ndarray, lam: jnp.ndarray,
     calibrating = calib_left > 0
     cal_f = calibrating.astype(t2.dtype)
     n_live = jnp.sum(row_live)
-    t2_sum = t2_sum + cal_f * jnp.sum(t2 * row_live)
-    t2_sumsq = t2_sumsq + cal_f * jnp.sum(t2 * t2 * row_live)
-    spe_sum = spe_sum + cal_f * jnp.sum(spe * row_live)
-    spe_sumsq = spe_sumsq + cal_f * jnp.sum(spe * spe * row_live)
+    # window moments fold through the fixed-order tree: these are the only
+    # order-sensitive fp reductions shared by the split and fused paths
+    t2_sum = t2_sum + cal_f * _ordered_sum(t2 * row_live)
+    t2_sumsq = t2_sumsq + cal_f * _ordered_sum(t2 * t2 * row_live)
+    spe_sum = spe_sum + cal_f * _ordered_sum(spe * row_live)
+    spe_sumsq = spe_sumsq + cal_f * _ordered_sum(spe * spe * row_live)
     count = count + cal_f * n_live
     # a fully-dead round contributes nothing: the window does not advance,
     # so a blacked-out network stays suppressed instead of arming on zeros
@@ -229,7 +305,6 @@ def detect_round(W: jnp.ndarray, mean: jnp.ndarray, lam: jnp.ndarray,
     closing = calibrating & (calib_left == 0)
 
     z = cfg.z_alpha
-    q = W.shape[1]
     t2_thr_new = jnp.maximum(_moment_threshold(t2_sum, t2_sumsq, count, z),
                              wilson_hilferty(jnp.asarray(float(q)), z))
     # SPE has no nominal scale to floor at, but a degenerate window must

@@ -56,14 +56,18 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.faults import expected_transmissions
+from repro.kernels import ops
 from repro.streaming.compressor import (CompressionConfig, RoundCompression,
-                                        compress_round,
+                                        compress_round, compression_books,
                                         compression_round_cost,
                                         epoch_packet_split)
 from repro.streaming.detector import (DetectionConfig, DetectorState,
-                                      RoundDetection, detect_round,
-                                      detection_packet_split, detector_init)
-from repro.streaming.online_cov import (OnlineCovariance, online_init,
+                                      RoundDetection, detect_apply,
+                                      detect_round, detection_packet_split,
+                                      detector_init, inv_lambda,
+                                      row_liveness)
+from repro.streaming.online_cov import (OnlineCovariance, online_apply_chunk,
+                                        online_chunk_stats, online_init,
                                         online_update, online_update_chunk)
 from repro.streaming.scheduler import RecomputeScheduler, SchedulerState
 
@@ -90,6 +94,13 @@ class StreamConfig:
     interpret: bool | None = None   # Pallas interpret override (None = auto)
     compression: CompressionConfig | None = None  # ε-supervised stage
     detection: DetectionConfig | None = None      # T²/SPE monitoring stage
+    fused: bool = True              # one-pass mega-kernel on the chunk path
+    precision: str = "fp32"         # fused tile-load dtype: "fp32" | "bf16"
+
+    def __post_init__(self):
+        if self.precision not in ("fp32", "bf16"):
+            raise ValueError(
+                f"precision must be 'fp32' or 'bf16', got {self.precision!r}")
 
     def scheduler(self) -> RecomputeScheduler:
         return RecomputeScheduler(
@@ -252,11 +263,37 @@ def chunk_stream_step(cfg: StreamConfig, state: StreamState,
     with weight 1 is the per-round kernel, and every booking term reduces
     to the per-round expression exactly) — the differential guarantee
     behind ``chunked_stream_run(..., probe_every=1)``.
+
+    With a compression and/or detection stage configured, the chunk body
+    takes the FUSED path by default (``cfg.fused``; DESIGN.md Sec. 14):
+    one mega-kernel (:func:`repro.kernels.ops.fused_stream_update`) loads
+    each chunk tile into VMEM once and emits the band delta AND the stage
+    outputs — 1 ``pallas_call`` per chunk body instead of 3.  The stages
+    are speculated against the pre-decision basis (bit-identical to the
+    post-decision basis whenever the scheduler does not fire — the
+    refresh is a select); on the refresh rounds a pure-jnp twin
+    (:func:`repro.kernels.ops.fused_stream_stages_blocked`, bitwise equal
+    to the kernel's stage arithmetic) recomputes them against the rotated
+    basis under ``lax.cond``.  At fp32 the fused path is bit-identical to
+    the split path; ``cfg.precision="bf16"`` halves the kernel's tile
+    traffic (fp32 accumulation) at tolerance-level divergence — note the
+    ε flag decision then happens in tile precision, so the fp32-measured
+    sink error can overshoot ε by the bf16 rounding (~1e-3 relative);
+    deployments that need the bound exact in fp32 keep the default
+    precision.  Quantized
+    compression (``score_bits > 0`` — the quantizer needs the whole
+    round's scores between projection and reconstruction) and (K, n, p)
+    per-reading dropout masks (their pairwise counts need a second kernel
+    pass anyway) keep the split path.
     """
     K, n, p = x_chunk.shape
-    cov = online_update_chunk(state.cov, x_chunk, forgetting=cfg.forgetting,
-                              masks=masks, round_valid=round_valid,
-                              interpret=cfg.interpret)
+    if masks is not None:
+        masks = jnp.asarray(masks, state.alive.dtype)
+    has_stage = cfg.compression is not None or cfg.detection is not None
+    use_fused = (cfg.fused and has_stage
+                 and (cfg.compression is None
+                      or cfg.compression.score_bits == 0)
+                 and (masks is None or masks.ndim == 2))
     if round_valid is None:
         rv = None
         live = K                            # static: folds into constants
@@ -269,7 +306,6 @@ def chunk_stream_step(cfg: StreamConfig, state: StreamState,
         churn = jnp.zeros((), bool)
         alive = state.alive
     else:
-        masks = jnp.asarray(masks, state.alive.dtype)
         churn = jnp.zeros((), bool)
         alive = state.alive
         for t in range(K):                  # static unroll, K is small
@@ -281,6 +317,50 @@ def chunk_stream_step(cfg: StreamConfig, state: StreamState,
                 v_t = rv[t] > 0
                 churn = churn | (v_t & changed)
                 alive = jnp.where(v_t, masks[t], alive)
+    # the stages already vectorize over epochs: they see the (K·n, p)
+    # chunk view, with pad/idle rounds masked out (a padded epoch is a
+    # dead epoch: no record, no flag)
+    x_view = x_chunk.reshape(K * n, p)
+    mask_view = None
+    if has_stage and (masks is not None or rv is not None):
+        m3 = jnp.ones((K, n, p), x_view.dtype) if masks is None \
+            else jnp.broadcast_to(masks[:, None, :], (K, n, p))
+        if rv is not None:
+            m3 = m3 * rv[:, None, None].astype(m3.dtype)
+        mask_view = m3.reshape(K * n, p)
+
+    z = x_hat = flags = t2 = spe = None
+    if use_fused:
+        with_c = cfg.compression is not None
+        with_m = cfg.detection is not None
+        # analytic half of the fold first: the kernel needs the POST-fold
+        # mean estimate as a stage operand, and s/t_band never touch a
+        # kernel (online_apply_chunk shares the arithmetic, so the split
+        # path produces the same bits)
+        w, beta_eff, delta_s, delta_tb = online_chunk_stats(
+            state.cov, x_chunk, forgetting=cfg.forgetting, masks=masks,
+            round_valid=round_valid)
+        s_new = beta_eff * state.cov.s + delta_s
+        t_i_new = (beta_eff * state.cov.t_band + delta_tb)[cfg.halfwidth]
+        mean_est = s_new / jnp.maximum(t_i_new, 1.0)
+        il = inv_lambda(state.sched.lam, cfg.detection) if with_m \
+            else jnp.ones((cfg.q,), jnp.float32)
+        eps = cfg.compression.epsilon if with_c else 0.0
+        # ONE kernel launch: band fold + stages against the pre-decision
+        # basis (== post-decision whenever the scheduler does not fire)
+        band_delta, z, x_hat, flags, t2, spe = ops.fused_stream_update(
+            x_view, jnp.repeat(w, n), state.sched.W, mean_est, il,
+            halfwidth=cfg.halfwidth, epsilon=eps, with_compress=with_c,
+            with_monitor=with_m, mask=mask_view, precision=cfg.precision,
+            interpret=cfg.interpret)
+        cov = online_apply_chunk(state.cov, band_delta, w, beta_eff,
+                                 delta_s, delta_tb, n)
+    else:
+        cov = online_update_chunk(state.cov, x_chunk,
+                                  forgetting=cfg.forgetting, masks=masks,
+                                  round_valid=round_valid,
+                                  interpret=cfg.interpret)
+        mean_est = cov.s / jnp.maximum(cov.t_i, 1.0)
     # one decision at the boundary, indexed at the LAST folded round (the
     # same warmup arithmetic the per-round path would apply at that round)
     sched, rho, fired = cfg.scheduler().step(state.sched, cov,
@@ -293,25 +373,49 @@ def chunk_stream_step(cfg: StreamConfig, state: StreamState,
         sched = sched._replace(
             comm_packets=sched.comm_packets
             + extra * cfg.scheduler().round_cost())
-    mean_est = cov.s / jnp.maximum(cov.t_i, 1.0)
     factor = expected_transmissions(cfg.link_loss, cfg.max_retries)
-    # the stages already vectorize over epochs: give them the (K·n, p)
-    # chunk view against the post-decision basis, with pad/idle rounds
-    # masked out (a padded epoch is a dead epoch: no record, no flag)
-    x_view = x_chunk.reshape(K * n, p)
-    mask_view = None
-    has_stage = cfg.compression is not None or cfg.detection is not None
-    if has_stage and (masks is not None or rv is not None):
-        m3 = jnp.ones((K, n, p), x_view.dtype) if masks is None \
-            else jnp.broadcast_to(masks[:, None, :], (K, n, p))
-        if rv is not None:
-            m3 = m3 * rv[:, None, None].astype(m3.dtype)
-        mask_view = m3.reshape(K * n, p)
+    if use_fused:
+        # the decision fired: the stages must reflect the rotated basis
+        # (and its λ̂) — the pure-jnp twin recomputes them bit-identically
+        # to what the kernel would produce, without a second pallas_call
+        # in the traced body (lax.cond branches both count)
+        def _pack(z_, xh_, fl_, t2_, spe_):
+            out = [z_]
+            if with_c:
+                out += [xh_, fl_]
+            if with_m:
+                out += [t2_, spe_]
+            return tuple(out)
+
+        def _recompute(_):
+            il2 = inv_lambda(sched.lam, cfg.detection) if with_m else il
+            return _pack(*ops.fused_stream_stages_blocked(
+                x_view, sched.W, mean_est, il2, epsilon=eps,
+                with_compress=with_c, with_monitor=with_m, mask=mask_view,
+                precision=cfg.precision))
+
+        staged = jax.lax.cond(fired, _recompute,
+                              lambda _: _pack(z, x_hat, flags, t2, spe),
+                              operand=None)
+        z = staged[0]
+        k_out = 1
+        if with_c:
+            x_hat, flags = staged[k_out], staged[k_out + 1]
+            k_out += 2
+        if with_m:
+            t2, spe = staged[k_out], staged[k_out + 1]
     compression = None
     if cfg.compression is not None:
-        compression = compress_round(
-            sched.W, mean_est, x_view, cfg.compression, cfg.c_max,
-            mask=mask_view, interpret=cfg.interpret)
+        if use_fused:
+            mask2d = mask_view if mask_view is not None \
+                else jnp.ones((K * n, p), jnp.float32)
+            compression = compression_books(
+                jnp.asarray(x_view, jnp.float32), z, x_hat, flags, mask2d,
+                cfg.compression, cfg.q, cfg.c_max)
+        else:
+            compression = compress_round(
+                sched.W, mean_est, x_view, cfg.compression, cfg.c_max,
+                mask=mask_view, interpret=cfg.interpret)
         flagfree = compression_round_cost(cfg.q, cfg.c_max, cfg.compression)
         bill = (flagfree * live + compression.extra_packets) * factor
         sched = sched._replace(comm_packets=sched.comm_packets + bill)
@@ -330,9 +434,15 @@ def chunk_stream_step(cfg: StreamConfig, state: StreamState,
                 + (live - 1) * (a_pk + f_pk) * cfg.compression.word_bits)
     det_state, detection = state.det, None
     if cfg.detection is not None:
-        det_state, detection = detect_round(
-            sched.W, mean_est, sched.lam, x_view, state.det, cfg.detection,
-            refreshed=fired, mask=mask_view, interpret=cfg.interpret)
+        if use_fused:
+            det_state, detection = detect_apply(
+                t2, spe, row_liveness(mask_view, K * n, t2.dtype), cfg.q,
+                state.det, cfg.detection, refreshed=fired)
+        else:
+            det_state, detection = detect_round(
+                sched.W, mean_est, sched.lam, x_view, state.det,
+                cfg.detection, refreshed=fired, mask=mask_view,
+                interpret=cfg.interpret)
         flagfree, per_alarm = detection_packet_split(cfg.q, cfg.c_max)
         bill = (flagfree * live + detection.alarms * per_alarm) * factor
         sched = sched._replace(comm_packets=sched.comm_packets + bill)

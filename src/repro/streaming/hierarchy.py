@@ -11,7 +11,11 @@ synchronization rounds — not FLOPs — bound distributed PCA at scale
   own online banded covariance and drift-triggered orthogonal-iteration
   refreshes through the existing chunked drivers
   (:func:`repro.streaming.driver.batched_stream_run` — one fused cov-update
-  kernel launch per chunk, PR 5).  Under the banded/local-covariance
+  kernel launch per chunk, PR 5; with compression/detection stages
+  configured the launch is the Sec.-14 mega-kernel, and
+  ``StreamConfig.fused`` / ``StreamConfig.precision`` thread through each
+  region's chunk body unchanged — the hierarchy adds no split/fused logic
+  of its own).  Under the banded/local-covariance
   hypothesis a region boundary cuts only the ±h cross terms, so per-region
   bases span the global top-q subspace up to the boundary coupling.
 * **Level 2 (cross-host, ONE collective per refresh):** the fleet basis is

@@ -31,8 +31,8 @@ from repro.core import covariance as cov
 from repro.kernels import ops
 
 __all__ = ["OnlineCovariance", "online_init", "online_update",
-           "online_update_chunk", "online_estimate", "online_total_variance",
-           "stream_covariance"]
+           "online_update_chunk", "online_chunk_stats", "online_apply_chunk",
+           "online_estimate", "online_total_variance", "stream_covariance"]
 
 
 class OnlineCovariance(NamedTuple):
@@ -168,6 +168,48 @@ def online_update_chunk(state: OnlineCovariance, xs: jnp.ndarray,
     mid-chunk.
     """
     xs = jnp.asarray(xs, state.s.dtype)
+    h = state.halfwidth
+    w, beta_eff, delta_s, delta_tb = online_chunk_stats(
+        state, xs, forgetting=forgetting, masks=masks,
+        round_valid=round_valid)
+    if masks is None:
+        delta_band = ops.cov_band_update_chunk(xs, w, h, interpret=interpret)
+    else:
+        masks = jnp.asarray(masks, state.s.dtype)
+        delta_band = ops.cov_band_update_chunk(xs, w, h, mask=masks,
+                                               interpret=interpret)
+        if delta_tb is None:
+            # (K, n, p) per-reading dropout: the pairwise counts are the
+            # band update of the mask with itself — one extra kernel pass
+            delta_tb = ops.cov_band_update_chunk(masks, w, h,
+                                                 interpret=interpret) \
+                .astype(state.t_band.dtype)
+    return online_apply_chunk(state, delta_band, w, beta_eff,
+                              delta_s, delta_tb, xs.shape[1])
+
+
+def online_chunk_stats(state: OnlineCovariance, xs: jnp.ndarray,
+                       forgetting: float = 1.0,
+                       masks: jnp.ndarray | None = None,
+                       round_valid: jnp.ndarray | None = None,
+                       ) -> tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray,
+                                  jnp.ndarray | None]:
+    """The analytic (kernel-free) half of :func:`online_update_chunk`:
+    per-round forgetting weights, the chunk's effective decay, and the
+    mean-sum / pairwise-count deltas.
+
+    Split out so the fused driver path
+    (:func:`repro.streaming.driver.chunk_stream_step`) can form the live
+    mean estimate ``(beta_eff s + delta_s) / (beta_eff t_i + delta_tb[h])``
+    BEFORE launching the mega-kernel that needs it as a stage operand —
+    the band delta is the only part that needs a kernel.
+
+    Returns ``(w, beta_eff, delta_s, delta_tb)``; ``delta_tb`` is None for
+    a (K, n, p) dropout mask (its pairwise counts need a kernel pass of
+    their own — :func:`online_update_chunk` pays it; the fused driver path
+    routes such chunks to the split path instead).
+    """
+    xs = jnp.asarray(xs, state.s.dtype)
     K, n, p = xs.shape
     h = state.halfwidth
     beta = float(forgetting)
@@ -187,13 +229,10 @@ def online_update_chunk(state: OnlineCovariance, xs: jnp.ndarray,
         beta_eff = pow_table[jnp.sum(rv).astype(jnp.int32)]
     valid = _band_valid(p, h).astype(state.t_band.dtype)
     if masks is None:
-        delta_band = ops.cov_band_update_chunk(xs, w, h, interpret=interpret)
         delta_s = jnp.einsum("t,tp->p", w, xs.sum(axis=1))
         delta_tb = (jnp.sum(w) * n) * valid
     else:
         masks = jnp.asarray(masks, state.s.dtype)
-        delta_band = ops.cov_band_update_chunk(xs, w, h, mask=masks,
-                                               interpret=interpret)
         if masks.ndim == 2:
             delta_s = jnp.einsum("t,tp->p", w,
                                  (xs * masks[:, None, :]).sum(axis=1))
@@ -205,9 +244,18 @@ def online_update_chunk(state: OnlineCovariance, xs: jnp.ndarray,
                 .astype(state.t_band.dtype)
         else:
             delta_s = jnp.einsum("t,tp->p", w, (xs * masks).sum(axis=1))
-            delta_tb = ops.cov_band_update_chunk(masks, w, h,
-                                                 interpret=interpret) \
-                .astype(state.t_band.dtype)
+            delta_tb = None
+    return w, beta_eff, delta_s, delta_tb
+
+
+def online_apply_chunk(state: OnlineCovariance, delta_band: jnp.ndarray,
+                       w: jnp.ndarray, beta_eff: jnp.ndarray,
+                       delta_s: jnp.ndarray, delta_tb: jnp.ndarray,
+                       n: int) -> OnlineCovariance:
+    """Apply a chunk's deltas (:func:`online_chunk_stats` + a band kernel)
+    to the carried statistics — the other half of
+    :func:`online_update_chunk`, shared verbatim by the fused driver path
+    so both paths produce the same bits."""
     return OnlineCovariance(
         t=beta_eff * state.t + jnp.sum(w) * n,
         s=beta_eff * state.s + delta_s,
