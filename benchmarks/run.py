@@ -26,14 +26,17 @@ def _rounds_per_sec(derived: str) -> float | None:
     return float(m.group(1)) if m else None
 
 
-def check_streaming_regression(rows: list, baseline_path: str) -> list[str]:
+def check_streaming_regression(rows: list,
+                               baseline_path: str) -> list[tuple[str, str]]:
     """Compare this run's rounds/s rows against the committed baseline.
 
-    Returns a list of human-readable failures for every row whose
-    throughput fell below ``_REGRESSION_FLOOR`` x baseline.  Rows without
-    a rounds/s figure (the threshold-frontier rows) and names absent from
-    the baseline (new sweeps, different fleet sizes) are skipped — the
-    gate only ever compares like with like.
+    Returns one ``(rule, detail)`` failure per row whose throughput fell
+    below ``_REGRESSION_FLOOR`` x baseline — ``rule`` names the offending
+    row (``regression:<row-name>``), ``detail`` carries measured vs.
+    baseline in one line.  Rows without a rounds/s figure (the
+    threshold-frontier rows) and names absent from the baseline (new
+    sweeps, different fleet sizes) are skipped — the gate only ever
+    compares like with like.
     """
     import json
     with open(baseline_path) as fh:
@@ -46,9 +49,10 @@ def check_streaming_regression(rows: list, baseline_path: str) -> list[str]:
         if rps is None or ref is None or ref <= 0:
             continue
         if rps < _REGRESSION_FLOOR * ref:
-            failures.append(
-                f"{r['name']}: {rps:.0f} rounds/s vs baseline {ref:.0f} "
-                f"({rps / ref:.2f}x < {_REGRESSION_FLOOR:.2f}x floor)")
+            failures.append((
+                f"regression:{r['name']}",
+                f"measured {rps:.0f} rounds/s vs baseline {ref:.0f} rounds/s "
+                f"({rps / ref:.2f}x < {_REGRESSION_FLOOR:.2f}x floor)"))
     return failures
 
 
@@ -104,7 +108,11 @@ def main() -> int:
         "scale": lambda: scale_bench.run(smoke=args.smoke),
     }
 
-    failed = 0
+    # every gate failure is a named (rule, detail) pair so the final verdict
+    # can say exactly which rule/row failed and why, in one line each
+    bench_errors: list[tuple[str, str]] = []
+    artifact_errors: list[tuple[str, str]] = []
+    regressions: list[tuple[str, str]] = []
     gathered: dict[str, list] = {"compression": [], "events": [],
                                  "streaming": [], "scale": []}
     print("name,us_per_call,derived")
@@ -117,8 +125,8 @@ def main() -> int:
                 if name in gathered:
                     gathered[name].append(r)
         except Exception as e:  # noqa: BLE001 — report and continue
-            failed += 1
-            print(f"{name}/ERROR,0,{type(e).__name__}: {e}", file=sys.stdout)
+            bench_errors.append((f"bench-error:{name}",
+                                 f"{type(e).__name__}: {e}"))
     # a requested JSON artifact with NO gathered rows means the benchmark
     # silently never ran (filtered out, or it errored above): fail loudly —
     # an empty BENCH_* trajectory is indistinguishable from a healthy one
@@ -130,9 +138,10 @@ def main() -> int:
         if not path:
             continue
         if not rows:
-            failed += 1
-            print(f"{name}/ERROR,0,requested JSON artifact {path} but the "
-                  f"benchmark emitted no rows (never ran?)", file=sys.stdout)
+            artifact_errors.append((
+                f"empty-artifact:{name}",
+                f"requested JSON artifact {path} but the benchmark emitted "
+                f"no rows (never ran?)"))
             continue
         import json
         with open(path, "w") as fh:
@@ -140,15 +149,22 @@ def main() -> int:
     # rounds/s regression gate: ANY streaming row more than 20% below the
     # committed baseline fails the run outright (not just under --smoke) —
     # a quiet throughput cliff on the hot loop must never merge silently
-    regressed = 0
     if (gathered["streaming"] and args.streaming_baseline
             and os.path.exists(args.streaming_baseline)):
-        for msg in check_streaming_regression(gathered["streaming"],
-                                              args.streaming_baseline):
-            regressed += 1
-            print(f"streaming/REGRESSION,0,{msg}", file=sys.stdout)
+        regressions = check_streaming_regression(gathered["streaming"],
+                                                 args.streaming_baseline)
+    # bench/artifact errors are fatal only under --smoke (CI mode);
+    # a throughput regression is fatal on every run
+    fatal = regressions + (bench_errors + artifact_errors
+                           if args.smoke else [])
+    warn_only = [] if args.smoke else bench_errors + artifact_errors
+    for rule, detail in fatal + warn_only:
+        print(f"run.py/FAIL,{rule},{detail}", file=sys.stdout)
+    if fatal:
+        print("run.py verdict: FAILED — "
+              + "; ".join(rule for rule, _ in fatal), file=sys.stdout)
     sys.stdout.flush()
-    return 1 if ((args.smoke and failed) or regressed) else 0
+    return 1 if fatal else 0
 
 
 if __name__ == "__main__":

@@ -1,0 +1,44 @@
+"""Program-contract static analysis (DESIGN.md Sec. 15).
+
+The repo's performance story rests on *structural* claims about compiled
+programs — "1 ``pallas_call`` per chunk body", "ONE cross-host
+``all_gather``/``psum`` per hierarchy refresh", "host-sync-free engine hot
+loop with donated buffers" — the same kind of per-epoch bookkeeping the
+paper's Table 1 does for the WSN.  This package machine-checks those claims
+instead of trusting prose:
+
+* :mod:`repro.analysis.jaxpr_lint` — a reusable recursive jaxpr walker
+  (descends into ``cond``/``scan``/``while``/``pjit``/``shard_map``
+  sub-jaxprs, scan lengths and while trip counts multiplied through like
+  the HLO-side loop correction in :mod:`repro.launch.hlo_analysis`) plus
+  the rule vocabulary: primitive budgets, per-axis collective budgets,
+  forbidden-in-loop ops, dtype policies.
+* :mod:`repro.analysis.contracts` — the declarative contract registry.
+  Contract *records* live next to the hot paths they describe
+  (``streaming/driver.py``, ``streaming/hierarchy.py``,
+  ``serve/engine.py`` register theirs at import); this module only holds
+  the record type, the registry, and the evaluator.
+* :mod:`repro.analysis.repolint` — AST-based source lints for repo
+  conventions (no host pulls inside jitted code, no import-time ``jnp``
+  computation, every ``costs.*_cost`` helper pinned by a test).
+
+``python -m repro.analysis.check`` runs everything and fails loudly with a
+per-rule report (the dedicated CI job).
+"""
+
+from repro.analysis.contracts import (Contract, RuleResult, check_all,
+                                      get_contract, load_entry_points,
+                                      register, registry)
+from repro.analysis.jaxpr_lint import (CollectiveBudget, ForbidInLoops,
+                                       Fp32Accumulators, NoF64,
+                                       PrimitiveBudget, collective_counts,
+                                       count_primitive, count_primitives,
+                                       iter_eqns)
+
+__all__ = [
+    "Contract", "RuleResult", "register", "registry", "get_contract",
+    "check_all", "load_entry_points",
+    "iter_eqns", "count_primitive", "count_primitives", "collective_counts",
+    "PrimitiveBudget", "CollectiveBudget", "ForbidInLoops", "NoF64",
+    "Fp32Accumulators",
+]

@@ -1,0 +1,89 @@
+"""``python -m repro.analysis.check`` — run every registered program
+contract plus the repo source lints; print a per-rule report; exit nonzero
+if anything is violated.
+
+Options:
+    --only SUBSTR   restrict to contracts whose id contains SUBSTR
+                    (lints still run; pass --contracts-only/--lint-only
+                    to split)
+    --json PATH     also write the per-rule report as JSON (the CI artifact)
+    --list          list registered contracts and exit
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+
+
+def main(argv: list[str] | None = None) -> int:
+    ap = argparse.ArgumentParser(prog="python -m repro.analysis.check")
+    ap.add_argument("--only", help="substring filter on contract ids")
+    ap.add_argument("--json", dest="json_path",
+                    help="write the per-rule report to this path")
+    ap.add_argument("--list", action="store_true",
+                    help="list registered contracts and exit")
+    ap.add_argument("--contracts-only", action="store_true")
+    ap.add_argument("--lint-only", action="store_true")
+    args = ap.parse_args(argv)
+
+    # tracing only — keep the CPU backend quiet and deterministic; set
+    # before the first jax import (contracts trace, they never execute,
+    # except the engine runtime check which runs a tiny interpret fleet)
+    os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+    from repro.analysis import contracts, repolint
+
+    if args.list:
+        for cid, c in sorted(contracts.load_entry_points().items()):
+            print(f"{cid:<24s} {c.where:<44s} {c.claim}")
+        return 0
+
+    rows: list[dict] = []
+    failed = 0
+
+    if not args.lint_only:
+        print("== program contracts " + "=" * 46)
+        for res in contracts.check_all(only=args.only):
+            print(res.line())
+            rows.append(dataclasses_dict(res))
+            failed += 0 if res.ok else 1
+
+    if not args.contracts_only:
+        print("== repolint " + "=" * 55)
+        findings = repolint.run_repolint()
+        for f in findings:
+            print(f"[FAIL] {f.text()}")
+            rows.append({"contract": "repolint", "rule": f.rule, "ok": False,
+                         "detail": f"{f.file}:{f.line}: {f.message}"})
+            failed += 1
+        if not findings:
+            for rule in repolint.RULES:
+                print(f"[PASS] repolint{' ':<17s} {rule:<28s} 0 violations")
+                rows.append({"contract": "repolint", "rule": rule,
+                             "ok": True, "detail": "0 violations"})
+
+    if args.json_path:
+        with open(args.json_path, "w") as fh:
+            json.dump(rows, fh, indent=2)
+
+    n_ok = sum(1 for r in rows if r["ok"])
+    verdict = "FAILED" if failed else "OK"
+    print(f"== {verdict}: {n_ok}/{len(rows)} rules pass"
+          + (f", {failed} violation(s)" if failed else ""))
+    if failed:
+        bad = sorted({f"{r['contract']}/{r['rule']}"
+                      for r in rows if not r["ok"]})
+        print("violated: " + ", ".join(bad))
+    return 1 if failed else 0
+
+
+def dataclasses_dict(res) -> dict:
+    return {"contract": res.contract, "rule": res.rule, "ok": res.ok,
+            "detail": res.detail}
+
+
+if __name__ == "__main__":
+    sys.exit(main())

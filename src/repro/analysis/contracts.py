@@ -1,0 +1,183 @@
+"""Declarative program-contract registry (DESIGN.md Sec. 15).
+
+A :class:`Contract` names one structural claim about one jitted entry point
+and the rules that machine-check it.  The *records* are co-located with the
+hot paths they describe — ``streaming/driver.py``, ``streaming/hierarchy.py``
+and ``serve/engine.py`` call :func:`register` at import time with lazy
+``trace`` builders, so declaring a contract costs nothing until
+:func:`check_all` actually traces the entry point (``jax.make_jaxpr`` —
+no execution, no compilation).
+
+Contracts with claims a jaxpr cannot carry (buffer donation lives on the
+lowered computation, retraces on the jit cache) add a ``runtime`` callable
+evaluated alongside the static rules.
+
+To declare a contract for a new entry point::
+
+    from repro.analysis import contracts as _contracts
+    from repro.analysis import jaxpr_lint as _jl
+
+    def _trace_my_entry():
+        cfg = ...tiny static config...
+        args = ...tiny abstract-shape operands...
+        return {"K=4": jax.make_jaxpr(lambda s, x: my_entry(cfg, s, x))(*args)}
+
+    _contracts.register(_contracts.Contract(
+        id="my.entry", where="repro.my.module.my_entry",
+        claim="one pallas launch per dispatch",
+        trace=_trace_my_entry,
+        rules=(_jl.PrimitiveBudget("pallas_call", exact=1), _jl.NoF64()),
+    ))
+
+``python -m repro.analysis.check`` then enforces it in CI.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import importlib
+from typing import Callable, Mapping, Sequence
+
+import jax
+
+__all__ = ["Contract", "RuleResult", "register", "registry", "get_contract",
+           "check_contract", "check_all", "load_entry_points",
+           "donation_report", "ENTRY_POINT_MODULES"]
+
+# importing these populates the registry (records live with the hot paths)
+ENTRY_POINT_MODULES = (
+    "repro.streaming.driver",
+    "repro.streaming.hierarchy",
+    "repro.serve.engine",
+)
+
+
+@dataclasses.dataclass(frozen=True)
+class RuleResult:
+    """One rule evaluated against one traced variant of one contract."""
+
+    contract: str                # contract id
+    rule: str                    # rule name (e.g. "budget:pallas_call")
+    ok: bool
+    detail: str                  # measured-vs-wanted, one line
+
+    def line(self) -> str:
+        flag = "PASS" if self.ok else "FAIL"
+        return f"[{flag}] {self.contract:<24s} {self.rule:<28s} {self.detail}"
+
+
+@dataclasses.dataclass(frozen=True)
+class Contract:
+    """One structural claim about one entry point.
+
+    ``trace`` returns ``{variant_label: jaxpr}`` (``jax.make_jaxpr``
+    outputs); every rule in ``rules`` runs against every variant.
+    ``runtime``, if set, returns extra :class:`RuleResult` rows for claims
+    that need the lowered/compiled artifact (donation, retrace counters).
+    """
+
+    id: str
+    where: str                   # dotted path of the entry point described
+    claim: str                   # the one-line structural claim docs cite
+    trace: Callable[[], Mapping[str, object]] | None = None
+    rules: tuple = ()
+    runtime: Callable[[], Sequence[RuleResult]] | None = None
+
+
+_REGISTRY: dict[str, Contract] = {}
+
+
+def register(contract: Contract) -> Contract:
+    """Add (or replace — idempotent re-imports) a contract by id."""
+    _REGISTRY[contract.id] = contract
+    return contract
+
+
+def registry() -> dict[str, Contract]:
+    return dict(_REGISTRY)
+
+
+def get_contract(contract_id: str) -> Contract:
+    if contract_id not in _REGISTRY:
+        raise KeyError(
+            f"no contract {contract_id!r}; registered: "
+            f"{sorted(_REGISTRY)} (did you call load_entry_points()?)")
+    return _REGISTRY[contract_id]
+
+
+def load_entry_points() -> dict[str, Contract]:
+    """Import every module that declares contracts; return the registry."""
+    for mod in ENTRY_POINT_MODULES:
+        importlib.import_module(mod)
+    return registry()
+
+
+def check_contract(contract: Contract) -> list[RuleResult]:
+    """Evaluate one contract: trace its variants, run every rule on each,
+    then any runtime checks.  A trace/runtime crash is itself a failure
+    (the entry point's public surface moved under the contract)."""
+    results: list[RuleResult] = []
+    if contract.trace is not None:
+        try:
+            variants = contract.trace()
+        except Exception as e:  # noqa: BLE001 — a broken trace IS a finding
+            return [RuleResult(contract.id, "trace", False,
+                               f"tracing raised {type(e).__name__}: {e}")]
+        for label, jaxpr in variants.items():
+            for rule in contract.rules:
+                rep = rule.check(jaxpr)
+                results.append(RuleResult(
+                    contract.id, f"{rep.rule}[{label}]", rep.ok, rep.detail))
+    if contract.runtime is not None:
+        try:
+            results.extend(contract.runtime())
+        except Exception as e:  # noqa: BLE001
+            results.append(RuleResult(contract.id, "runtime", False,
+                                      f"raised {type(e).__name__}: {e}"))
+    return results
+
+
+def check_all(only: str | None = None) -> list[RuleResult]:
+    """Evaluate every registered contract (id-substring filter optional)."""
+    load_entry_points()
+    results: list[RuleResult] = []
+    for cid in sorted(_REGISTRY):
+        if only and only not in cid:
+            continue
+        results.extend(check_contract(_REGISTRY[cid]))
+    return results
+
+
+# ---------------------------------------------------------------------------
+# Runtime-rule helpers (shared by contracts and their negative tests)
+# ---------------------------------------------------------------------------
+def donation_report(jitted, *args, argnum: int = 0,
+                    contract: str = "<adhoc>") -> RuleResult:
+    """Check that EVERY leaf of ``args[argnum]`` is donated on the lowered
+    computation — the in-place-update claim of an engine hot loop.  Reads
+    ``lowered.args_info`` (requested donation at lowering; backend-
+    independent, no compile, no execution)."""
+    lowered = jitted.lower(*args)
+    info = lowered.args_info[0][argnum]
+    flags = [(bool(leaf.donated)) for leaf in jax.tree.leaves(info)]
+    n_bad = sum(1 for f in flags if not f)
+    return RuleResult(
+        contract, "donation", n_bad == 0,
+        f"{len(flags) - n_bad}/{len(flags)} leaves of arg {argnum} donated"
+        + ("" if n_bad == 0 else " (donate_argnums missing/dropped)"))
+
+
+def retrace_report(jitted, n_calls_made: int,
+                   contract: str = "<adhoc>") -> RuleResult:
+    """Check the jit cache holds exactly one entry after ``n_calls_made``
+    same-shape calls — the no-retrace claim of a steady-state hot loop."""
+    try:
+        size = jitted._cache_size()
+    except AttributeError:       # private counter moved; don't hard-fail
+        return RuleResult(contract, "retrace", True,
+                          "jit cache counter unavailable on this jax; "
+                          "retrace check skipped")
+    return RuleResult(
+        contract, "retrace", size == 1,
+        f"jit cache entries after {n_calls_made} same-shape steps: {size} "
+        f"(want 1 — every extra entry is a retrace of the hot loop)")

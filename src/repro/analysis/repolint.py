@@ -1,0 +1,239 @@
+"""AST-based source lints for repo conventions (DESIGN.md Sec. 15).
+
+Three rules, each guarding a convention the runtime cannot check for us:
+
+* ``tracer-host-pull`` — no ``float(...)``/``int(...)``/``.item()`` inside
+  jitted code paths (functions decorated with ``jax.jit`` /
+  ``functools.partial(jax.jit, ...)``, or function/lambda expressions passed
+  to a ``jax.jit(...)`` call, including through ``jax.vmap``).  A host pull
+  inside traced code either crashes on a tracer or, worse, silently forces
+  a device sync per call.
+* ``import-time-jnp`` — no ``jnp.*`` computation at module import time
+  (module or class scope).  Import-time jnp calls initialize the backend
+  before launch code can set ``XLA_FLAGS`` (see ``launch/mesh.py``) and tax
+  every ``import repro.*``.
+* ``unreferenced-cost-helper`` — every public ``*_cost`` helper in
+  ``core/costs.py`` must be referenced by at least one test file: the
+  booked==counted discipline means a cost model nobody pins is a cost model
+  free to drift from what the code actually books.
+
+A line ending in ``# repolint: ok`` is exempt (the escape hatch for the
+rare deliberate host pull).  Findings carry exact ``file:line`` locations.
+"""
+
+from __future__ import annotations
+
+import ast
+import dataclasses
+import pathlib
+
+__all__ = ["LintFinding", "RULES", "lint_file", "lint_tree",
+           "lint_cost_references", "run_repolint", "repo_paths"]
+
+RULES = ("tracer-host-pull", "import-time-jnp", "unreferenced-cost-helper")
+
+_HOST_PULLS = {"float", "int", "bool"}
+_SUPPRESS = "# repolint: ok"
+
+
+@dataclasses.dataclass(frozen=True)
+class LintFinding:
+    rule: str
+    file: str
+    line: int
+    message: str
+
+    def text(self) -> str:
+        return f"{self.file}:{self.line}: [{self.rule}] {self.message}"
+
+
+def _suppressed(src_lines: list[str], lineno: int) -> bool:
+    return (0 < lineno <= len(src_lines)
+            and _SUPPRESS in src_lines[lineno - 1])
+
+
+def _is_jax_jit(node: ast.AST) -> bool:
+    """True for the expression ``jax.jit`` (or a bare ``jit`` import)."""
+    if isinstance(node, ast.Attribute) and node.attr == "jit":
+        return True
+    return isinstance(node, ast.Name) and node.id == "jit"
+
+
+def _jit_decorated(fn: ast.AST) -> bool:
+    """Decorator is jax.jit, partial(jax.jit, ...), or a jax.jit(...) call."""
+    for dec in getattr(fn, "decorator_list", ()):
+        if _is_jax_jit(dec):
+            return True
+        if isinstance(dec, ast.Call):
+            if _is_jax_jit(dec.func):
+                return True
+            # functools.partial(jax.jit, ...)
+            func = dec.func
+            if (isinstance(func, ast.Attribute) and func.attr == "partial"
+                    or isinstance(func, ast.Name) and func.id == "partial"):
+                if any(_is_jax_jit(a) for a in dec.args):
+                    return True
+    return False
+
+
+def _jit_regions(tree: ast.Module) -> list[ast.AST]:
+    """Every AST subtree whose body is traced by jax.jit: decorated defs,
+    plus any lambda/def reachable inside the arguments of a ``jax.jit(...)``
+    call expression (covers ``jax.jit(jax.vmap(lambda ...))``)."""
+    regions: list[ast.AST] = []
+    local_defs: dict[str, ast.AST] = {}
+    for node in ast.walk(tree):
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            local_defs.setdefault(node.name, node)
+            if _jit_decorated(node):
+                regions.append(node)
+    for node in ast.walk(tree):
+        if isinstance(node, ast.Call) and _is_jax_jit(node.func):
+            for arg in node.args:
+                for sub in ast.walk(arg):
+                    if isinstance(sub, ast.Lambda):
+                        regions.append(sub)
+                    elif (isinstance(sub, ast.Name)
+                          and sub.id in local_defs):
+                        regions.append(local_defs[sub.id])
+    return regions
+
+
+def _check_host_pulls(path: str, tree: ast.Module,
+                      src_lines: list[str]) -> list[LintFinding]:
+    findings = []
+    seen: set[int] = set()
+    for region in _jit_regions(tree):
+        for node in ast.walk(region):
+            if not isinstance(node, ast.Call) or id(node) in seen:
+                continue
+            bad = None
+            if (isinstance(node.func, ast.Attribute)
+                    and node.func.attr == "item" and not node.args):
+                bad = ".item()"
+            elif (isinstance(node.func, ast.Name)
+                  and node.func.id in _HOST_PULLS
+                  and node.args
+                  and not isinstance(node.args[0], ast.Constant)):
+                bad = f"{node.func.id}(...)"
+            if bad and not _suppressed(src_lines, node.lineno):
+                seen.add(id(node))
+                findings.append(LintFinding(
+                    "tracer-host-pull", path, node.lineno,
+                    f"{bad} on a traced value inside a jitted code path "
+                    f"(host pull breaks tracing / forces a device sync)"))
+    return findings
+
+
+def _module_scope_statements(tree: ast.Module):
+    """Statements executed at import: module body (recursing into if/try
+    blocks) and class bodies — everything outside a def/lambda."""
+    stack = list(tree.body)
+    while stack:
+        stmt = stack.pop()
+        if isinstance(stmt, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            continue
+        if isinstance(stmt, ast.ClassDef):
+            stack.extend(stmt.body)
+            continue
+        if isinstance(stmt, (ast.If, ast.Try, ast.With, ast.For, ast.While)):
+            for field in ("body", "orelse", "finalbody", "handlers"):
+                for sub in getattr(stmt, field, []):
+                    stack.extend(getattr(sub, "body", [sub])
+                                 if isinstance(sub, ast.ExceptHandler)
+                                 else [sub])
+            continue
+        yield stmt
+
+
+def _is_jnp_call(node: ast.Call) -> bool:
+    """Call whose callee path starts with jnp. / jax.numpy."""
+    parts = []
+    cur = node.func
+    while isinstance(cur, ast.Attribute):
+        parts.append(cur.attr)
+        cur = cur.value
+    if isinstance(cur, ast.Name):
+        parts.append(cur.id)
+    parts.reverse()
+    return bool(parts) and (parts[0] == "jnp"
+                            or parts[:2] == ["jax", "numpy"])
+
+
+def _check_import_time_jnp(path: str, tree: ast.Module,
+                           src_lines: list[str]) -> list[LintFinding]:
+    findings = []
+
+    def scan(node: ast.AST) -> None:
+        # def/lambda bodies execute later, not at import — don't descend
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef,
+                             ast.Lambda)):
+            return
+        if (isinstance(node, ast.Call) and _is_jnp_call(node)
+                and not _suppressed(src_lines, node.lineno)):
+            findings.append(LintFinding(
+                "import-time-jnp", path, node.lineno,
+                f"jnp computation at module import time "
+                f"({ast.unparse(node.func)}(...)) — builds device "
+                f"arrays before launch code can set XLA_FLAGS"))
+        for child in ast.iter_child_nodes(node):
+            scan(child)
+
+    for stmt in _module_scope_statements(tree):
+        scan(stmt)
+    return findings
+
+
+def lint_file(path: str | pathlib.Path) -> list[LintFinding]:
+    """Run the per-file rules (host pulls, import-time jnp) on one source."""
+    path = pathlib.Path(path)
+    src = path.read_text()
+    tree = ast.parse(src, filename=str(path))
+    lines = src.splitlines()
+    rel = str(path)
+    return (_check_host_pulls(rel, tree, lines)
+            + _check_import_time_jnp(rel, tree, lines))
+
+
+def lint_tree(root: str | pathlib.Path) -> list[LintFinding]:
+    """Per-file rules over every ``*.py`` under ``root``, sorted."""
+    findings: list[LintFinding] = []
+    for path in sorted(pathlib.Path(root).rglob("*.py")):
+        findings.extend(lint_file(path))
+    return sorted(findings, key=lambda f: (f.file, f.line))
+
+
+def lint_cost_references(costs_path: str | pathlib.Path,
+                         tests_dir: str | pathlib.Path) -> list[LintFinding]:
+    """Every public top-level ``*_cost`` def in ``costs_path`` must appear
+    in at least one file under ``tests_dir``."""
+    costs_path = pathlib.Path(costs_path)
+    tree = ast.parse(costs_path.read_text(), filename=str(costs_path))
+    helpers = [(node.name, node.lineno) for node in tree.body
+               if isinstance(node, ast.FunctionDef)
+               and node.name.endswith("_cost")
+               and not node.name.startswith("_")]
+    corpus = "\n".join(p.read_text()
+                       for p in sorted(pathlib.Path(tests_dir).glob("*.py")))
+    return [LintFinding(
+        "unreferenced-cost-helper", str(costs_path), lineno,
+        f"costs.{name} is referenced by no test — a cost model nobody "
+        f"pins is free to drift from what the code books")
+        for name, lineno in helpers if name not in corpus]
+
+
+def repo_paths() -> tuple[pathlib.Path, pathlib.Path, pathlib.Path]:
+    """(src/repro package root, core/costs.py, tests dir) of this checkout."""
+    import repro
+    pkg = pathlib.Path(repro.__file__).resolve().parent
+    return pkg, pkg / "core" / "costs.py", pkg.parents[1] / "tests"
+
+
+def run_repolint() -> list[LintFinding]:
+    """All three rules against this checkout (tests-dir rule skipped when
+    the package is installed without its test tree)."""
+    pkg, costs_path, tests_dir = repo_paths()
+    findings = lint_tree(pkg)
+    if costs_path.exists() and tests_dir.is_dir():
+        findings.extend(lint_cost_references(costs_path, tests_dir))
+    return findings

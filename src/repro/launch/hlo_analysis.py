@@ -24,7 +24,8 @@ import math
 import re
 
 __all__ = ["CollectiveStats", "parse_collectives", "RooflineTerms",
-           "roofline_terms", "PEAK_FLOPS", "HBM_BW", "ICI_BW"]
+           "roofline_terms", "fallback_trip", "PEAK_FLOPS", "HBM_BW",
+           "ICI_BW"]
 
 PEAK_FLOPS = 197e12
 HBM_BW = 819e9
@@ -111,12 +112,19 @@ def _split_computations(text: str) -> dict[str, list[str]]:
     return comps
 
 
+def fallback_trip(values) -> int:
+    """Loop-trip fallback shared by the HLO and jaxpr walkers
+    (:mod:`repro.analysis.jaxpr_lint`): a loop condition is tiny — the
+    induction limit plus occasional 0/1 constants — so the largest scalar
+    integer constant observed in it is the trip count, with a floor of 1."""
+    return max((int(v) for v in values), default=1)
+
+
 def _trip_count(cond_lines: list[str]) -> int:
     """Trip count from a while condition: the constant compared against the
     induction variable.  The compare is frequently wrapped in a fusion, so
     after trying a direct compare we fall back to the largest scalar int
-    constant in the condition computation (conditions are tiny: induction
-    limit + occasional 0/1)."""
+    constant in the condition computation (:func:`fallback_trip`)."""
     consts = {}
     for ln in cond_lines:
         for name, val in _CONST_RE.findall(ln):
@@ -130,7 +138,7 @@ def _trip_count(cond_lines: list[str]) -> int:
                     op = op.split()[-1].lstrip("%")
                     if op in consts:
                         return max(consts[op], 1)
-    return max(consts.values(), default=1)
+    return fallback_trip(consts.values())
 
 
 def _collective_bytes_in(lines: list[str], n_devices: int):

@@ -659,3 +659,71 @@ class StreamingPCAEngine:
             regions=tuple(regions),
             merge_packets=float(bill),
         )
+
+
+# ===========================================================================
+# Program contract (repro.analysis; DESIGN.md Sec. 15): the engine hot loop.
+# Static rules pin the vmapped chunk body (one launch per step); the runtime
+# check needs the lowered/compiled artifact — buffer donation is a lowering
+# property, retraces a jit-cache property — so it runs a tiny interpret-mode
+# fleet for a few steps.
+# ===========================================================================
+from repro.analysis import contracts as _contracts  # noqa: E402
+from repro.analysis import jaxpr_lint as _jl        # noqa: E402
+
+_CONTRACT_SLOTS, _CONTRACT_K, _CONTRACT_N = 2, 2, 4
+
+
+def _contract_engine() -> StreamingPCAEngine:
+    cfg = StreamConfig(p=8, q=2, halfwidth=1, warmup_rounds=2,
+                       interpret=True)
+    eng = StreamingPCAEngine(cfg, slots=_CONTRACT_SLOTS, seed=0,
+                             chunk=_CONTRACT_K)
+    rng = np.random.default_rng(0)
+    for _ in range(_CONTRACT_SLOTS):
+        eng.submit(StreamRequest(rounds=rng.normal(
+            size=(6, _CONTRACT_N, cfg.p)).astype(np.float32)))
+    return eng
+
+
+def _contract_engine_batch(eng: StreamingPCAEngine):
+    batch = jnp.zeros((eng.slots, eng.chunk, _CONTRACT_N, eng.cfg.p),
+                      jnp.float32)
+    rv = jnp.ones((eng.slots, eng.chunk), jnp.float32)
+    return batch, rv
+
+
+def _trace_engine_step():
+    eng = _contract_engine()
+    batch, rv = _contract_engine_batch(eng)
+    jx = jax.make_jaxpr(lambda s, x, r: eng._step_fn(s, x, r))(
+        eng.states, batch, rv)
+    return {f"slots={eng.slots},K={eng.chunk}": jx}
+
+
+def _engine_runtime_checks():
+    eng = _contract_engine()
+    batch, rv = _contract_engine_batch(eng)
+    results = [_contracts.donation_report(eng._step_fn, eng.states, batch,
+                                          rv, argnum=0,
+                                          contract="engine.step")]
+    for _ in range(3):               # 6 rounds / chunk 2 = 3 same-shape steps
+        eng.step()
+    results.append(_contracts.retrace_report(eng._step_fn, 3,
+                                             contract="engine.step"))
+    return results
+
+
+_contracts.register(_contracts.Contract(
+    id="engine.step",
+    where="repro.serve.engine.StreamingPCAEngine.step",
+    claim="the vmapped chunk step launches one pallas kernel per engine "
+          "step, the fleet state is donated (in-place update), and "
+          "same-shape steps never retrace",
+    trace=_trace_engine_step,
+    rules=(_jl.PrimitiveBudget("pallas_call", exact=1),
+           _jl.PrimitiveBudget("eigh", max=1),
+           _jl.ForbidInLoops(everywhere=True),
+           _jl.NoF64()),
+    runtime=_engine_runtime_checks,
+))

@@ -637,3 +637,131 @@ def sharded_stream_run(cfg: StreamConfig, mesh, states: StreamState,
         check_rep=False,
     )
     return fm(states, xs)
+
+
+# ===========================================================================
+# Program contracts (repro.analysis; DESIGN.md Sec. 15).
+#
+# Every structural claim the docs/benchmarks make about the chunk body is
+# declared here, next to the code it describes, and machine-checked by
+# ``python -m repro.analysis.check`` (a dedicated CI job) — the Table-1
+# discipline of the paper, applied to the traced program instead of the
+# WSN packet ledger.
+# ===========================================================================
+from repro.analysis import contracts as _contracts  # noqa: E402
+from repro.analysis import jaxpr_lint as _jl        # noqa: E402
+
+_CONTRACT_P, _CONTRACT_Q, _CONTRACT_H, _CONTRACT_N = 12, 3, 2, 4
+
+
+def _contract_cfg(*, fused: bool = True, stages: bool = True,
+                  precision: str = "fp32") -> StreamConfig:
+    comp = CompressionConfig(epsilon=0.5) if stages else None
+    det = DetectionConfig(alpha=1e-3, calib_rounds=3) if stages else None
+    return StreamConfig(p=_CONTRACT_P, q=_CONTRACT_Q,
+                        halfwidth=_CONTRACT_H, warmup_rounds=4,
+                        compression=comp, detection=det,
+                        fused=fused, precision=precision)
+
+
+def _trace_chunk_body(cfg: StreamConfig, ks=(1, 4, 8)):
+    st = stream_init(cfg, jax.random.PRNGKey(0))
+    out = {}
+    for k in ks:
+        xc = jnp.zeros((k, _CONTRACT_N, cfg.p), jnp.float32)
+        out[f"K={k}"] = jax.make_jaxpr(
+            lambda s, x: chunk_stream_step(cfg, s, x))(st, xc)
+    return out
+
+
+def _trace_chunked_run():
+    cfg = _contract_cfg(stages=False)
+    st = stream_init(cfg, jax.random.PRNGKey(0))
+    xs = jnp.zeros((8, _CONTRACT_N, cfg.p), jnp.float32)
+    return {"R=8,chunk=4": jax.make_jaxpr(
+        lambda s, x: chunked_stream_run(cfg, s, x, chunk=4))(st, xs)}
+
+
+def _trace_dtype_policy():
+    st32 = stream_init(_contract_cfg(stages=False), jax.random.PRNGKey(0))
+    xs = jnp.zeros((4, _CONTRACT_N, _CONTRACT_P), jnp.float32)
+    cfg32 = _contract_cfg(stages=False)
+    cfg_f = _contract_cfg()
+    cfg_bf = _contract_cfg(precision="bf16")
+    st_f = stream_init(cfg_f, jax.random.PRNGKey(0))
+    return {
+        "stream_run": jax.make_jaxpr(
+            lambda s, x: stream_run(cfg32, s, x))(st32, xs),
+        "chunked-fp32": jax.make_jaxpr(
+            lambda s, x: chunked_stream_run(cfg_f, s, x, chunk=4))(st_f, xs),
+        "chunked-bf16": jax.make_jaxpr(
+            lambda s, x: chunked_stream_run(cfg_bf, s, x, chunk=4))(
+            stream_init(cfg_bf, jax.random.PRNGKey(0)), xs),
+    }
+
+
+_contracts.register(_contracts.Contract(
+    id="chunk.body",
+    where="repro.streaming.driver.chunk_stream_step",
+    claim="one cov pallas launch and at most one eigh per chunk body, "
+          "independent of K (PR 5)",
+    trace=lambda: _trace_chunk_body(_contract_cfg(stages=False)),
+    rules=(_jl.PrimitiveBudget("pallas_call", exact=1),
+           _jl.PrimitiveBudget("eigh", max=1),
+           _jl.ForbidInLoops(everywhere=True),
+           _jl.NoF64()),
+))
+
+_contracts.register(_contracts.Contract(
+    id="chunk.fused.fp32",
+    where="repro.streaming.driver.chunk_stream_step",
+    claim="1 pallas_call per fused chunk body with both stages configured "
+          "(was 3 on the split path; PR 7) — lax.cond branches included",
+    trace=lambda: _trace_chunk_body(_contract_cfg()),
+    rules=(_jl.PrimitiveBudget("pallas_call", exact=1),
+           _jl.PrimitiveBudget("eigh", max=1),
+           _jl.ForbidInLoops(everywhere=True),
+           _jl.NoF64()),
+))
+
+_contracts.register(_contracts.Contract(
+    id="chunk.fused.bf16",
+    where="repro.streaming.driver.chunk_stream_step",
+    claim="the bf16 fused body still launches once and keeps every "
+          "accumulator fp32 (bf16 is a tile format only; PR 7)",
+    trace=lambda: _trace_chunk_body(_contract_cfg(precision="bf16")),
+    rules=(_jl.PrimitiveBudget("pallas_call", exact=1),
+           _jl.Fp32Accumulators(),
+           _jl.NoF64()),
+))
+
+_contracts.register(_contracts.Contract(
+    id="chunk.body.split",
+    where="repro.streaming.driver.chunk_stream_step",
+    claim="the split (fused=False) chunk body pays exactly the three "
+          "launches the mega-kernel collapsed (the fused path's oracle)",
+    trace=lambda: _trace_chunk_body(_contract_cfg(fused=False), ks=(4,)),
+    rules=(_jl.PrimitiveBudget("pallas_call", exact=3),
+           _jl.PrimitiveBudget("eigh", max=1)),
+))
+
+_contracts.register(_contracts.Contract(
+    id="driver.hot-loop",
+    where="repro.streaming.driver.chunked_stream_run",
+    claim="the streamed scan is host-sync-free (no device_put/callbacks in "
+          "the loop body) and launches scan-length x 1 pallas kernels",
+    trace=_trace_chunked_run,
+    rules=(_jl.ForbidInLoops(),
+           # loop-weighted: 8 rounds / chunk 4 = 2 scan trips x 1 launch
+           _jl.PrimitiveBudget("pallas_call", exact=2, loop_weighted=True),
+           _jl.NoF64()),
+))
+
+_contracts.register(_contracts.Contract(
+    id="dtype.policy",
+    where="repro.streaming.driver",
+    claim="no f64 anywhere on the streaming paths; bf16 never escapes the "
+          "tile loads (pallas outputs and scan carries stay fp32)",
+    trace=_trace_dtype_policy,
+    rules=(_jl.NoF64(), _jl.Fp32Accumulators()),
+))

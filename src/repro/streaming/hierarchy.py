@@ -170,8 +170,10 @@ def hierarchical_stream_run(cfg: StreamConfig, mesh, states: StreamState,
     streams its local regions through :func:`batched_stream_run` (with the
     PR 5 chunk/probe_every knobs threaded through) with NO cross-shard
     traffic, then the merge runs as the run's only collectives: one tiled
-    ``all_gather`` of the (q_local,) energy records and one ``psum`` each
-    of the trace partials and the refresh-boundary flags.
+    ``all_gather`` of the (q_local,) energy records and ONE multi-operand
+    ``psum`` carrying both the trace partials and the refresh-boundary
+    flags (contract ``hierarchy.refresh`` pins this budget at the jaxpr
+    level — see the registration at the bottom of this module).
 
     Returns ``(final_states, metrics, fleet)`` where states/metrics are the
     per-region leaves of the flat driver (regions-leading) and ``fleet``
@@ -207,13 +209,15 @@ def hierarchical_stream_run(cfg: StreamConfig, mesh, states: StreamState,
         # level-2 records: per-region energies + trace partials
         lam_l, den_l = jax.vmap(region_energies)(fin)
         lam_table = jax.lax.all_gather(lam_l, axis, tiled=True)
-        total_var = jax.lax.psum(jnp.sum(den_l), axis)
+        # ONE multi-operand psum (a single collective on the wire) carries
+        # both the trace partials and the per-boundary refresh flags; the
+        # flags' fleet-wide sum books one merge per decision boundary at
+        # which ANY region refreshed, plus the final merge when none fired
+        total_var, fired = jax.lax.psum(
+            (jnp.sum(den_l),
+             jnp.sum(metrics.did_refresh.astype(jnp.float32), axis=0)),
+            axis)
         basis = merge_fleet(lam_table, total_var, qf)
-        # one merge per decision boundary at which ANY region refreshed
-        # (psum of the per-boundary flags = fleet-wide refresh count per
-        # boundary), plus the final merge when no boundary fired
-        fired = jax.lax.psum(
-            jnp.sum(metrics.did_refresh.astype(jnp.float32), axis=0), axis)
         merges = jnp.maximum(jnp.sum(fired > 0), 1).astype(jnp.int32)
         fleet = FleetMerge(basis=basis, merge_epochs=merges,
                            merge_packets=merges * jnp.asarray(merge_price,
@@ -236,3 +240,40 @@ def hierarchical_stream_run(cfg: StreamConfig, mesh, states: StreamState,
                    in_specs=(state_specs, spec, spec),
                    out_specs=out_specs, check_rep=False)
     return fm(states, xs, masks)
+
+
+# ===========================================================================
+# Program contract (repro.analysis; DESIGN.md Sec. 15): the PR 6 headline —
+# "ONE collective merge per refresh" — pinned at the jaxpr level.
+# ===========================================================================
+from repro.analysis import contracts as _contracts  # noqa: E402
+from repro.analysis import jaxpr_lint as _jl        # noqa: E402
+
+
+def _trace_hierarchy_refresh():
+    """Trace the two-level run on a 1-device ``region`` mesh (sub-jaxpr
+    structure is mesh-size independent; the collectives appear either way)."""
+    from repro.launch.mesh import make_fleet_mesh
+
+    cfg = StreamConfig(p=8, q=2, halfwidth=1, warmup_rounds=2)
+    mesh = make_fleet_mesh(region=1, data=1)
+    states = hierarchical_stream_init(cfg, jax.random.PRNGKey(0), 2)
+    xs = jnp.zeros((2, 4, 4, cfg.p), jnp.float32)
+    jx = jax.make_jaxpr(
+        lambda s, x: hierarchical_stream_run(cfg, mesh, s, x,
+                                             chunk=2))(states, xs)
+    return {"regions=2": jx}
+
+
+_contracts.register(_contracts.Contract(
+    id="hierarchy.refresh",
+    where="repro.streaming.hierarchy.hierarchical_stream_run",
+    claim="exactly one all_gather and one (multi-operand) psum on the "
+          "'region' axis per run, none inside loop bodies, no other "
+          "cross-host collectives anywhere (PR 6)",
+    trace=_trace_hierarchy_refresh,
+    rules=(_jl.CollectiveBudget(axis="region",
+                                budgets=(("all_gather", 1), ("psum", 1))),
+           _jl.ForbidInLoops(),
+           _jl.NoF64()),
+))

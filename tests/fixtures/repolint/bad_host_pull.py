@@ -1,0 +1,35 @@
+"""Fixture: every flavour of host pull inside jitted code paths.
+
+Line numbers are asserted by tests/test_repolint.py — keep edits append-only.
+"""
+import functools
+
+import jax
+import jax.numpy as jnp
+
+
+@jax.jit
+def decorated_pull(x):
+    return float(jnp.sum(x))                       # line 13: float(...)
+
+
+@functools.partial(jax.jit, static_argnums=())
+def partial_decorated_pull(x):
+    return x.sum().item()                          # line 18: .item()
+
+
+def _named_body(x):
+    return int(jnp.argmax(x))                      # line 22: int(...)
+
+
+stepped = jax.jit(jax.vmap(lambda x: bool(jnp.any(x))))   # line 25: bool(...)
+named = jax.jit(_named_body)
+
+
+def not_jitted(x):
+    return float(jnp.sum(x))                       # fine: host-side helper
+
+
+@jax.jit
+def suppressed_pull(x):
+    return float(jnp.sum(x))  # repolint: ok — deliberate sync point

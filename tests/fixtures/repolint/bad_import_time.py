@@ -1,0 +1,24 @@
+"""Fixture: jnp computation at module import time (module + class scope).
+
+Line numbers are asserted by tests/test_repolint.py — keep edits append-only.
+"""
+import jax.numpy as jnp
+
+_TABLE = jnp.arange(16)                            # line 7: module scope
+
+
+class Config:
+    SCALE = jnp.ones((4,))                         # line 11: class scope
+
+
+try:
+    _EYE = jnp.eye(3)                              # line 15: inside try
+except RuntimeError:
+    _EYE = None
+
+
+def lazy_ok():
+    return jnp.zeros((4,))                         # fine: runs at call time
+
+
+_SUPPRESSED = jnp.zeros(())  # repolint: ok — tiny sentinel, deliberate

@@ -1,0 +1,17 @@
+"""Fixture: a module the lints should pass untouched."""
+import jax
+import jax.numpy as jnp
+
+
+@jax.jit
+def traced(x):
+    return jnp.sum(x * 2.0)
+
+
+def host_side(arr):
+    # host pulls outside jitted regions are fine
+    return float(arr.sum())
+
+
+def build_table(n: int):
+    return jnp.arange(n)          # call-time jnp is fine

@@ -1,0 +1,22 @@
+"""Fixture costs module for the unreferenced-cost-helper rule.
+
+``referenced_cost`` appears in the fixture tests corpus below;
+``orphan_cost`` deliberately does not.  Line numbers are asserted by
+tests/test_repolint.py — keep edits append-only.
+"""
+
+
+def referenced_cost(q: int) -> int:
+    return 2 * q
+
+
+def orphan_cost(q: int) -> int:                    # line 13: unreferenced
+    return 3 * q
+
+
+def _private_cost(q: int) -> int:                  # fine: private
+    return q
+
+
+def not_a_cost_helper(q: int) -> int:              # fine: no *_cost suffix
+    return q

@@ -326,16 +326,11 @@ class TestLaunchCounts:
     one refresh select (eigh) per chunk body, independent of K."""
 
     @staticmethod
-    def _count(jaxpr, names, acc=None):
-        acc = acc if acc is not None else {}
-        for eqn in jaxpr.eqns:
-            if eqn.primitive.name in names:
-                acc[eqn.primitive.name] = acc.get(eqn.primitive.name, 0) + 1
-            for v in eqn.params.values():
-                for sub in (v if isinstance(v, (list, tuple)) else [v]):
-                    if hasattr(sub, "jaxpr"):
-                        TestLaunchCounts._count(sub.jaxpr, names, acc)
-        return acc
+    def _count(jaxpr, names):
+        # shared recursive walker (repro.analysis) — descends into cond
+        # branches, scan/while bodies, pjit calls and shard_map sub-jaxprs
+        from repro.analysis.jaxpr_lint import count_primitives
+        return count_primitives(jaxpr, names)
 
     def test_one_launch_one_select_per_chunk(self):
         cfg = StreamConfig(p=P, q=Q, halfwidth=H, forgetting=0.9,

@@ -269,19 +269,8 @@ class TestFusedDriverDifferential:
             self._cfg(precision="fp16")
 
 
-def _count_primitive(jaxpr, name):
-    total = 0
-    for eqn in jaxpr.eqns:
-        if eqn.primitive.name == name:
-            total += 1
-        for v in eqn.params.values():
-            vals = v if isinstance(v, (list, tuple)) else [v]
-            for item in vals:
-                if hasattr(item, "jaxpr"):
-                    inner = item.jaxpr if hasattr(item.jaxpr, "eqns") \
-                        else item
-                    total += _count_primitive(inner, name)
-    return total
+# recursive jaxpr primitive counting now lives in the shared analysis walker
+from repro.analysis.jaxpr_lint import count_primitive as _count_primitive
 
 
 class TestFusedLaunchStructure:

@@ -1,0 +1,103 @@
+"""The source lints are themselves tested: fixture files deliberately
+violate each rule and the findings must name the exact file:line
+(tests/fixtures/repolint/ — line numbers pinned in the fixtures).
+"""
+
+import pathlib
+
+import pytest
+
+from repro.analysis.repolint import (RULES, lint_cost_references, lint_file,
+                                     lint_tree, repo_paths, run_repolint)
+
+FIXTURES = pathlib.Path(__file__).parent / "fixtures" / "repolint"
+
+
+def _by_rule(findings, rule):
+    return [f for f in findings if f.rule == rule]
+
+
+class TestHostPullRule:
+    def test_flags_each_pull_with_exact_location(self):
+        path = FIXTURES / "bad_host_pull.py"
+        findings = _by_rule(lint_file(path), "tracer-host-pull")
+        got = {(f.line, f.message.split(" ")[0]) for f in findings}
+        assert got == {(13, "float(...)"),      # @jax.jit decorated
+                       (18, ".item()"),         # partial(jax.jit, ...)
+                       (22, "int(...)"),        # named def passed to jax.jit
+                       (25, "bool(...)")}       # lambda inside jit(vmap(...))
+        assert all(f.file.endswith("bad_host_pull.py") for f in findings)
+
+    def test_suppression_comment_exempts_line(self):
+        findings = _by_rule(lint_file(FIXTURES / "bad_host_pull.py"),
+                            "tracer-host-pull")
+        assert 34 not in {f.line for f in findings}   # "# repolint: ok" line
+
+    def test_finding_text_is_file_line_rule(self):
+        f = _by_rule(lint_file(FIXTURES / "bad_host_pull.py"),
+                     "tracer-host-pull")[0]
+        assert f.text().startswith(f"{f.file}:{f.line}: [tracer-host-pull]")
+
+
+class TestImportTimeJnpRule:
+    def test_flags_module_class_and_try_scope(self):
+        path = FIXTURES / "bad_import_time.py"
+        findings = _by_rule(lint_file(path), "import-time-jnp")
+        assert {f.line for f in findings} == {7, 11, 15}
+        assert all(f.file.endswith("bad_import_time.py") for f in findings)
+
+    def test_function_bodies_and_suppressed_lines_exempt(self):
+        findings = _by_rule(lint_file(FIXTURES / "bad_import_time.py"),
+                            "import-time-jnp")
+        flagged = {f.line for f in findings}
+        assert 21 not in flagged                  # def body: runs at call time
+        assert 24 not in flagged                  # "# repolint: ok" line
+
+
+class TestCostReferenceRule:
+    def test_orphan_helper_named_with_line(self, tmp_path):
+        tests_dir = tmp_path / "tests"
+        tests_dir.mkdir()
+        (tests_dir / "test_x.py").write_text(
+            "from fake_costs import referenced_cost\n")
+        findings = lint_cost_references(FIXTURES / "fake_costs.py", tests_dir)
+        assert len(findings) == 1
+        f = findings[0]
+        assert (f.rule, f.line) == ("unreferenced-cost-helper", 13)
+        assert "orphan_cost" in f.message
+        assert f.file.endswith("fake_costs.py")
+
+    def test_no_findings_when_all_referenced(self, tmp_path):
+        tests_dir = tmp_path / "tests"
+        tests_dir.mkdir()
+        (tests_dir / "test_x.py").write_text(
+            "uses referenced_cost and orphan_cost\n")
+        assert lint_cost_references(FIXTURES / "fake_costs.py",
+                                    tests_dir) == []
+
+
+class TestTreeAndRepo:
+    def test_clean_module_passes(self):
+        assert lint_file(FIXTURES / "clean_module.py") == []
+
+    def test_lint_tree_collects_and_sorts(self):
+        findings = lint_tree(FIXTURES)
+        assert findings == sorted(findings, key=lambda f: (f.file, f.line))
+        rules_seen = {f.rule for f in findings}
+        assert rules_seen == {"tracer-host-pull", "import-time-jnp"}
+
+    def test_repo_is_clean(self):
+        """The repo itself must satisfy its own lints — the same property
+        ``python -m repro.analysis.check`` enforces in CI."""
+        findings = run_repolint()
+        assert findings == [], "\n".join(f.text() for f in findings)
+
+    def test_repo_paths_resolve(self):
+        pkg, costs_path, tests_dir = repo_paths()
+        assert (pkg / "analysis" / "repolint.py").exists()
+        assert costs_path.exists()
+        assert tests_dir.is_dir()
+
+    def test_rules_tuple_is_the_public_contract(self):
+        assert RULES == ("tracer-host-pull", "import-time-jnp",
+                         "unreferenced-cost-helper")
