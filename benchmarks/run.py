@@ -153,9 +153,22 @@ def main() -> int:
             and os.path.exists(args.streaming_baseline)):
         regressions = check_streaming_regression(gathered["streaming"],
                                                  args.streaming_baseline)
-    # bench/artifact errors are fatal only under --smoke (CI mode);
-    # a throughput regression is fatal on every run
-    fatal = regressions + (bench_errors + artifact_errors
+    # static resource certifier (repro.analysis.resources): under --smoke
+    # the derived VMEM/HBM/wire bills must still match the committed
+    # analysis/baselines/resources.json — a perf run whose traced resource
+    # bill drifted from the blessed one is reporting numbers for a
+    # different program, so the drift is as fatal as a bench error
+    resource_errors: list[tuple[str, str]] = []
+    if args.smoke:
+        try:
+            from repro.analysis.check import resource_failures
+            resource_errors = resource_failures()
+        except Exception as e:  # noqa: BLE001 — certifier crash is a finding
+            resource_errors = [("resources:driver",
+                                f"{type(e).__name__}: {e}")]
+    # bench/artifact/resource errors are fatal only under --smoke (CI
+    # mode); a throughput regression is fatal on every run
+    fatal = regressions + (bench_errors + artifact_errors + resource_errors
                            if args.smoke else [])
     warn_only = [] if args.smoke else bench_errors + artifact_errors
     for rule, detail in fatal + warn_only:

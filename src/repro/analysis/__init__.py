@@ -18,9 +18,17 @@ instead of trusting prose:
   (``streaming/driver.py``, ``streaming/hierarchy.py``,
   ``serve/engine.py`` register theirs at import); this module only holds
   the record type, the registry, and the evaluator.
+* :mod:`repro.analysis.resources` — the static resource certifier
+  (DESIGN.md Sec. 16): derives per-``pallas_call`` VMEM footprints,
+  fetch-on-change HBM traffic, flops/arithmetic intensity and per-axis
+  collective wire bytes from the traced program, checks them against
+  declarative budgets (:class:`VmemBudget`, :class:`HbmTrafficBudget`,
+  :class:`WireBytesBudget`) and the committed
+  ``analysis/baselines/resources.json`` expectations.
 * :mod:`repro.analysis.repolint` — AST-based source lints for repo
   conventions (no host pulls inside jitted code, no import-time ``jnp``
-  computation, every ``costs.*_cost`` helper pinned by a test).
+  computation, every ``costs.*_cost`` helper pinned by a test,
+  ``pallas_call`` hygiene).
 
 ``python -m repro.analysis.check`` runs everything and fails loudly with a
 per-rule report (the dedicated CI job).
@@ -31,14 +39,21 @@ from repro.analysis.contracts import (Contract, RuleResult, check_all,
                                       register, registry)
 from repro.analysis.jaxpr_lint import (CollectiveBudget, ForbidInLoops,
                                        Fp32Accumulators, NoF64,
-                                       PrimitiveBudget, collective_counts,
-                                       count_primitive, count_primitives,
-                                       iter_eqns)
+                                       PrimitiveBudget, UnknownTripError,
+                                       collective_counts, count_primitive,
+                                       count_primitives, iter_eqns)
+from repro.analysis.resources import (EntryResources, HbmTrafficBudget,
+                                      VmemBudget, WireBytesBudget,
+                                      collective_resources, derive_all,
+                                      entry_resources, pallas_resources)
 
 __all__ = [
     "Contract", "RuleResult", "register", "registry", "get_contract",
     "check_all", "load_entry_points",
     "iter_eqns", "count_primitive", "count_primitives", "collective_counts",
     "PrimitiveBudget", "CollectiveBudget", "ForbidInLoops", "NoF64",
-    "Fp32Accumulators",
+    "Fp32Accumulators", "UnknownTripError",
+    "EntryResources", "pallas_resources", "collective_resources",
+    "entry_resources", "derive_all",
+    "VmemBudget", "HbmTrafficBudget", "WireBytesBudget",
 ]

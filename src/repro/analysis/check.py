@@ -1,13 +1,21 @@
 """``python -m repro.analysis.check`` — run every registered program
-contract plus the repo source lints; print a per-rule report; exit nonzero
-if anything is violated.
+contract, the static resource certifier, and the repo source lints; print
+a per-rule report; exit nonzero if anything is violated.
 
 Options:
-    --only SUBSTR   restrict to contracts whose id contains SUBSTR
-                    (lints still run; pass --contracts-only/--lint-only
-                    to split)
-    --json PATH     also write the per-rule report as JSON (the CI artifact)
-    --list          list registered contracts and exit
+    --only SUBSTR       restrict to contracts whose id contains SUBSTR
+                        (lints still run; --contracts-only/--lint-only/
+                        the special value ``resources`` split further:
+                        ``--only resources`` runs ONLY the resource
+                        certifier section)
+    --json PATH         also write the per-rule report as JSON (CI artifact)
+    --list              list registered contracts and exit
+    --diff PATH         derive the resource quantities and print only the
+                        ones that CHANGED vs the given baseline (PR-review
+                        mode; informational, always exits 0)
+    --bless-resources   re-derive every quantity and overwrite the
+                        committed ``analysis/baselines/resources.json``
+                        (commit the result — that IS the review surface)
 """
 
 from __future__ import annotations
@@ -18,15 +26,64 @@ import os
 import sys
 
 
+def _print_resources(results, rows: list[dict]) -> int:
+    """Per-quantity PASS/FAIL lines; collapses all-green entries to one
+    line per entry so a healthy run stays readable."""
+    failed = 0
+    by_entry: dict[str, list] = {}
+    for r in results:
+        by_entry.setdefault(r.entry, []).append(r)
+    for entry, rs in sorted(by_entry.items()):
+        bad = [r for r in rs if not r.ok]
+        if not bad:
+            qty = {r.quantity: r.measured for r in rs}
+            summary = (f"vmem={qty.get('vmem_peak_bytes', 0)}B "
+                       f"hbm={qty.get('hbm_read_bytes', 0)}+"
+                       f"{qty.get('hbm_write_bytes', 0)}B "
+                       f"passes={qty.get('hbm_passes', 0)} "
+                       f"flops={qty.get('flops', 0)}")
+            wire = {k: v for k, v in qty.items() if k.startswith("wire.")}
+            if wire:
+                summary += " " + " ".join(f"{k}={v}"
+                                          for k, v in sorted(wire.items()))
+            print(f"[PASS] {entry:<28s} {summary} == baseline "
+                  f"({len(rs)} quantities)")
+        for r in bad:
+            print(f"[FAIL] {r.entry:<28s} {r.rule():<28s} {r.detail}")
+            failed += 1
+        for r in rs:
+            rows.append({"contract": r.entry, "rule": r.rule(), "ok": r.ok,
+                         "detail": r.detail})
+    return failed
+
+
+def resource_failures(only: str | None = None) -> list[tuple[str, str]]:
+    """Structured ``(rule, detail)`` failure pairs from the resource
+    certifier — the form ``benchmarks/run.py`` folds into its own FAIL
+    lines (``run.py/FAIL,resources:...``)."""
+    from repro.analysis import resources
+    return [(f"{r.entry}/{r.rule()}", r.detail)
+            for r in resources.check_against_baseline(only=only)
+            if not r.ok]
+
+
 def main(argv: list[str] | None = None) -> int:
     ap = argparse.ArgumentParser(prog="python -m repro.analysis.check")
-    ap.add_argument("--only", help="substring filter on contract ids")
+    ap.add_argument("--only", help="substring filter on contract ids; the "
+                                   "special value 'resources' runs only "
+                                   "the resource-certifier section")
     ap.add_argument("--json", dest="json_path",
                     help="write the per-rule report to this path")
     ap.add_argument("--list", action="store_true",
                     help="list registered contracts and exit")
     ap.add_argument("--contracts-only", action="store_true")
     ap.add_argument("--lint-only", action="store_true")
+    ap.add_argument("--diff", metavar="PATH",
+                    help="print only resource quantities that changed vs "
+                         "this baseline, then exit 0")
+    ap.add_argument("--bless-resources", action="store_true",
+                    help="overwrite the committed resources.json with the "
+                         "currently derived quantities")
     args = ap.parse_args(argv)
 
     # tracing only — keep the CPU backend quiet and deterministic; set
@@ -34,24 +91,48 @@ def main(argv: list[str] | None = None) -> int:
     # except the engine runtime check which runs a tiny interpret fleet)
     os.environ.setdefault("JAX_PLATFORMS", "cpu")
 
-    from repro.analysis import contracts, repolint
+    from repro.analysis import contracts, repolint, resources
 
     if args.list:
         for cid, c in sorted(contracts.load_entry_points().items()):
             print(f"{cid:<24s} {c.where:<44s} {c.claim}")
         return 0
 
+    if args.bless_resources:
+        path = resources.bless()
+        print(f"blessed {sum(len(v) for v in resources.derive_all().values())}"
+              f" quantities -> {path}")
+        print("commit the updated baseline; the diff IS the review surface")
+        return 0
+
+    if args.diff:
+        changed = [r for r in resources.check_against_baseline(
+            path=args.diff) if not r.ok]
+        if not changed:
+            print(f"no resource quantities changed vs {args.diff}")
+        for r in changed:
+            print(f"{r.entry:<28s} {r.quantity:<24s} {r.detail}")
+        return 0
+
+    resources_only = args.only == "resources"
+    only = None if resources_only else args.only
+
     rows: list[dict] = []
     failed = 0
 
-    if not args.lint_only:
+    if not (args.lint_only or resources_only):
         print("== program contracts " + "=" * 46)
-        for res in contracts.check_all(only=args.only):
+        for res in contracts.check_all(only=only):
             print(res.line())
             rows.append(dataclasses_dict(res))
             failed += 0 if res.ok else 1
 
-    if not args.contracts_only:
+    if not args.lint_only:
+        print("== resource certifier (vs committed baseline) " + "=" * 21)
+        failed += _print_resources(
+            resources.check_against_baseline(only=only), rows)
+
+    if not (args.contracts_only or resources_only):
         print("== repolint " + "=" * 55)
         findings = repolint.run_repolint()
         for f in findings:
@@ -77,6 +158,11 @@ def main(argv: list[str] | None = None) -> int:
         bad = sorted({f"{r['contract']}/{r['rule']}"
                       for r in rows if not r["ok"]})
         print("violated: " + ", ".join(bad))
+        if any(r["rule"].startswith("resources:") for r in rows
+               if not r["ok"]):
+            print("resource deltas that are intended: re-bless with "
+                  "`PYTHONPATH=src python -m repro.analysis.check "
+                  "--bless-resources` and commit the baseline")
     return 1 if failed else 0
 
 

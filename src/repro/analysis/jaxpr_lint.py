@@ -21,6 +21,7 @@ method; :mod:`repro.analysis.contracts` binds them to entry points.
 from __future__ import annotations
 
 import dataclasses
+import math
 from typing import Iterable, Iterator, Mapping
 
 import numpy as np
@@ -29,9 +30,18 @@ from jax.core import ClosedJaxpr, Jaxpr, Literal
 from repro.launch.hlo_analysis import fallback_trip
 
 __all__ = ["EqnSite", "iter_eqns", "count_primitive", "count_primitives",
-           "collective_counts", "while_trip_count", "COLLECTIVE_PRIMITIVES",
-           "HOST_SYNC_PRIMITIVES", "RuleReport", "PrimitiveBudget",
-           "CollectiveBudget", "ForbidInLoops", "NoF64", "Fp32Accumulators"]
+           "collective_counts", "while_trip_count", "UnknownTripError",
+           "COLLECTIVE_PRIMITIVES", "HOST_SYNC_PRIMITIVES", "RuleReport",
+           "PrimitiveBudget", "CollectiveBudget", "ForbidInLoops", "NoF64",
+           "Fp32Accumulators"]
+
+
+class UnknownTripError(ValueError):
+    """A loop-weighted count hit a ``while`` whose trip count could not be
+    parsed from its condition (data-dependent bound).  Rules that price
+    per-run work must fail loudly on it rather than under-count — declare
+    an explicit bound (restructure to ``scan``/``fori_loop``) or drop
+    ``loop_weighted``."""
 
 # collectives as they appear in jaxprs (inside shard_map regions); the
 # HLO-side names in launch/hlo_analysis.py are the post-SPMD spellings
@@ -53,13 +63,18 @@ class EqnSite:
     """One equation as seen by the walker."""
 
     eqn: object                  # jax.core.JaxprEqn
-    mult: float                  # static execution multiplier (loop trips)
+    mult: float                  # static execution multiplier (loop trips);
+    #                              NaN when an enclosing while trip is unknown
     loop_depth: int              # > 0 inside a scan/while body
     path: tuple[str, ...]        # sub-jaxpr labels from the entry
 
     @property
     def name(self) -> str:
         return self.eqn.primitive.name
+
+    @property
+    def trip_known(self) -> bool:
+        return not math.isnan(self.mult)
 
 
 def _as_jaxpr(target) -> Jaxpr:
@@ -72,7 +87,7 @@ def _as_jaxpr(target) -> Jaxpr:
     raise TypeError(f"expected a (Closed)Jaxpr, got {type(target).__name__}")
 
 
-def while_trip_count(eqn) -> int:
+def while_trip_count(eqn) -> int | None:
     """Static trip count of a ``while`` equation, parsed from its condition.
 
     Mirrors the HLO-side ``_trip_count`` in :mod:`repro.launch.hlo_analysis`:
@@ -80,6 +95,9 @@ def while_trip_count(eqn) -> int:
     against; conditions are tiny, so the largest scalar int constant in the
     condition jaxpr (consts + literals) is the bound, with a floor of 1
     (:func:`repro.launch.hlo_analysis.fallback_trip` — the shared policy).
+    A condition with NO int constants (a data-dependent bound) returns
+    ``None``: the trip is unknown, and loop-weighted counts through it
+    raise :class:`UnknownTripError` instead of silently under-counting.
     ``fori_loop`` with static bounds lowers to ``scan`` and never gets here.
     """
     cond = eqn.params.get("cond_jaxpr")
@@ -108,9 +126,10 @@ def _sub_jaxprs(eqn) -> Iterator[tuple[Jaxpr, float, bool, str]]:
                float(eqn.params.get("length", 1)), True, "scan")
         return
     if name == "while":
-        trip = float(while_trip_count(eqn))
-        yield _as_jaxpr(eqn.params["cond_jaxpr"]), trip, True, "while_cond"
-        yield _as_jaxpr(eqn.params["body_jaxpr"]), trip, True, "while_body"
+        trip = while_trip_count(eqn)
+        factor = float("nan") if trip is None else float(trip)
+        yield _as_jaxpr(eqn.params["cond_jaxpr"]), factor, True, "while_cond"
+        yield _as_jaxpr(eqn.params["body_jaxpr"]), factor, True, "while_body"
         return
     if name == "cond":
         for i, branch in enumerate(eqn.params["branches"]):
@@ -143,13 +162,20 @@ def count_primitives(target, names: Iterable[str] | None = None, *,
 
     ``loop_weighted=True`` multiplies each occurrence by its static loop
     multiplier (scan lengths × while trips along the path) — the per-RUN
-    launch count rather than the per-TRACE count.
+    launch count rather than the per-TRACE count.  A counted primitive
+    under a ``while`` with an unparseable trip raises
+    :class:`UnknownTripError` (the count would be a silent under-estimate).
     """
     wanted = None if names is None else frozenset(names)
     acc: dict[str, int] = {}
     for site in iter_eqns(target):
         if wanted is not None and site.name not in wanted:
             continue
+        if loop_weighted and not site.trip_known:
+            raise UnknownTripError(
+                f"{site.name} at {'/'.join(site.path) or '<entry>'} sits "
+                "under a while loop with an unknown (data-dependent) trip "
+                "count — a loop-weighted count needs an explicit bound")
         weight = int(site.mult) if loop_weighted else 1
         acc[site.name] = acc.get(site.name, 0) + weight
     return acc
@@ -206,8 +232,11 @@ class PrimitiveBudget:
         return f"budget:{self.primitive}"
 
     def check(self, target) -> RuleReport:
-        n = count_primitive(target, self.primitive,
-                            loop_weighted=self.loop_weighted)
+        try:
+            n = count_primitive(target, self.primitive,
+                                loop_weighted=self.loop_weighted)
+        except UnknownTripError as e:
+            return RuleReport(self.name, False, str(e))
         wants = []
         ok = True
         if self.exact is not None:

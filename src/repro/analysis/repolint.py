@@ -1,6 +1,6 @@
 """AST-based source lints for repo conventions (DESIGN.md Sec. 15).
 
-Three rules, each guarding a convention the runtime cannot check for us:
+Four rules, each guarding a convention the runtime cannot check for us:
 
 * ``tracer-host-pull`` — no ``float(...)``/``int(...)``/``.item()`` inside
   jitted code paths (functions decorated with ``jax.jit`` /
@@ -16,6 +16,14 @@ Three rules, each guarding a convention the runtime cannot check for us:
   ``core/costs.py`` must be referenced by at least one test file: the
   booked==counted discipline means a cost model nobody pins is a cost model
   free to drift from what the code actually books.
+* ``pallas-call-hygiene`` — no literal ``interpret=True`` at a
+  ``pallas_call`` site (interpret mode is a per-run decision threaded from
+  config — see ``kernels/ops.py::_auto_interpret`` — a hard-coded ``True``
+  silently runs the Python interpreter on real accelerators), and every
+  ``ShapeDtypeStruct`` in a ``pallas_call``-containing scope must carry an
+  explicit dtype (second positional arg or ``dtype=``): the resource
+  certifier (``analysis/resources.py``) bills HBM/VMEM bytes off these
+  dtypes, so an implicit one makes the bill untrustworthy.
 
 A line ending in ``# repolint: ok`` is exempt (the escape hatch for the
 rare deliberate host pull).  Findings carry exact ``file:line`` locations.
@@ -30,7 +38,8 @@ import pathlib
 __all__ = ["LintFinding", "RULES", "lint_file", "lint_tree",
            "lint_cost_references", "run_repolint", "repo_paths"]
 
-RULES = ("tracer-host-pull", "import-time-jnp", "unreferenced-cost-helper")
+RULES = ("tracer-host-pull", "import-time-jnp", "unreferenced-cost-helper",
+         "pallas-call-hygiene")
 
 _HOST_PULLS = {"float", "int", "bool"}
 _SUPPRESS = "# repolint: ok"
@@ -184,15 +193,88 @@ def _check_import_time_jnp(path: str, tree: ast.Module,
     return findings
 
 
+def _is_pallas_call(node: ast.Call) -> bool:
+    """Call whose callee is ``pl.pallas_call`` (or bare ``pallas_call``)."""
+    func = node.func
+    if isinstance(func, ast.Attribute):
+        return func.attr == "pallas_call"
+    return isinstance(func, ast.Name) and func.id == "pallas_call"
+
+
+def _scopes(tree: ast.Module):
+    """(scope node, direct statements) pairs: the module plus every
+    def/lambda, without descending into nested defs — each ShapeDtypeStruct
+    is judged against the pallas_calls of its OWN scope."""
+    yield tree
+    for node in ast.walk(tree):
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef,
+                             ast.Lambda)):
+            yield node
+
+
+def _own_scope_walk(scope: ast.AST):
+    """Walk a scope's body without crossing into nested def/lambda scopes."""
+    roots = scope.body if isinstance(scope.body, list) else [scope.body]
+    stack = list(roots)
+    while stack:
+        node = stack.pop()
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef,
+                             ast.Lambda)):
+            continue      # nested scope — judged by its own _scopes() entry
+        yield node
+        stack.extend(ast.iter_child_nodes(node))
+
+
+def _check_pallas_hygiene(path: str, tree: ast.Module,
+                          src_lines: list[str]) -> list[LintFinding]:
+    findings = []
+    for scope in _scopes(tree):
+        nodes = list(_own_scope_walk(scope))
+        launches = [n for n in nodes
+                    if isinstance(n, ast.Call) and _is_pallas_call(n)]
+        if not launches:
+            continue
+        for call in launches:
+            for kw in call.keywords:
+                if (kw.arg == "interpret"
+                        and isinstance(kw.value, ast.Constant)
+                        and kw.value.value is True
+                        and not _suppressed(src_lines, kw.value.lineno)):
+                    findings.append(LintFinding(
+                        "pallas-call-hygiene", path, kw.value.lineno,
+                        "pallas_call(interpret=True) hard-codes interpret "
+                        "mode — thread it from config (ops._auto_interpret) "
+                        "so real backends compile the kernel"))
+        for node in nodes:
+            if not (isinstance(node, ast.Call)
+                    and isinstance(node.func, (ast.Attribute, ast.Name))):
+                continue
+            name = (node.func.attr if isinstance(node.func, ast.Attribute)
+                    else node.func.id)
+            if name != "ShapeDtypeStruct":
+                continue
+            has_dtype = (len(node.args) >= 2
+                         or any(k.arg == "dtype" for k in node.keywords))
+            if not has_dtype and not _suppressed(src_lines, node.lineno):
+                findings.append(LintFinding(
+                    "pallas-call-hygiene", path, node.lineno,
+                    "ShapeDtypeStruct without an explicit dtype in a "
+                    "pallas_call scope — the resource certifier bills "
+                    "HBM/VMEM bytes off out_shape dtypes"))
+    return findings
+
+
 def lint_file(path: str | pathlib.Path) -> list[LintFinding]:
-    """Run the per-file rules (host pulls, import-time jnp) on one source."""
+    """Run the per-file rules (host pulls, import-time jnp, pallas_call
+    hygiene) on one source."""
     path = pathlib.Path(path)
     src = path.read_text()
     tree = ast.parse(src, filename=str(path))
     lines = src.splitlines()
     rel = str(path)
     return (_check_host_pulls(rel, tree, lines)
-            + _check_import_time_jnp(rel, tree, lines))
+            + _check_import_time_jnp(rel, tree, lines)
+            + _check_pallas_hygiene(rel, tree, lines))
 
 
 def lint_tree(root: str | pathlib.Path) -> list[LintFinding]:
@@ -230,7 +312,7 @@ def repo_paths() -> tuple[pathlib.Path, pathlib.Path, pathlib.Path]:
 
 
 def run_repolint() -> list[LintFinding]:
-    """All three rules against this checkout (tests-dir rule skipped when
+    """All rules against this checkout (tests-dir rule skipped when
     the package is installed without its test tree)."""
     pkg, costs_path, tests_dir = repo_paths()
     findings = lint_tree(pkg)

@@ -23,7 +23,8 @@ __all__ = ["CostReport", "centralized_covariance", "distributed_covariance",
            "centralized_eigenvectors", "distributed_eigenvectors",
            "streaming_round_cost", "streaming_refresh_cost",
            "supervised_round_cost", "quantized_supervised_round_cost",
-           "detection_round_cost", "merge_round_cost", "lossy_merge_cost",
+           "detection_round_cost", "merge_record_elems", "merge_round_cost",
+           "lossy_merge_cost",
            "lossy_round_cost", "lossy_refresh_cost", "lossy_epoch_load",
            "pcag_epoch_load", "default_epoch_load", "table1"]
 
@@ -176,6 +177,17 @@ def detection_round_cost(q: int, c_max: int,
     )
 
 
+def merge_record_elems(q_local: int) -> int:
+    """Elements of ONE region's merge record: its ``q_local`` per-component
+    subspace energies ``diag(W^T C W)`` plus the total-variance partial
+    ``trace(C)``.  This is the unit :func:`merge_round_cost` bills per
+    aggregation packet AND the quantity the static resource certifier
+    (:class:`repro.analysis.resources.WireBytesBudget`) reconciles against
+    the traced merge collectives' shapes — booked == traced, so the packet
+    ledger and the wire cannot drift apart silently."""
+    return q_local + 1
+
+
 def merge_round_cost(q_local: int, c_regions: int) -> CostReport:
     """One fleet-level merge epoch of the two-level hierarchy (DESIGN.md
     Sec. 13), highest-region-head load.
@@ -194,10 +206,11 @@ def merge_round_cost(q_local: int, c_regions: int) -> CostReport:
     Computation per region head: merging ``C_r*`` children records of
     ``q_local + 1`` elements; memory: its own record plus the threshold.
     """
+    record = merge_record_elems(q_local)
     return CostReport(
-        communication=(q_local + 1) * (c_regions + 1) + 1,
-        computation=(q_local + 1) * c_regions,
-        memory=q_local + 2,
+        communication=record * (c_regions + 1) + 1,
+        computation=record * c_regions,
+        memory=record + 1,
     )
 
 

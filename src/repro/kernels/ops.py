@@ -30,7 +30,8 @@ __all__ = ["banded_matvec", "banded_matmul", "cov_band_update",
            "pca_project", "pca_reconstruct",
            "supervised_compress", "supervised_compress_batched",
            "pca_monitor", "pca_monitor_batched",
-           "fused_stream_update", "fused_stream_stages_blocked"]
+           "fused_stream_update", "fused_stream_stages_blocked",
+           "kernel_block_plan"]
 
 
 def _auto_interpret(interpret: bool | None) -> bool:
@@ -78,6 +79,40 @@ def _pick_block_padded(d: int, target: int) -> int:
 
 def _pad_dim(d: int, block: int) -> int:
     return -(-d // block) * block
+
+
+def kernel_block_plan(kind: str, *, rows: int | None = None,
+                      p: int | None = None, dtype: str = "fp32",
+                      halfwidth: int | None = None) -> dict:
+    """The BlockSpec plan a wrapper will pick for the given logical shapes.
+
+    The single source of tiling truth shared by the wrappers below (which
+    call it to pick their blocks) and by the static resource certifier
+    (:mod:`repro.analysis.resources`), which uses it as the *booked* side
+    of the booked==traced VMEM/HBM bill — the plan and the traced
+    ``pallas_call`` grid cannot drift apart without a rule failing.
+
+    Returns ``block_n``/``rows_pad``/``row_blocks`` when ``rows`` is
+    given, ``block_p``/``p_pad``/``feature_blocks`` when ``p`` is given,
+    plus ``grid`` (feature-major, rows fastest — the kernel convention)
+    when both are, and ``halo_width`` (the full-width padded slab a banded
+    kernel re-fetches per feature block) when ``halfwidth`` is given too.
+    """
+    rt, ft = _targets(kind, dtype)
+    plan: dict = {"row_target": rt, "feature_target": ft}
+    if p is not None:
+        bp = _pick_block_padded(p, ft)
+        plan.update(block_p=bp, p_pad=_pad_dim(p, bp),
+                    feature_blocks=_pad_dim(p, bp) // bp)
+    if rows is not None:
+        bn = _pick_block_padded(rows, rt)
+        plan.update(block_n=bn, rows_pad=_pad_dim(rows, bn),
+                    row_blocks=_pad_dim(rows, bn) // bn)
+    if rows is not None and p is not None:
+        plan["grid"] = (plan["feature_blocks"], plan["row_blocks"])
+    if halfwidth is not None and p is not None:
+        plan["halo_width"] = plan["p_pad"] + 2 * halfwidth
+    return plan
 
 
 @functools.partial(jax.jit, static_argnames=("block_p", "interpret"))
@@ -690,9 +725,9 @@ def fused_stream_update(x: jnp.ndarray, weights: jnp.ndarray,
     x, mask, basis, mean2d, invlam2d = _fused_prep(
         x, basis, mean, inv_lam, mask, precision)
     weights = jnp.asarray(weights, jnp.float32).reshape(rows, 1)
-    rt, ft = _targets("fused", precision)
-    bp = block_p or _pick_block_padded(p, ft)
-    bn = block_n or _pick_block_padded(rows, rt)
+    plan = kernel_block_plan("fused", rows=rows, p=p, dtype=precision)
+    bp = block_p or plan["block_p"]
+    bn = block_n or plan["block_n"]
     rows_pad = _pad_dim(rows, bn)
     p_pad = _pad_dim(p, bp)
     if (rows_pad, p_pad) != (rows, p):

@@ -358,7 +358,12 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool,
             "counts": coll.counts,
             "wire_bytes": {k: float(v) for k, v in coll.wire_bytes.items()},
             "total_wire_bytes": float(coll.total_wire_bytes),
+            "unknown_trips": list(coll.unknown_trips),
         }
+        # an unparseable while bound makes roofline_terms raise (the wire
+        # bytes would be under-counted) — that marks the cell failed, the
+        # fail-loud half of the unknown-trip policy
+
         terms = H.roofline_terms(rec["cost"], coll)
         rec["roofline"] = {
             "compute_s": terms.compute_s,

@@ -24,8 +24,8 @@ import math
 import re
 
 __all__ = ["CollectiveStats", "parse_collectives", "RooflineTerms",
-           "roofline_terms", "fallback_trip", "PEAK_FLOPS", "HBM_BW",
-           "ICI_BW"]
+           "roofline_terms", "fallback_trip", "ring_wire_bytes",
+           "PEAK_FLOPS", "HBM_BW", "ICI_BW"]
 
 PEAK_FLOPS = 197e12
 HBM_BW = 819e9
@@ -72,16 +72,35 @@ def _group_size(line: str, default: int) -> int:
     return default
 
 
+def ring_wire_bytes(kind: str, nbytes: float, group: int) -> float:
+    """Per-device wire bytes of one collective under the ring model in the
+    module docstring.  ``nbytes`` is the full result (all-gather) / full
+    input (everything else) size; shared by the HLO parser below and the
+    jaxpr-level certifier (:mod:`repro.analysis.resources`), so both sides
+    price a collective identically."""
+    g = max(int(group), 1)
+    if kind == "all-reduce":
+        return 2.0 * nbytes * (g - 1) / g
+    if kind == "collective-permute":
+        return float(nbytes)
+    return float(nbytes) * (g - 1) / g
+
+
 @dataclasses.dataclass
 class CollectiveStats:
     counts: dict
     result_bytes: dict        # sum of result sizes per kind
     wire_bytes: dict          # modeled per-device wire traffic per kind
     loop_corrected: bool = False
+    unknown_trips: tuple = ()  # while bodies whose trip could not be parsed
 
     @property
     def total_wire_bytes(self) -> float:
         return sum(self.wire_bytes.values())
+
+    @property
+    def trips_known(self) -> bool:
+        return not self.unknown_trips
 
 
 # -- loop-aware HLO structure -------------------------------------------------
@@ -112,19 +131,27 @@ def _split_computations(text: str) -> dict[str, list[str]]:
     return comps
 
 
-def fallback_trip(values) -> int:
+def fallback_trip(values) -> int | None:
     """Loop-trip fallback shared by the HLO and jaxpr walkers
     (:mod:`repro.analysis.jaxpr_lint`): a loop condition is tiny — the
     induction limit plus occasional 0/1 constants — so the largest scalar
-    integer constant observed in it is the trip count, with a floor of 1."""
-    return max((int(v) for v in values), default=1)
+    integer constant observed in it is the trip count, with a floor of 1.
+
+    A condition with NO integer constants (a data-dependent bound) returns
+    ``None`` — the trip is *unknown*.  It used to silently default to 1,
+    which under-counted every collective and launch inside such a loop;
+    callers must now either propagate the unknown (and fail loudly in
+    whatever rule depends on the count) or supply an explicit bound."""
+    ints = [int(v) for v in values]
+    return max(max(ints), 1) if ints else None
 
 
-def _trip_count(cond_lines: list[str]) -> int:
+def _trip_count(cond_lines: list[str]) -> int | None:
     """Trip count from a while condition: the constant compared against the
     induction variable.  The compare is frequently wrapped in a fusion, so
     after trying a direct compare we fall back to the largest scalar int
-    constant in the condition computation (:func:`fallback_trip`)."""
+    constant in the condition computation (:func:`fallback_trip`); a
+    condition with no constants at all yields ``None`` (unknown trip)."""
     consts = {}
     for ln in cond_lines:
         for name, val in _CONST_RE.findall(ln):
@@ -154,21 +181,23 @@ def _collective_bytes_in(lines: list[str], n_devices: int):
                 g = _group_size(stripped, n_devices)
                 counts[kind] += 1
                 rbytes[kind] += n
-                if kind == "all-reduce":
-                    wbytes[kind] += 2 * n * (g - 1) / max(g, 1)
-                elif kind == "collective-permute":
-                    wbytes[kind] += n
-                else:
-                    wbytes[kind] += n * (g - 1) / max(g, 1)
+                wbytes[kind] += ring_wire_bytes(kind, n, g)
                 break
     return counts, rbytes, wbytes
 
 
 def parse_collectives(hlo_text: str, n_devices: int = 512,
-                      loop_aware: bool = True) -> CollectiveStats:
+                      loop_aware: bool = True,
+                      unknown_trip: int | None = None) -> CollectiveStats:
     """Sum collective traffic; with ``loop_aware`` every while-body's
     contribution is multiplied by its (statically parsed) trip count,
-    including nesting — XLA prints each loop body once."""
+    including nesting — XLA prints each loop body once.
+
+    A while-loop whose trip count cannot be parsed (data-dependent bound)
+    uses the explicit ``unknown_trip`` bound if one is given; otherwise the
+    body contributes x1 AND is recorded in ``CollectiveStats.unknown_trips``
+    so downstream consumers (:func:`roofline_terms`) fail loudly instead of
+    silently under-counting."""
     comps = _split_computations(hlo_text)
     if not comps or not loop_aware:
         counts, rbytes, wbytes = _collective_bytes_in(
@@ -177,6 +206,7 @@ def parse_collectives(hlo_text: str, n_devices: int = 512,
 
     # map body computation -> trip count, and parent -> child bodies
     body_trip: dict[str, int] = {}
+    unknown: list[str] = []
     children: dict[str, list[str]] = {name: [] for name in comps}
     for name, lines in comps.items():
         for ln in lines:
@@ -184,6 +214,12 @@ def parse_collectives(hlo_text: str, n_devices: int = 512,
             if m:
                 cond, body = m.group(1), m.group(2)
                 trip = _trip_count(comps.get(cond, []))
+                if trip is None:
+                    if unknown_trip is not None:
+                        trip = int(unknown_trip)
+                    else:
+                        unknown.append(body)
+                        trip = 1
                 body_trip[body] = trip
                 children[name].append(body)
 
@@ -210,7 +246,8 @@ def parse_collectives(hlo_text: str, n_devices: int = 512,
             counts[k] += c[k]
             rbytes[k] += r[k] * f
             wbytes[k] += w[k] * f
-    return CollectiveStats(counts, rbytes, wbytes, loop_corrected=True)
+    return CollectiveStats(counts, rbytes, wbytes, loop_corrected=True,
+                           unknown_trips=tuple(unknown))
 
 
 @dataclasses.dataclass
@@ -234,7 +271,21 @@ class RooflineTerms:
         return max(self.compute_s, self.memory_s, self.collective_s)
 
 
-def roofline_terms(cost: dict, coll: CollectiveStats) -> RooflineTerms:
+def roofline_terms(cost: dict, coll: CollectiveStats, *,
+                   allow_unknown_trips: bool = False) -> RooflineTerms:
+    """Roofline terms from ``cost_analysis()`` numbers + collective stats.
+
+    Refuses stats carrying unparsed while-loop trips — those wire bytes are
+    under-counted by an unknown factor, and a roofline built on them would
+    quietly report a too-fast bound.  Re-run :func:`parse_collectives` with
+    an explicit ``unknown_trip=<bound>`` (or pass ``allow_unknown_trips=True``
+    to accept the x1 floor knowingly)."""
+    if coll.unknown_trips and not allow_unknown_trips:
+        raise ValueError(
+            "while-loop trip count unknown for HLO bodies "
+            f"{list(coll.unknown_trips)} — collective wire bytes are "
+            "under-counted; pass unknown_trip=<bound> to parse_collectives "
+            "or allow_unknown_trips=True to accept the x1 floor")
     flops = float(cost.get("flops", 0.0))
     byts = float(cost.get("bytes accessed", 0.0))
     wire = float(coll.total_wire_bytes)

@@ -34,7 +34,9 @@ def dump_largest(hlo_text: str, n_devices: int, top: int = 15):
     def visit(name, factor):
         mult[name] = max(mult.get(name, 1.0), factor)
         for child in children.get(name, []):
-            visit(child, factor * body_trip.get(child, 1))
+            # unknown trip (None): display-only tool — floor at x1, the
+            # printed "trip" column still shows the floored multiplier
+            visit(child, factor * (body_trip.get(child) or 1))
 
     for name in comps:
         if name not in body_trip:

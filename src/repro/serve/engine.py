@@ -670,6 +670,7 @@ class StreamingPCAEngine:
 # ===========================================================================
 from repro.analysis import contracts as _contracts  # noqa: E402
 from repro.analysis import jaxpr_lint as _jl        # noqa: E402
+from repro.analysis import resources as _res        # noqa: E402
 
 _CONTRACT_SLOTS, _CONTRACT_K, _CONTRACT_N = 2, 2, 4
 
@@ -724,6 +725,8 @@ _contracts.register(_contracts.Contract(
     rules=(_jl.PrimitiveBudget("pallas_call", exact=1),
            _jl.PrimitiveBudget("eigh", max=1),
            _jl.ForbidInLoops(everywhere=True),
-           _jl.NoF64()),
+           _jl.NoF64(),
+           _res.VmemBudget(),
+           _res.HbmTrafficBudget(max_passes=1.0)),
     runtime=_engine_runtime_checks,
 ))

@@ -650,6 +650,7 @@ def sharded_stream_run(cfg: StreamConfig, mesh, states: StreamState,
 # ===========================================================================
 from repro.analysis import contracts as _contracts  # noqa: E402
 from repro.analysis import jaxpr_lint as _jl        # noqa: E402
+from repro.analysis import resources as _res        # noqa: E402
 
 _CONTRACT_P, _CONTRACT_Q, _CONTRACT_H, _CONTRACT_N = 12, 3, 2, 4
 
@@ -709,7 +710,9 @@ _contracts.register(_contracts.Contract(
     rules=(_jl.PrimitiveBudget("pallas_call", exact=1),
            _jl.PrimitiveBudget("eigh", max=1),
            _jl.ForbidInLoops(everywhere=True),
-           _jl.NoF64()),
+           _jl.NoF64(),
+           _res.VmemBudget(),
+           _res.HbmTrafficBudget(max_passes=1.0)),
 ))
 
 _contracts.register(_contracts.Contract(
@@ -721,7 +724,13 @@ _contracts.register(_contracts.Contract(
     rules=(_jl.PrimitiveBudget("pallas_call", exact=1),
            _jl.PrimitiveBudget("eigh", max=1),
            _jl.ForbidInLoops(everywhere=True),
-           _jl.NoF64()),
+           _jl.NoF64(),
+           _res.VmemBudget(),
+           # one tile-load per chunk: the whole entry moves exactly one
+           # pass of HBM traffic, and the chunk data/mask tiles in
+           # particular are never re-fetched across feature blocks
+           _res.HbmTrafficBudget(max_passes=1.0,
+                                 single_pass=("x_ref", "m_ref"))),
 ))
 
 _contracts.register(_contracts.Contract(
@@ -732,7 +741,10 @@ _contracts.register(_contracts.Contract(
     trace=lambda: _trace_chunk_body(_contract_cfg(precision="bf16")),
     rules=(_jl.PrimitiveBudget("pallas_call", exact=1),
            _jl.Fp32Accumulators(),
-           _jl.NoF64()),
+           _jl.NoF64(),
+           _res.VmemBudget(),
+           _res.HbmTrafficBudget(max_passes=1.0,
+                                 single_pass=("x_ref", "m_ref"))),
 ))
 
 _contracts.register(_contracts.Contract(
@@ -742,7 +754,11 @@ _contracts.register(_contracts.Contract(
           "launches the mega-kernel collapsed (the fused path's oracle)",
     trace=lambda: _trace_chunk_body(_contract_cfg(fused=False), ks=(4,)),
     rules=(_jl.PrimitiveBudget("pallas_call", exact=3),
-           _jl.PrimitiveBudget("eigh", max=1)),
+           _jl.PrimitiveBudget("eigh", max=1),
+           _res.VmemBudget(),
+           # each of the three split launches is itself one-pass; the
+           # fused win is fewer launches, not fewer passes per launch
+           _res.HbmTrafficBudget(max_passes=1.0)),
 ))
 
 _contracts.register(_contracts.Contract(
@@ -754,7 +770,9 @@ _contracts.register(_contracts.Contract(
     rules=(_jl.ForbidInLoops(),
            # loop-weighted: 8 rounds / chunk 4 = 2 scan trips x 1 launch
            _jl.PrimitiveBudget("pallas_call", exact=2, loop_weighted=True),
-           _jl.NoF64()),
+           _jl.NoF64(),
+           _res.VmemBudget(),
+           _res.HbmTrafficBudget(max_passes=1.0)),
 ))
 
 _contracts.register(_contracts.Contract(

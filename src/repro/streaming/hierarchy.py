@@ -248,6 +248,9 @@ def hierarchical_stream_run(cfg: StreamConfig, mesh, states: StreamState,
 # ===========================================================================
 from repro.analysis import contracts as _contracts  # noqa: E402
 from repro.analysis import jaxpr_lint as _jl        # noqa: E402
+from repro.analysis import resources as _res        # noqa: E402
+
+_CONTRACT_Q = 2                  # q_local of the traced contract config
 
 
 def _trace_hierarchy_refresh():
@@ -255,7 +258,7 @@ def _trace_hierarchy_refresh():
     structure is mesh-size independent; the collectives appear either way)."""
     from repro.launch.mesh import make_fleet_mesh
 
-    cfg = StreamConfig(p=8, q=2, halfwidth=1, warmup_rounds=2)
+    cfg = StreamConfig(p=8, q=_CONTRACT_Q, halfwidth=1, warmup_rounds=2)
     mesh = make_fleet_mesh(region=1, data=1)
     states = hierarchical_stream_init(cfg, jax.random.PRNGKey(0), 2)
     xs = jnp.zeros((2, 4, 4, cfg.p), jnp.float32)
@@ -275,5 +278,13 @@ _contracts.register(_contracts.Contract(
     rules=(_jl.CollectiveBudget(axis="region",
                                 budgets=(("all_gather", 1), ("psum", 1))),
            _jl.ForbidInLoops(),
-           _jl.NoF64()),
+           _jl.NoF64(),
+           _res.VmemBudget(),
+           # booked == traced: the merge collectives must put exactly the
+           # (q+1)-element record merge_round_cost bills on the wire —
+           # q gathered energies + the psum'd trace partial (the fired
+           # flags ride the same psum as declared bookkeeping)
+           _res.WireBytesBudget(
+               axis="region",
+               record_elems=costs.merge_record_elems(_CONTRACT_Q))),
 ))

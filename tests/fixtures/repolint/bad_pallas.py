@@ -1,0 +1,38 @@
+"""Fixture: deliberate pallas_call hygiene violations.
+
+Line numbers are pinned in tests/test_repolint.py — keep edits line-stable.
+"""
+
+import jax
+from jax.experimental import pallas as pl
+
+
+def _copy_kernel(x_ref, o_ref):
+    o_ref[...] = x_ref[...]
+
+
+def hardcoded_interpret(x):
+    return pl.pallas_call(
+        _copy_kernel,
+        out_shape=jax.ShapeDtypeStruct(x.shape, x.dtype),
+        interpret=True,
+    )(x)
+
+
+def implicit_dtype(x):
+    out = jax.ShapeDtypeStruct(x.shape)
+    return pl.pallas_call(_copy_kernel, out_shape=out)(x)
+
+
+def suppressed_interpret(x):
+    return pl.pallas_call(
+        _copy_kernel,
+        out_shape=jax.ShapeDtypeStruct(x.shape, x.dtype),
+        interpret=True,  # repolint: ok
+    )(x)
+
+
+def no_pallas_in_scope(shape):
+    # dtype-less ShapeDtypeStruct OUTSIDE any pallas_call scope: the rule
+    # must not fire here (launch/dryrun.py-style usage is legitimate).
+    return jax.ShapeDtypeStruct(shape)

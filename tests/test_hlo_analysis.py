@@ -85,6 +85,47 @@ class TestCollectiveParse:
         assert st.total_wire_bytes == 0.0
 
 
+class TestUnknownTrips:
+    """A while condition with no integer constant (data-dependent bound)
+    must surface as *unknown*, not silently count as 1."""
+
+    # same program, but the condition compares two loop-carried values
+    UNKNOWN_HLO = SAMPLE_HLO.replace(
+        "%constant.9 = s32[] constant(12)",
+        "%constant.9 = s32[] get-tuple-element(%p1), index=0")
+
+    def test_fallback_trip_policy(self):
+        assert H.fallback_trip([3, 12]) == 12
+        assert H.fallback_trip([0]) == 1          # floor
+        assert H.fallback_trip(()) is None        # unknown, not 1
+
+    def test_unknown_body_recorded_with_x1_floor(self):
+        naive = H.parse_collectives(SAMPLE_HLO, 256, loop_aware=False)
+        st = H.parse_collectives(self.UNKNOWN_HLO, 256, loop_aware=True)
+        assert st.unknown_trips == ("body_spmd",)
+        assert not st.trips_known
+        # the floor: body contributes x1, same as the naive parse
+        assert st.wire_bytes["all-gather"] == pytest.approx(
+            naive.wire_bytes["all-gather"])
+
+    def test_roofline_refuses_unknown_trips(self):
+        st = H.parse_collectives(self.UNKNOWN_HLO, 256, loop_aware=True)
+        with pytest.raises(ValueError, match="unknown_trip"):
+            H.roofline_terms({"flops": 1e12, "bytes accessed": 1e9}, st)
+        terms = H.roofline_terms({"flops": 1e12, "bytes accessed": 1e9},
+                                 st, allow_unknown_trips=True)
+        assert terms.compute_s > 0
+
+    def test_explicit_bound_restores_certainty(self):
+        naive = H.parse_collectives(self.UNKNOWN_HLO, 256, loop_aware=False)
+        st = H.parse_collectives(self.UNKNOWN_HLO, 256, loop_aware=True,
+                                 unknown_trip=12)
+        assert st.trips_known
+        assert st.wire_bytes["all-reduce"] == pytest.approx(
+            12 * naive.wire_bytes["all-reduce"])
+        H.roofline_terms({"flops": 1e12, "bytes accessed": 1e9}, st)
+
+
 class TestRoofline:
     def test_terms_and_dominance(self):
         st = H.parse_collectives(SAMPLE_HLO, 256, loop_aware=False)

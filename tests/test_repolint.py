@@ -76,6 +76,28 @@ class TestCostReferenceRule:
                                     tests_dir) == []
 
 
+class TestPallasHygieneRule:
+    def test_flags_interpret_true_and_implicit_dtype(self):
+        path = FIXTURES / "bad_pallas.py"
+        findings = _by_rule(lint_file(path), "pallas-call-hygiene")
+        assert {f.line for f in findings} == {18, 23}
+        by_line = {f.line: f.message for f in findings}
+        assert "interpret=True" in by_line[18]
+        assert "ShapeDtypeStruct" in by_line[23]
+        assert all(f.file.endswith("bad_pallas.py") for f in findings)
+
+    def test_suppression_and_non_pallas_scope_exempt(self):
+        findings = _by_rule(lint_file(FIXTURES / "bad_pallas.py"),
+                            "pallas-call-hygiene")
+        flagged = {f.line for f in findings}
+        assert 31 not in flagged     # "# repolint: ok" line
+        assert 38 not in flagged     # scope without a pallas_call
+
+    def test_other_rules_silent_on_fixture(self):
+        findings = lint_file(FIXTURES / "bad_pallas.py")
+        assert {f.rule for f in findings} == {"pallas-call-hygiene"}
+
+
 class TestTreeAndRepo:
     def test_clean_module_passes(self):
         assert lint_file(FIXTURES / "clean_module.py") == []
@@ -84,7 +106,8 @@ class TestTreeAndRepo:
         findings = lint_tree(FIXTURES)
         assert findings == sorted(findings, key=lambda f: (f.file, f.line))
         rules_seen = {f.rule for f in findings}
-        assert rules_seen == {"tracer-host-pull", "import-time-jnp"}
+        assert rules_seen == {"tracer-host-pull", "import-time-jnp",
+                              "pallas-call-hygiene"}
 
     def test_repo_is_clean(self):
         """The repo itself must satisfy its own lints — the same property
@@ -100,4 +123,4 @@ class TestTreeAndRepo:
 
     def test_rules_tuple_is_the_public_contract(self):
         assert RULES == ("tracer-host-pull", "import-time-jnp",
-                         "unreferenced-cost-helper")
+                         "unreferenced-cost-helper", "pallas-call-hygiene")
