@@ -1,0 +1,196 @@
+"""Sustained-load serving benchmark: the StreamingPCAEngine under churn.
+
+Drives the fleet engine (DESIGN.md Sec. 17) through a sustained request
+load — more streams than slots, staggered lengths so retirements and
+admissions happen continuously, a liveness-schedule variant so the masked
+staging path is measured too — and reports the serving headline numbers
+per configuration:
+
+* ``engine/{sync,pipe}_fleet{B}_chunk{K}_{churn}`` — requests/s, rounds/s,
+  p99 step latency, measured staged-vs-compute overlap fraction, prestage
+  hit rate; one row per (mode, fleet size, chunk, churn level)
+* ``engine/speedup_fleet{B}_chunk{K}_{churn}`` — pipelined vs synchronous
+  requests/s ratio for the matching row pair
+
+Every row carries the machine-readable fields (``requests_per_s``,
+``overlap``, ``slots``, ``mode``, ...) next to the human-readable
+``derived`` string, so the benchmarks/run.py gates compare numbers, not
+regexes.
+
+Pipelining overlaps single-threaded host staging with the XLA fold, so its
+wall-clock win needs somewhere for the overlap to GO: a second core or an
+accelerator device.  On a 1-core CPU host both sides share the core and
+the ratio is ~1.0 by Amdahl — the rows record ``pipeline_capable`` and
+``cores`` so the run.py overlap gate arms only where overlap is physically
+possible, and prints the capability verdict instead of silently passing.
+
+Standalone: ``python benchmarks/engine_bench.py --smoke --json
+BENCH_engine.json`` (benchmarks/run.py --engine-json does this inside the
+CI smoke run).
+"""
+
+from __future__ import annotations
+
+import os
+import time
+
+import jax
+import numpy as np
+
+from benchmarks.common import row
+from repro.serve.engine import StreamingPCAEngine, StreamRequest
+from repro.streaming import StreamConfig
+
+P, Q, H = 32, 3, 4
+N_PER_ROUND = 8
+
+
+def pipeline_capable() -> bool:
+    """True when host staging can physically overlap device compute:
+    an accelerator backend, or more than one CPU core."""
+    if jax.default_backend() != "cpu":
+        return True
+    return (os.cpu_count() or 1) > 1
+
+
+def _requests(rng, n_req: int, rounds_base: int, *, masked: bool,
+              jitter: int) -> list[StreamRequest]:
+    """Staggered stream lengths (so retirements spread across steps — the
+    sustained-churn regime, not synchronized waves) and, when ``masked``,
+    a liveness schedule on every other stream to exercise the masked
+    staging path."""
+    reqs = []
+    for i in range(n_req):
+        r = rounds_base + (i * 7) % max(1, jitter)
+        rounds = rng.normal(size=(r, N_PER_ROUND, P)).astype(np.float32)
+        liveness = None
+        if masked and i % 2 == 0:
+            liveness = (rng.uniform(size=(r, P)) > 0.1).astype(np.float32)
+        reqs.append(StreamRequest(rounds=rounds, liveness=liveness))
+    return reqs
+
+
+def _drive(cfg, *, slots: int, chunk: int, pipeline: bool, reqs,
+           warm_req) -> dict:
+    """One sustained-load run: compile outside the timed window (one
+    throwaway warm stream per step shape), then submit the full load and
+    time until drained."""
+    eng = StreamingPCAEngine(cfg, slots=slots, seed=0, chunk=chunk,
+                             pipeline=pipeline, telemetry=True)
+    eng.submit(warm_req)
+    eng.run_until_done()                 # compiles step fns + retirement
+    eng.telemetry.reset()                # measure the loaded window only
+    t0 = time.perf_counter()
+    for r in reqs:
+        eng.submit(r)
+    eng.run_until_done()
+    wall = time.perf_counter() - t0
+    done = sum(1 for r in reqs if r.done)
+    if done != len(reqs):
+        raise RuntimeError(f"{len(reqs) - done} requests not drained")
+    summ = eng.telemetry.summary()
+    assert eng.pulls["hot"] == 0, \
+        f"hot-path device pulls: {eng.pulls['hot']}"   # contract, re-checked
+    return dict(wall_s=wall,
+                requests_per_s=done / wall,
+                rounds_per_s=sum(r.rounds.shape[0] for r in reqs) / wall,
+                p99_ms=summ["p99_step_s"] * 1e3,
+                overlap=summ["overlap_fraction"],
+                prestage_hit_rate=summ["prestage_hit_rate"])
+
+
+def run(smoke: bool = False):
+    """Sweep fleet size x churn rate x chunk x mode.  ``smoke`` shrinks
+    the load to a seconds-scale pass (the CI setting) but keeps the
+    32-slot chunk=8 acceptance row."""
+    out = []
+    rng = np.random.default_rng(0)
+    capable = pipeline_capable()
+    cores = os.cpu_count() or 1
+    cfg = StreamConfig(p=P, q=Q, halfwidth=H, forgetting=0.9,
+                       drift_threshold=0.1, warmup_rounds=5)
+    # churn level -> (stream length base, +jitter): short streams retire
+    # slots every few steps (heavy churn), long streams mostly fold
+    churn_levels = {"hichurn": (16, 7), "lochurn": (48, 17)}
+    sweeps: list[tuple[int, int, str, bool]] = []
+    for slots in ((8, 32) if smoke else (8, 32, 64)):
+        for k in ((8,) if smoke else (1, 8)):
+            for churn in churn_levels:
+                # the masked variant only at the acceptance point, to keep
+                # smoke in seconds
+                for masked in ((False,) if (smoke or slots != 32)
+                               else (False, True)):
+                    sweeps.append((slots, k, churn, masked))
+    repeat = 2 if smoke else 3
+    for slots, k, churn, masked in sweeps:
+        base, jitter = churn_levels[churn]
+        n_req = slots * (2 if smoke else 3)
+        reqs_by_mode = {}
+        for pipeline in (False, True):
+            m = None
+            for _ in range(repeat):      # best-of: shed scheduler noise
+                # fresh identical request objects per run (the engine
+                # mutates them); same seed -> same data
+                r = np.random.default_rng(hash((slots, k, churn, masked))
+                                          % 2**32)
+                reqs = _requests(r, n_req, base, masked=masked,
+                                 jitter=jitter)
+                warm = StreamRequest(rounds=r.normal(
+                    size=(2 * k, N_PER_ROUND, P)).astype(np.float32))
+                mi = _drive(cfg, slots=slots, chunk=k, pipeline=pipeline,
+                            reqs=reqs, warm_req=warm)
+                if m is None or mi["requests_per_s"] > m["requests_per_s"]:
+                    m = mi
+            mode = "pipe" if pipeline else "sync"
+            reqs_by_mode[mode] = m
+            tag = f"fleet{slots}_chunk{k}_{churn}" + \
+                ("_masked" if masked else "")
+            rr = row(f"engine/{mode}_{tag}", m["wall_s"] * 1e6,
+                     f"{m['requests_per_s']:.1f} req/s|"
+                     f"{m['rounds_per_s']:.0f} rounds/s|"
+                     f"p99 {m['p99_ms']:.1f}ms|"
+                     f"overlap {m['overlap']:.3f}")
+            rr.update(mode=mode, slots=slots, chunk=k, churn=churn,
+                      masked=masked, cores=cores, pipeline_capable=capable,
+                      **{kk: vv for kk, vv in m.items() if kk != "wall_s"})
+            out.append(rr)
+        ratio = (reqs_by_mode["pipe"]["requests_per_s"]
+                 / reqs_by_mode["sync"]["requests_per_s"])
+        tag = f"fleet{slots}_chunk{k}_{churn}" + ("_masked" if masked else "")
+        rr = row(f"engine/speedup_{tag}", 0.0,
+                 f"{ratio:.2f}x pipe vs sync|"
+                 f"{'overlap-capable' if capable else 'single-core host'}")
+        rr.update(mode="speedup", slots=slots, chunk=k, churn=churn,
+                  masked=masked, cores=cores, pipeline_capable=capable,
+                  speedup=ratio)
+        out.append(rr)
+    return out
+
+
+def main() -> int:
+    import argparse
+    import json
+
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--smoke", action="store_true",
+                    help="seconds-scale sweep (the CI setting)")
+    ap.add_argument("--json",
+                    help="write the gathered rows to this path "
+                         "(the BENCH_engine.json artifact)")
+    args = ap.parse_args()
+    rows = run(smoke=args.smoke)
+    print("name,us_per_call,derived")
+    for r in rows:
+        print(f"{r['name']},{r['us_per_call']},{r['derived']}")
+    if args.json:
+        if not rows:
+            print(f"ERROR: no rows gathered, refusing to write {args.json}")
+            return 1
+        with open(args.json, "w") as fh:
+            json.dump(rows, fh, indent=2)
+    return 0
+
+
+if __name__ == "__main__":
+    import sys
+    sys.exit(main())

@@ -16,9 +16,22 @@ _STREAMING_BASELINE = os.path.join(
     os.path.dirname(os.path.abspath(__file__)), "baselines",
     "BENCH_streaming.json")
 
+# committed serving-engine throughput baseline (smoke settings); regenerate
+#   python benchmarks/run.py --only engine --smoke \
+#       --engine-json benchmarks/baselines/BENCH_engine.json
+_ENGINE_BASELINE = os.path.join(
+    os.path.dirname(os.path.abspath(__file__)), "baselines",
+    "BENCH_engine.json")
+
 # a measured rounds/s below this fraction of the committed baseline fails
 # the run — the fail-loud guard against silently shipping a slow hot loop
 _REGRESSION_FLOOR = 0.8
+
+# pipelined rows on fleets at least this large must show at least this
+# staged-vs-compute overlap — the pipeline must actually pipeline (gate
+# arms only on hosts where overlap is physically possible)
+_OVERLAP_MIN_SLOTS = 16
+_OVERLAP_FLOOR = 0.10
 
 
 def _rounds_per_sec(derived: str) -> float | None:
@@ -56,6 +69,60 @@ def check_streaming_regression(rows: list,
     return failures
 
 
+def check_engine_regression(rows: list,
+                            baseline_path: str) -> list[tuple[str, str]]:
+    """Compare this run's engine requests/s against the committed baseline.
+
+    Engine rows carry machine-readable fields (``requests_per_s``), so the
+    gate reads numbers instead of parsing the derived string.  Speedup
+    rows and names absent from the baseline are skipped — the gate only
+    compares like with like.
+    """
+    import json
+    with open(baseline_path) as fh:
+        base = {r["name"]: r.get("requests_per_s") for r in json.load(fh)}
+    failures = []
+    for r in rows:
+        rps = r.get("requests_per_s")
+        ref = base.get(r["name"])
+        if rps is None or ref is None or ref <= 0:
+            continue
+        if rps < _REGRESSION_FLOOR * ref:
+            failures.append((
+                f"regression:{r['name']}",
+                f"measured {rps:.0f} req/s vs baseline {ref:.0f} req/s "
+                f"({rps / ref:.2f}x < {_REGRESSION_FLOOR:.2f}x floor)"))
+    return failures
+
+
+def check_engine_overlap(rows: list) -> list[tuple[str, str]]:
+    """Pipelined rows on fleets >= 16 slots must measure >= 10% overlap
+    — parity alone doesn't prove the pipeline pipelines.  The gate arms
+    only where overlap is physically possible (``pipeline_capable``: an
+    accelerator backend or a multi-core host); on a single-core CPU host
+    staging and compute share the core, so the gate prints its verdict as
+    informational instead of silently passing."""
+    failures = []
+    for r in rows:
+        if r.get("mode") != "pipe" or r.get("slots", 0) < _OVERLAP_MIN_SLOTS:
+            continue
+        overlap = r.get("overlap")
+        if overlap is None:
+            continue
+        if not r.get("pipeline_capable", False):
+            print(f"run.py/INFO,overlap:{r['name']},single-core host "
+                  f"(cores={r.get('cores')}): overlap gate vacuous, "
+                  f"measured {overlap:.3f}")
+            continue
+        if overlap < _OVERLAP_FLOOR:
+            failures.append((
+                f"overlap:{r['name']}",
+                f"measured overlap {overlap:.3f} < {_OVERLAP_FLOOR:.2f} "
+                f"floor on a {r.get('slots')}-slot fleet "
+                f"(the pipeline isn't pipelining)"))
+    return failures
+
+
 def main() -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", help="substring filter on benchmark module")
@@ -78,19 +145,28 @@ def main() -> int:
                     help="also write the hierarchical weak-scaling rows "
                          "(regions sweep + wsn-1m smoke replica) gathered "
                          "during this run to a JSON artifact")
+    ap.add_argument("--engine-json",
+                    help="also write the serving-engine sustained-load "
+                         "rows (requests/s, p99, overlap fraction) "
+                         "gathered during this run to a JSON artifact")
     ap.add_argument("--streaming-baseline", default=_STREAMING_BASELINE,
                     help="committed rounds/s baseline to gate against "
+                         "(>20%% regression fails the run); pass an empty "
+                         "string to skip the gate")
+    ap.add_argument("--engine-baseline", default=_ENGINE_BASELINE,
+                    help="committed requests/s baseline to gate against "
                          "(>20%% regression fails the run); pass an empty "
                          "string to skip the gate")
     args = ap.parse_args()
     if args.full and args.smoke:
         ap.error("--full and --smoke are mutually exclusive")
 
-    from benchmarks import (compression_bench, event_bench, fault_bench,
-                            fig7_retained_variance, fig9_comm_costs,
-                            fig11_local_cov, fig13_pim_convergence,
-                            fig14_load_vs_q, kernels_bench, scale_bench,
-                            streaming_bench, table1_complexity)
+    from benchmarks import (compression_bench, engine_bench, event_bench,
+                            fault_bench, fig7_retained_variance,
+                            fig9_comm_costs, fig11_local_cov,
+                            fig13_pim_convergence, fig14_load_vs_q,
+                            kernels_bench, scale_bench, streaming_bench,
+                            table1_complexity)
 
     modules = {
         "fig7": lambda: fig7_retained_variance.run(
@@ -106,6 +182,7 @@ def main() -> int:
         "compression": lambda: compression_bench.run(smoke=args.smoke),
         "events": lambda: event_bench.run(smoke=args.smoke),
         "scale": lambda: scale_bench.run(smoke=args.smoke),
+        "engine": lambda: engine_bench.run(smoke=args.smoke),
     }
 
     # every gate failure is a named (rule, detail) pair so the final verdict
@@ -114,7 +191,7 @@ def main() -> int:
     artifact_errors: list[tuple[str, str]] = []
     regressions: list[tuple[str, str]] = []
     gathered: dict[str, list] = {"compression": [], "events": [],
-                                 "streaming": [], "scale": []}
+                                 "streaming": [], "scale": [], "engine": []}
     print("name,us_per_call,derived")
     for name, fn in modules.items():
         if args.only and args.only not in name:
@@ -134,7 +211,8 @@ def main() -> int:
             ("compression", args.compression_json, gathered["compression"]),
             ("events", args.events_json, gathered["events"]),
             ("streaming", args.streaming_json, gathered["streaming"]),
-            ("scale", args.scale_json, gathered["scale"])):
+            ("scale", args.scale_json, gathered["scale"]),
+            ("engine", args.engine_json, gathered["engine"])):
         if not path:
             continue
         if not rows:
@@ -153,6 +231,15 @@ def main() -> int:
             and os.path.exists(args.streaming_baseline)):
         regressions = check_streaming_regression(gathered["streaming"],
                                                  args.streaming_baseline)
+    # serving-engine gates: requests/s regression vs the committed baseline
+    # (structured fields, no regex) and the overlap floor on big pipelined
+    # fleets — both always fatal, like the streaming gate
+    if (gathered["engine"] and args.engine_baseline
+            and os.path.exists(args.engine_baseline)):
+        regressions += check_engine_regression(gathered["engine"],
+                                               args.engine_baseline)
+    if gathered["engine"]:
+        regressions += check_engine_overlap(gathered["engine"])
     # static resource certifier (repro.analysis.resources): under --smoke
     # the derived VMEM/HBM/wire bills must still match the committed
     # analysis/baselines/resources.json — a perf run whose traced resource

@@ -7,17 +7,37 @@ batch, host-side slot management, jitted steps*:
   slot's region of the decode state; **decode** advances all active slots one
   token per call; finished slots (EOS or max_tokens) are refilled from the
   queue.
-* :class:`StreamingPCAEngine` — the sensor path (DESIGN.md Sec. 8.4/12):
-  each slot holds one live sensor network; every engine step pre-stages and
-  folds the next K-round chunk per slot through the jitted batched chunk
-  step (:func:`repro.streaming.driver.chunk_stream_step` under ``vmap``,
-  fleet state donated so XLA updates it in place), drift-triggered basis
-  refreshes happen at chunk boundaries inside the step, and exhausted
-  streams retire with their final basis + Table-1 communication bill.
+* :class:`StreamingPCAEngine` — the sensor path (DESIGN.md Sec. 8.4/12/17):
+  each slot holds one live sensor network; every engine step stages the
+  next K-round chunk per slot and folds it through the jitted batched chunk
+  step (:func:`repro.streaming.driver.engine_chunk_step_fn` — the vmapped
+  :func:`~repro.streaming.driver.chunk_stream_step` with the fleet state
+  donated so XLA updates it in place), drift-triggered basis refreshes
+  happen at chunk boundaries inside the step, and exhausted streams retire
+  with their final basis + Table-1 communication bill.
   ``StreamConfig.fused``/``precision`` flow straight through the vmapped
   step: with stages configured each slot's chunk body is the one-launch
   mega-kernel (DESIGN.md Sec. 14), and ``precision="bf16"`` stages the
   chunk tiles in bf16 while all engine-visible state stays fp32.
+
+With ``pipeline=True`` the hot loop is fully pipelined (DESIGN.md Sec. 17):
+staging runs through two pinned, engine-owned host buffers whose uploads
+are explicit owned copies (the device batch never aliases staging memory),
+and chunk t+1 is filled and uploaded WHILE the donated jitted step folds
+chunk t — the only waits in the loop are the transfer fence on a buffer's
+previous upload (never on the compute) and the per-slot result pull at
+retirement.  Overlap only reorders host work, never device math, so the
+pipelined engine is bit-identical to the synchronous one — pinned by the
+differential suite in tests/test_engine_async.py.
+
+Admission runs through a priority queue front end
+(:class:`repro.serve.queue.AdmissionQueue`): higher priority admits first,
+oldest-first within a priority, per-tenant concurrent-slot quotas, and a
+bounded queue that rejects (backpressures) external submits when full.
+Structured telemetry (:class:`repro.serve.telemetry.TelemetryRecorder`)
+records per-step wall time, staged-vs-compute overlap, queue depth,
+admissions/retirements and per-slot bills into a ring buffer with an
+optional JSONL sink.
 
 The streaming engine is fault-aware (DESIGN.md Sec. 9): each slot carries a
 :class:`repro.runtime.health.HealthMonitor` driven by a *logical* clock (one
@@ -36,6 +56,8 @@ management is pure Python (host side), the steps are jitted.
 from __future__ import annotations
 
 import dataclasses
+import functools
+import time
 from typing import Callable
 
 import jax
@@ -45,8 +67,10 @@ import numpy as np
 from repro.models import transformer as T
 from repro.runtime.elastic import RescalePlan, plan_mesh
 from repro.runtime.health import HealthMonitor, StragglerPolicy
+from repro.serve.queue import AdmissionQueue, QueuePolicy
+from repro.serve.telemetry import StepRecord, TelemetryRecorder
 from repro.streaming.driver import (StreamConfig, StreamState,
-                                    chunk_stream_step, stream_init)
+                                    engine_chunk_step_fn, stream_init)
 
 __all__ = ["Request", "ServeConfig", "Engine",
            "StreamRequest", "StreamResult", "FleetSummary",
@@ -190,11 +214,19 @@ class StreamRequest:
     region each slot is streaming, and :meth:`StreamingPCAEngine.fleet_summary`
     merges the retired regions' bases into the fleet-level basis with the
     merge's Table-1 bill.  The default region 0 keeps flat fleets unchanged.
+
+    ``priority``/``tenant`` feed the admission queue (DESIGN.md Sec. 17):
+    higher priority admits first (oldest-first within a class), and a
+    tenant never holds more concurrent slots than the engine's
+    ``QueuePolicy.max_slots_per_tenant``.  The defaults reproduce plain
+    FIFO admission.
     """
 
     rounds: np.ndarray               # (R, n, p) float32 measurement rounds
     liveness: np.ndarray | None = None   # (R, p) per-round sensor liveness
     region: int = 0                  # region id in the two-level fleet
+    priority: int = 0                # admission priority (higher first)
+    tenant: str | None = None        # quota bucket (None: unmetered)
     # filled by the engine:
     result: "StreamResult | None" = None
     done: bool = False
@@ -262,6 +294,56 @@ class FleetSummary:
     merge_packets: float             # region-head bill of this merge epoch
 
 
+@functools.lru_cache(maxsize=None)
+def _slot_summary_fn(cfg: StreamConfig):
+    """One jitted per-slot retirement summary per StreamConfig (the slot
+    index is a traced argument, so every retirement of every engine with
+    this config reuses a single compilation).  The eager alternative — a
+    dozen small host-dispatched ops per retirement — costs ~25 ms per
+    retired slot at serving time, which under churn dwarfs the chunk fold
+    itself."""
+    from repro.streaming.hierarchy import region_energies
+    from repro.streaming.online_cov import (online_estimate,
+                                            online_total_variance)
+    from repro.streaming.scheduler import retained_fraction
+
+    def summarize(states, comp, det, i):
+        st = jax.tree.map(lambda a: a[i], states)
+        out = dict(
+            W=st.sched.W,
+            rho=retained_fraction(online_estimate(st.cov), st.sched.W,
+                                  online_total_variance(st.cov)),
+            refreshes=st.sched.refreshes,
+            comm_packets=st.sched.comm_packets,
+            rounds=st.rounds)
+        out["lam"], out["total"] = region_energies(st)
+        if cfg.compression is not None:
+            out.update(comp_max=comp[0][i], comp_extra=comp[1][i],
+                       comp_bits=comp[2][i])
+        if cfg.detection is not None:
+            out.update(det_events=det[0][i], det_alarms=det[1][i],
+                       det_t2=st.det.t2_threshold,
+                       det_spe=st.det.spe_threshold)
+        return out
+
+    return jax.jit(summarize)
+
+
+@dataclasses.dataclass
+class _StagedChunk:
+    """One staged chunk upload: device batches plus the host-side plan
+    they were built from.  ``signature`` pins the slot plan (per-slot
+    request identity + cursor) so a prestaged chunk is consumed only if
+    admissions/retirements/submissions did not move the plan under it."""
+
+    batch: jax.Array                 # (slots, K, n, p) owned device copy
+    masks: jax.Array | None          # (slots, K, p) or None (no schedules)
+    rv: jax.Array                    # (slots, K) round validity
+    start: np.ndarray                # cursor snapshot at staging time
+    consumed: np.ndarray             # rounds each slot will fold
+    signature: tuple                 # plan token (see _plan_signature)
+
+
 class StreamingPCAEngine:
     """Continuous batching over sensor-network streams, fault-aware.
 
@@ -277,7 +359,7 @@ class StreamingPCAEngine:
     min_alive_fraction: a slot heartbeats only while at least this fraction
         of its sensors is alive; below it the network is considered
         unresponsive and the monitor's stall verdict retires it.
-    chunk: rounds folded per engine step (K).  Each step pre-stages every
+    chunk: rounds folded per engine step (K).  Each step stages every
         slot's next K rounds device-side in ONE upload, folds them through
         the fused chunk kernel, and evaluates ONE scheduler decision per
         slot — the per-dispatch overhead (launches, refresh selects,
@@ -287,16 +369,30 @@ class StreamingPCAEngine:
         whose tail is shorter than K folds only its real rounds (the
         chunk step's per-round validity).  ``chunk=1`` reproduces the
         per-round engine bit-exactly.
+    pipeline: pipelined double-buffered staging (DESIGN.md Sec. 17) —
+        chunk t+1 is filled and uploaded while the jitted step folds
+        chunk t.  Overlap reorders host work only; results are
+        bit-identical to ``pipeline=False``.
+    queue: a :class:`~repro.serve.queue.QueuePolicy` (or a prebuilt
+        :class:`~repro.serve.queue.AdmissionQueue`) for the admission
+        front end; None is an unbounded FIFO, bit-compatible with the
+        pre-queue engine.
+    telemetry: a :class:`~repro.serve.telemetry.TelemetryRecorder`, or
+        ``True`` for a default ring recorder; None disables recording.
     """
 
     def __init__(self, cfg: StreamConfig, slots: int = 8, seed: int = 0,
                  health_policy: StragglerPolicy | None = None,
-                 min_alive_fraction: float = 0.25, chunk: int = 1):
+                 min_alive_fraction: float = 0.25, chunk: int = 1,
+                 pipeline: bool = False,
+                 queue: QueuePolicy | AdmissionQueue | None = None,
+                 telemetry: TelemetryRecorder | bool | None = None):
         if chunk < 1:
             raise ValueError(f"chunk must be >= 1, got {chunk}")
         self.cfg = cfg
         self.slots = slots
         self.chunk = chunk
+        self.pipeline = pipeline
         self.min_alive_fraction = min_alive_fraction
         self.health_policy = health_policy or StragglerPolicy(
             stall_timeout=2.5)          # logical steps, not seconds
@@ -304,38 +400,53 @@ class StreamingPCAEngine:
         self._slot_keys = jax.random.split(key, slots)
         self.states: StreamState = jax.vmap(
             lambda k: stream_init(cfg, k))(self._slot_keys)
+        # per-slot re-admission template: slot s always re-initializes
+        # from key s, so the fresh fleet is computed once and cached
+        self._fresh_states: StreamState | None = None
         self.active: list[StreamRequest | None] = [None] * slots
         self.cursor = np.zeros(slots, np.int64)     # next round per slot
-        self.queue: list[StreamRequest] = []
+        self.queue: AdmissionQueue = (
+            queue if isinstance(queue, AdmissionQueue)
+            else AdmissionQueue(queue))
+        self.telemetry: TelemetryRecorder | None = (
+            TelemetryRecorder() if telemetry is True else telemetry or None)
         # region-aware slots (DESIGN.md Sec. 13): which region each slot is
         # streaming right now (-1 = idle), and the latest final result per
         # region — the merge inputs of fleet_summary()
         self.slot_region = np.full(slots, -1, np.int64)
         self.region_results: dict[int, StreamResult] = {}
-        # two jitted chunk steps: the masked one only runs when some active
-        # request actually carries a liveness schedule — fault-free fleets
-        # never build or upload a mask batch at all (and stay on the
-        # unmasked kernel); the two are bit-identical under an all-ones
-        # mask, so the switch is invisible to results.  The fleet state is
-        # DONATED: XLA updates the slot pytree in place instead of
-        # allocating a fresh copy every step (the states are never read
-        # after the call — the returned buffers replace them).
-        self._step_fn = jax.jit(
-            jax.vmap(lambda s, x, rv: chunk_stream_step(
-                cfg, s, x, round_valid=rv)),
-            donate_argnums=(0,))
-        self._step_fn_masked = jax.jit(
-            jax.vmap(lambda s, x, m, rv: chunk_stream_step(cfg, s, x, m, rv)),
-            donate_argnums=(0,))
+        # two jitted chunk steps (repro.streaming.driver.engine_chunk_step_fn
+        # — shared with the engine.step* analysis contracts): the masked one
+        # only runs when some active request actually carries a liveness
+        # schedule — fault-free fleets never build or upload a mask batch at
+        # all (and stay on the unmasked kernel); the two are bit-identical
+        # under an all-ones mask, so the switch is invisible to results.
+        # The fleet state is DONATED: XLA updates the slot pytree in place
+        # instead of allocating a fresh copy every step (the states are
+        # never read after the call — the returned buffers replace them).
+        self._step_fn = engine_chunk_step_fn(cfg)
+        self._step_fn_masked = engine_chunk_step_fn(cfg, masked=True)
         self._n: int | None = None       # epochs/round, fixed fleet-wide
-        # persistent zero/ones templates, allocated once on the first step
-        # (need _n).  The staging batch itself is a FRESH array per chunk
-        # — device_put may alias aligned host memory on CPU, so a reused
-        # fill buffer could be mutated under an in-flight upload; one
-        # slots×K×n×p allocation per K rounds is the amortized, safe form
-        # of the old per-round np.stack
-        self._zeros_chunk: np.ndarray | None = None
-        self._ones_chunk_mask: np.ndarray | None = None
+        # double-buffered staging (DESIGN.md Sec. 17): two pinned,
+        # engine-owned host buffers filled alternately; every upload is an
+        # EXPLICIT OWNED COPY (jnp.asarray(copy=True)), so the device batch
+        # never aliases staging memory — refilling a buffer two chunks
+        # later cannot corrupt an in-flight batch (the CPU device_put
+        # aliasing hazard, pinned by the poisoning regression test).  The
+        # per-buffer transfer fence (_uploads) is waited on before a
+        # REFILL — a wait on the copy-out, never on the chunk fold.
+        self._host_bufs: list[np.ndarray | None] = [None, None]
+        self._mask_bufs: list[np.ndarray | None] = [None, None]
+        self._uploads: list[tuple | None] = [None, None]
+        self._parity = 0
+        self._staged: _StagedChunk | None = None
+        # hot-loop hygiene counters (checked by the engine.step.pipelined
+        # contract): every device→host conversion in the engine goes
+        # through _pull with a ledger key — "hot" must stay 0 forever
+        self.pulls = {"hot": 0, "retire": 0}
+        self._transfer_fences = 0
+        self._prestage_hits = 0
+        self._prestage_misses = 0
         # ε-supervised compression accounting (cfg.compression only):
         # per-slot running worst sink error / flagged-raw extras / bits on
         # air for the current segment.  Accumulated ON DEVICE (jnp ops, no
@@ -377,7 +488,9 @@ class StreamingPCAEngine:
         self.plan_history: list[RescalePlan] = [self.plan]
 
     # -- request lifecycle ---------------------------------------------------
-    def submit(self, req: StreamRequest) -> None:
+    def submit(self, req: StreamRequest) -> bool:
+        """Enqueue a stream for admission; returns False when the bounded
+        queue rejected it (backpressure — the caller owns the retry)."""
         r, n, p = req.rounds.shape
         if p != self.cfg.p:
             raise ValueError(f"stream p={p} != engine p={self.cfg.p}")
@@ -392,121 +505,186 @@ class StreamingPCAEngine:
             self._n = n
         elif n != self._n:
             raise ValueError(f"stream n={n} != engine n={self._n}")
-        self.queue.append(req)
+        ok = self.queue.submit(req, priority=req.priority, tenant=req.tenant)
+        if not ok and self.telemetry is not None:
+            self.telemetry.record_event("rejected", step=self._clock,
+                                        priority=req.priority,
+                                        tenant=req.tenant,
+                                        queue_depth=len(self.queue))
+        return ok
 
-    def _admit(self) -> None:
-        """Fill empty slots from the queue, then reset every admitted
-        slot's device state in ONE batched splice (one scatter per state
-        leaf and per accounting vector, however many slots were admitted —
-        the per-slot ``.at[slot].set`` loop re-dispatched a scatter per
-        slot per leaf)."""
+    def _tenant_load(self) -> dict:
+        load: dict = {}
+        for req in self.active:
+            if req is not None and req.tenant is not None:
+                load[req.tenant] = load.get(req.tenant, 0) + 1
+        return load
+
+    def _admit(self) -> int:
+        """Fill empty slots from the queue front end (priority order,
+        oldest-first within a priority, per-tenant quotas respected), then
+        reset every admitted slot's device state in ONE batched splice
+        (one scatter per state leaf and per accounting vector, however
+        many slots were admitted).  Returns the number admitted."""
         newly: list[int] = []
+        load = self._tenant_load()
         for slot in range(self.slots):
-            if self.active[slot] is None and self.queue:
-                req = self.queue.pop(0)
-                self.active[slot] = req
-                self.cursor[slot] = req.resume_at
-                self.slot_region[slot] = req.region
-                newly.append(slot)
-                monitor = HealthMonitor(self.health_policy,
-                                        clock=lambda: float(self._clock))
-                monitor.heartbeat(step=self._clock, duration=1.0)
-                self.health[slot] = monitor
+            if self.active[slot] is not None:
+                continue
+            entry = self.queue.pop_admissible(load)
+            if entry is None:
+                break
+            req = entry.req
+            self.active[slot] = req
+            self.cursor[slot] = req.resume_at
+            self.slot_region[slot] = req.region
+            if req.tenant is not None:
+                load[req.tenant] = load.get(req.tenant, 0) + 1
+            newly.append(slot)
+            monitor = HealthMonitor(self.health_policy,
+                                    clock=lambda: float(self._clock))
+            monitor.heartbeat(step=self._clock, duration=1.0)
+            self.health[slot] = monitor
+            if self.telemetry is not None:
+                self.telemetry.record_event(
+                    "admitted", step=self._clock, slot=slot,
+                    priority=entry.priority, tenant=entry.tenant,
+                    resume_at=int(req.resume_at))
         if not newly:
-            return
-        idx_np = np.asarray(newly, np.int32)
-        idx = jnp.asarray(idx_np)
-        fresh = jax.vmap(lambda k: stream_init(self.cfg, k))(
-            self._slot_keys[idx_np])
-        self.states = jax.tree.map(lambda full, f: full.at[idx].set(f),
-                                   self.states, fresh)
-        if self.cfg.compression is not None:
-            self._comp_max_err = self._comp_max_err.at[idx].set(0.0)
-            self._comp_extras = self._comp_extras.at[idx].set(0.0)
-            self._comp_bits = self._comp_bits.at[idx].set(0.0)
-        if self.cfg.detection is not None:
-            self._det_events = self._det_events.at[idx].set(0.0)
-            self._det_alarm_packets = self._det_alarm_packets.at[idx].set(0.0)
+            return 0
+        # fixed-shape masked splice: fresh states for the FULL fleet (one
+        # compile, ever), selected per slot by a (slots,) mask.  A
+        # variable-length at[idx].set would retrace once per distinct
+        # admit count — serving-time compile spikes the sustained-load
+        # benchmark would otherwise report as latency.  jnp.where writes
+        # the identical values, so admission stays bit-identical.
+        mask = np.zeros(self.slots, bool)
+        mask[newly] = True
+        mj = jnp.asarray(mask)
+        if self._fresh_states is None:
+            self._fresh_states = jax.vmap(
+                lambda k: stream_init(self.cfg, k))(self._slot_keys)
+        fresh = self._fresh_states
 
-    def _result(self, slot: int, reason: str) -> StreamResult:
-        state_i = jax.tree.map(lambda a: a[slot], self.states)
-        from repro.streaming.online_cov import (online_estimate,
-                                                online_total_variance)
-        from repro.streaming.scheduler import retained_fraction
-        rho = retained_fraction(online_estimate(state_i.cov),
-                                state_i.sched.W,
-                                online_total_variance(state_i.cov))
-        from repro.streaming.hierarchy import region_energies
-        lam, total_var = region_energies(state_i)
-        comp: dict = {}
+        def splice(full, f):
+            sel = mj.reshape((self.slots,) + (1,) * (f.ndim - 1))
+            return jnp.where(sel, f, full)
+
+        self.states = jax.tree.map(splice, self.states, fresh)
         if self.cfg.compression is not None:
-            comp = dict(
-                compression_max_err=float(self._comp_max_err[slot]),
-                compression_extra_packets=float(self._comp_extras[slot]),
-                compression_bits_on_air=float(self._comp_bits[slot]),
+            self._comp_max_err = jnp.where(mj, 0.0, self._comp_max_err)
+            self._comp_extras = jnp.where(mj, 0.0, self._comp_extras)
+            self._comp_bits = jnp.where(mj, 0.0, self._comp_bits)
+        if self.cfg.detection is not None:
+            self._det_events = jnp.where(mj, 0.0, self._det_events)
+            self._det_alarm_packets = jnp.where(mj, 0.0,
+                                                self._det_alarm_packets)
+        return len(newly)
+
+    # -- retirement (classify host-side now, pull device scalars later) ------
+    def _pull(self, x, where: str = "hot"):
+        """The engine's ONLY device→host conversion point: every float()/
+        np.asarray() of a device value routes through here with a ledger
+        key, so the pipelined-hot-loop contract can assert pulls["hot"]==0
+        (results are pulled at retirement, nowhere else)."""
+        self.pulls[where] = self.pulls.get(where, 0) + 1
+        return x
+
+    def _result_slices(self, slot: int):
+        """Dispatch the retiring slot's device-side summary, BEFORE any
+        admission scatter can overwrite the slot.  Async dispatch only;
+        nothing is pulled to host here."""
+        comp = ((self._comp_max_err, self._comp_extras, self._comp_bits)
+                if self.cfg.compression is not None else ())
+        det = ((self._det_events, self._det_alarm_packets)
+               if self.cfg.detection is not None else ())
+        return _slot_summary_fn(self.cfg)(self.states, comp, det,
+                                          np.int32(slot))
+
+    def _finalize_result(self, slices, reason: str) -> StreamResult:
+        """Pull a retiring slot's device scalars and build its
+        StreamResult — the only blocking device→host sync of the loop.
+        ONE device_get for the whole summary dict: pulling the ~17 fields
+        individually pays ~0.3 ms dispatch latency each, which under
+        churn would dominate the chunk fold itself."""
+        out = self._pull(jax.device_get(slices), "retire")
+        extra: dict = {}
+        if self.cfg.compression is not None:
+            extra = dict(
+                compression_max_err=float(out["comp_max"]),
+                compression_extra_packets=float(out["comp_extra"]),
+                compression_bits_on_air=float(out["comp_bits"]),
             )
         if self.cfg.detection is not None:
-            comp.update(
-                detection_events=float(self._det_events[slot]),
-                detection_alarm_packets=float(
-                    self._det_alarm_packets[slot]),
-                detection_t2_threshold=float(state_i.det.t2_threshold),
-                detection_spe_threshold=float(state_i.det.spe_threshold),
+            extra.update(
+                detection_events=float(out["det_events"]),
+                detection_alarm_packets=float(out["det_alarms"]),
+                detection_t2_threshold=float(out["det_t2"]),
+                detection_spe_threshold=float(out["det_spe"]),
             )
         return StreamResult(
-            components=np.asarray(state_i.sched.W),
-            retained=float(rho),
-            refreshes=int(state_i.sched.refreshes),
-            comm_packets=float(state_i.sched.comm_packets),
-            rounds=int(state_i.rounds),
+            components=np.asarray(out["W"]),
+            retained=float(out["rho"]),
+            refreshes=int(out["refreshes"]),
+            comm_packets=float(out["comm_packets"]),
+            rounds=int(out["rounds"]),
             reason=reason,
-            energies=np.asarray(lam),
-            total_variance=float(total_var),
-            **comp,
+            energies=np.asarray(out["lam"]),
+            total_variance=float(out["total"]),
+            **extra,
         )
 
-    def _retire(self, slot: int) -> None:
+    def _begin_retire(self, slot: int, reason: str) -> dict:
+        """Host-side half of retirement: snapshot the slot's device slices
+        (lazy), free the slot, and — for a dead retirement whose liveness
+        schedule shows a revival — re-queue the continuation (an internal
+        submit, exempt from the queue bound: the work was already
+        admitted once).  The StreamResult pull happens in
+        :meth:`_finish_retire`, AFTER the pipelined loop has staged the
+        next chunk, so the pull never blocks the staging overlap."""
         req = self.active[slot]
-        req.result = self._result(slot, "completed")
-        req.done = True
-        self.retired_log.append((req, "completed"))
-        self.region_results[req.region] = req.result
+        pending = dict(req=req, reason=reason, slot=slot,
+                       region=int(self.slot_region[slot]),
+                       slices=self._result_slices(slot), revive=None)
         self.active[slot] = None
         self.slot_region[slot] = -1
         self.health[slot] = None
+        if reason == "dead":
+            revive = None
+            if req.liveness is not None:
+                frac = req.liveness[int(self.cursor[slot]):].mean(axis=1)
+                ahead = np.nonzero(frac >= self.min_alive_fraction)[0]
+                if ahead.size:
+                    revive = int(self.cursor[slot]) + int(ahead[0])
+            pending["revive"] = revive
+            if revive is not None:
+                req.resume_at = revive
+                self.queue.submit(req, priority=req.priority,
+                                  tenant=req.tenant, internal=True)
+        return pending
 
-    def _retire_dead(self, slot: int) -> None:
-        """Stall verdict: retire the network; re-queue it if it revives.
-
-        The partial result (basis, bill, rounds streamed before death) is
-        appended to ``req.retirements``.  If the liveness schedule shows the
-        network healthy again at a later round, a continuation resumes from
-        there with fresh per-slot state — the covariance re-warms over the
-        forgetting window, exactly like a rebooted deployment.
-        """
-        req = self.active[slot]
-        partial = self._result(slot, "dead")
-        self.retired_log.append((req, "dead"))
-        self.active[slot] = None
-        self.slot_region[slot] = -1
-        self.health[slot] = None
-        revive = None
-        if req.liveness is not None:
-            frac = req.liveness[int(self.cursor[slot]):].mean(axis=1)
-            ahead = np.nonzero(frac >= self.min_alive_fraction)[0]
-            if ahead.size:
-                revive = int(self.cursor[slot]) + int(ahead[0])
-        if revive is not None:
+    def _finish_retire(self, pending: dict) -> None:
+        req = pending["req"]
+        reason = pending["reason"]
+        result = self._finalize_result(pending["slices"], reason)
+        self.retired_log.append((req, reason))
+        if reason == "dead" and pending["revive"] is not None:
             # a continuation will follow: this segment is an early retirement
-            req.retirements.append(partial)
-            req.resume_at = revive
-            self.queue.append(req)
+            req.retirements.append(result)
         else:
-            # no revival ahead: the partial IS the final result (kept out of
-            # retirements so segment bills sum without double-counting)
-            req.result = partial
+            # final result (dead retirements without a revival ahead stay
+            # out of `retirements` so segment bills sum without
+            # double-counting)
+            req.result = result
             req.done = True
-            self.region_results[req.region] = partial
+            self.region_results[pending["region"]] = result
+        if self.telemetry is not None:
+            self.telemetry.record_event(
+                "retired", step=self._clock, slot=pending["slot"],
+                reason=reason, tenant=req.tenant,
+                rounds=result.rounds, comm_packets=result.comm_packets,
+                refreshes=result.refreshes,
+                revive=pending["revive"])
 
     def _replan(self, n_live: int) -> None:
         """Elastic fleet mesh: one virtual device per live network."""
@@ -516,74 +694,91 @@ class StreamingPCAEngine:
             self.plan_history.append(self.plan)
         self._last_live = n_live
 
-    # -- main loop ------------------------------------------------------------
-    def step(self) -> int:
-        """Fold the next K-round chunk for every active slot; returns #active.
+    # -- staging (double-buffered) -------------------------------------------
+    def _plan_signature(self) -> tuple:
+        """The slot plan a staged chunk depends on: per-slot request
+        identity + cursor.  Any admission, retirement or resumed
+        continuation moves it, invalidating a prestaged chunk."""
+        return tuple(
+            (id(self.active[s]), int(self.cursor[s]))
+            if self.active[s] is not None else None
+            for s in range(self.slots))
 
-        Idle slots carry a zero chunk with zero round-validity (they fold
-        nothing and book nothing; their state is re-initialized on
-        admission), keeping the device batch static like the decode path.
-        A live slot whose stream ends mid-chunk folds only its real tail
-        rounds.  The hot loop is host-sync-free: one staging-buffer fill +
-        one upload per chunk, the jitted step updates the donated fleet
-        state in place, and the accounting stays on device — scalars are
-        pulled to host only at retirement.  Per step, each live slot
-        heartbeats its HealthMonitor iff enough of its sensors were alive
-        over the chunk's rounds; slots ruled stalled afterwards are
-        retired dead (and re-queued from their revival round, if any).
-        """
-        self._admit()
-        self._clock += 1
-        live = [s for s in range(self.slots) if self.active[s]]
-        self._replan(len(live))
-        if not live:
-            return 0
+    def _upload(self, host_buf: np.ndarray) -> jax.Array:
+        """Owned-copy upload: the device buffer never aliases the pinned
+        staging memory (``copy=True`` forces the copy the CPU backend
+        would elide for aligned host arrays), so the buffer is free to be
+        refilled once the copy-out fence clears."""
+        return jnp.asarray(host_buf, copy=True)
+
+    def _stage(self) -> _StagedChunk:
+        """Fill the next pinned host buffer with every active slot's next
+        K rounds and upload it as an owned device copy.  Idle slots carry
+        a zero chunk with zero round-validity (they fold nothing and book
+        nothing); a live slot whose stream ends mid-chunk stages only its
+        real tail rounds.  The mask batch is neither built nor uploaded
+        unless some active request actually carries a liveness schedule
+        (the masked and unmasked steps are bit-identical under all-ones
+        masks, so the switch is invisible to results)."""
         K, p = self.chunk, self.cfg.p
-        if self._zeros_chunk is None:       # one-time template allocations
-            self._zeros_chunk = np.zeros((K, self._n, p), np.float32)
-            self._ones_chunk_mask = np.ones((K, p), np.float32)
-        batch = np.empty((self.slots, K, self._n, p), np.float32)
+        i = self._parity
+        self._parity ^= 1
+        if self._host_bufs[i] is None:
+            self._host_bufs[i] = np.zeros((self.slots, K, self._n, p),
+                                          np.float32)
+            self._mask_bufs[i] = np.ones((self.slots, K, p), np.float32)
+        elif self._uploads[i] is not None:
+            # transfer fence: wait for this buffer's PREVIOUS upload to
+            # finish copying out of the host memory we are about to
+            # overwrite.  This is the pipeline's only wait besides the
+            # retirement pull — and it is on the device_put, never on the
+            # chunk fold.
+            self._transfer_fences += 1
+            jax.block_until_ready(self._uploads[i])
+        buf = self._host_bufs[i]
         rv = np.zeros((self.slots, K), np.float32)
         consumed = np.zeros(self.slots, np.int64)
         start = self.cursor.copy()
+        any_schedule = False
         for s in range(self.slots):
             req = self.active[s]
             if req is None:
-                batch[s] = self._zeros_chunk
+                buf[s] = 0.0
                 continue
             c = int(start[s])
             take = min(K, req.rounds.shape[0] - c)
-            batch[s, :take] = req.rounds[c:c + take]
+            buf[s, :take] = req.rounds[c:c + take]
             if take < K:
-                batch[s, take:] = 0.0
+                buf[s, take:] = 0.0
             rv[s, :take] = 1.0
             consumed[s] = take
-        # fast path: when no active request carries a liveness schedule the
-        # mask batch is neither built nor uploaded (the masked and unmasked
-        # steps are bit-identical under all-ones masks, so the switch is
-        # invisible to results)
-        any_schedule = any(self.active[s] is not None
-                           and self.active[s].liveness is not None
-                           for s in live)
+            any_schedule |= req.liveness is not None
+        masks_dev = None
         if any_schedule:
-            masks = np.empty((self.slots, K, p), np.float32)
+            mbuf = self._mask_bufs[i]
             for s in range(self.slots):
                 req = self.active[s]
                 if req is None or req.liveness is None:
-                    masks[s] = self._ones_chunk_mask
+                    mbuf[s] = 1.0
                     continue
                 c, take = int(start[s]), int(consumed[s])
-                masks[s, :take] = req.liveness[c:c + take]
+                mbuf[s, :take] = req.liveness[c:c + take]
                 if take < K:
-                    masks[s, take:] = 1.0
-            self.states, metrics = self._step_fn_masked(
-                self.states, jnp.asarray(batch), jnp.asarray(masks),
-                jnp.asarray(rv))
-        else:
-            self.states, metrics = self._step_fn(
-                self.states, jnp.asarray(batch), jnp.asarray(rv))
-        # idle slots fold zero rounds: mask them out of the books
-        # (where, not multiply — robust to any NaN in an idle slot)
+                    mbuf[s, take:] = 1.0
+            masks_dev = self._upload(mbuf)
+        batch_dev = self._upload(buf)
+        self._uploads[i] = (batch_dev,) if masks_dev is None \
+            else (batch_dev, masks_dev)
+        return _StagedChunk(batch=batch_dev, masks=masks_dev,
+                            rv=jnp.asarray(rv), start=start,
+                            consumed=consumed,
+                            signature=self._plan_signature())
+
+    def _accumulate_books(self, metrics, live: list[int]) -> None:
+        """Fold the step's stage outputs into the per-slot device
+        accounts.  Idle slots fold zero rounds: mask them out of the
+        books (where, not multiply — robust to any NaN in an idle
+        slot).  All jnp ops — async-dispatchable, no host sync."""
         lm = np.zeros(self.slots, np.float32)
         lm[live] = 1.0
         lmj = jnp.asarray(lm)
@@ -603,18 +798,92 @@ class StreamingPCAEngine:
             self._det_events = self._det_events + alarms
             self._det_alarm_packets = (self._det_alarm_packets
                                        + alarms * self._det_alarm_price)
+
+    # -- main loop ------------------------------------------------------------
+    def step(self) -> int:
+        """Fold the next K-round chunk for every active slot; returns
+        #active.
+
+        The loop is host-sync-free in steady state: the staged batch is
+        an owned device copy, the jitted step updates the donated fleet
+        state in place, and the accounting stays on device — scalars are
+        pulled to host only at retirement.  With ``pipeline=True`` the
+        chunk consumed by step t+1 was filled and uploaded DURING step t,
+        while the device folded chunk t (staged-vs-compute overlap); a
+        prestaged chunk is dropped and restaged inline if the slot plan
+        moved under it (new admission, retirement, or a submission that
+        fills a free slot).  Per step, each live slot heartbeats its
+        HealthMonitor iff enough of its sensors were alive over the
+        chunk's rounds; slots ruled stalled afterwards are retired dead
+        (and re-queued from their revival round, if any).
+        """
+        t0 = time.perf_counter()
+        admitted = self._admit()
+        self._clock += 1
+        live = [s for s in range(self.slots) if self.active[s]]
+        self._replan(len(live))
+        if not live:
+            self._staged = None
+            if self.telemetry is not None:
+                self.telemetry.record_step(StepRecord(
+                    step=self._clock, wall_s=time.perf_counter() - t0,
+                    stage_s=0.0, overlap_s=0.0, prestaged=False, live=0,
+                    rounds=0, queue_depth=len(self.queue),
+                    admitted=admitted, retired=0))
+            return 0
+        # -- chunk t: consume the prestaged upload, or stage inline --------
+        staged, self._staged = self._staged, None
+        prestaged = (staged is not None
+                     and staged.signature == self._plan_signature())
+        stage_s = 0.0
+        if prestaged:
+            self._prestage_hits += 1
+        else:
+            self._prestage_misses += 1
+            t_s = time.perf_counter()
+            staged = self._stage()
+            stage_s = time.perf_counter() - t_s
+        # -- dispatch: nothing below blocks on the fold --------------------
+        if staged.masks is not None:
+            self.states, metrics = self._step_fn_masked(
+                self.states, staged.batch, staged.masks, staged.rv)
+        else:
+            self.states, metrics = self._step_fn(
+                self.states, staged.batch, staged.rv)
+        self._accumulate_books(metrics, live)
+        # -- host bookkeeping: heartbeats, cursors, retirement verdicts ----
+        pendings: list[dict] = []
         for s in live:
             req = self.active[s]
-            c, take = int(start[s]), int(consumed[s])
+            c, take = int(staged.start[s]), int(staged.consumed[s])
             frac = 1.0 if req.liveness is None \
                 else float(req.liveness[c:c + take].mean())
             if frac >= self.min_alive_fraction:
                 self.health[s].heartbeat(step=self._clock, duration=1.0)
             self.cursor[s] += take
             if self.cursor[s] >= req.rounds.shape[0]:
-                self._retire(s)
+                pendings.append(self._begin_retire(s, "completed"))
             elif self.health[s].stalled():
-                self._retire_dead(s)
+                pendings.append(self._begin_retire(s, "dead"))
+        # -- pipelined prestage: chunk t+1 overlaps the in-flight fold -----
+        overlap_s = 0.0
+        if self.pipeline:
+            admitted += self._admit()
+            if any(r is not None for r in self.active):
+                t_s = time.perf_counter()
+                self._staged = self._stage()
+                overlap_s = time.perf_counter() - t_s
+                stage_s += overlap_s
+        # -- retirement results: the loop's only device→host pulls ---------
+        for pending in pendings:
+            self._finish_retire(pending)
+        if self.telemetry is not None:
+            self.telemetry.record_step(StepRecord(
+                step=self._clock, wall_s=time.perf_counter() - t0,
+                stage_s=stage_s, overlap_s=overlap_s, prestaged=prestaged,
+                live=len(live), rounds=int(staged.consumed.sum()),
+                queue_depth=len(self.queue), admitted=admitted,
+                retired=len(pendings)))
         return len(live)
 
     def run_until_done(self, max_steps: int = 100_000) -> None:
@@ -662,11 +931,13 @@ class StreamingPCAEngine:
 
 
 # ===========================================================================
-# Program contract (repro.analysis; DESIGN.md Sec. 15): the engine hot loop.
-# Static rules pin the vmapped chunk body (one launch per step); the runtime
-# check needs the lowered/compiled artifact — buffer donation is a lowering
-# property, retraces a jit-cache property — so it runs a tiny interpret-mode
-# fleet for a few steps.
+# Program contracts (repro.analysis; DESIGN.md Sec. 15/17): the engine hot
+# loop, synchronous and pipelined.  Static rules pin the vmapped chunk body
+# (one launch per step, no host-sync primitive anywhere in the traced
+# program); the runtime checks need the lowered/compiled artifact — buffer
+# donation is a lowering property, retraces a jit-cache property, and the
+# pipelined loop's no-host-pull claim lives on the engine's pull ledger —
+# so they run a tiny interpret-mode fleet for a few steps.
 # ===========================================================================
 from repro.analysis import contracts as _contracts  # noqa: E402
 from repro.analysis import jaxpr_lint as _jl        # noqa: E402
@@ -675,11 +946,11 @@ from repro.analysis import resources as _res        # noqa: E402
 _CONTRACT_SLOTS, _CONTRACT_K, _CONTRACT_N = 2, 2, 4
 
 
-def _contract_engine() -> StreamingPCAEngine:
+def _contract_engine(pipeline: bool = False) -> StreamingPCAEngine:
     cfg = StreamConfig(p=8, q=2, halfwidth=1, warmup_rounds=2,
                        interpret=True)
     eng = StreamingPCAEngine(cfg, slots=_CONTRACT_SLOTS, seed=0,
-                             chunk=_CONTRACT_K)
+                             chunk=_CONTRACT_K, pipeline=pipeline)
     rng = np.random.default_rng(0)
     for _ in range(_CONTRACT_SLOTS):
         eng.submit(StreamRequest(rounds=rng.normal(
@@ -704,6 +975,10 @@ def _trace_engine_step():
 
 def _engine_runtime_checks():
     eng = _contract_engine()
+    # a FRESH (un-memoized) jitted step: the factory cache shares one
+    # callable per config across all engines, so the retrace check needs
+    # its own instance to see an isolated jit cache
+    eng._step_fn = engine_chunk_step_fn.__wrapped__(eng.cfg)
     batch, rv = _contract_engine_batch(eng)
     results = [_contracts.donation_report(eng._step_fn, eng.states, batch,
                                           rv, argnum=0,
@@ -729,4 +1004,65 @@ _contracts.register(_contracts.Contract(
            _res.VmemBudget(),
            _res.HbmTrafficBudget(max_passes=1.0)),
     runtime=_engine_runtime_checks,
+))
+
+
+def _trace_engine_step_pipelined():
+    eng = _contract_engine(pipeline=True)
+    batch, rv = _contract_engine_batch(eng)
+    jx = jax.make_jaxpr(lambda s, x, r: eng._step_fn(s, x, r))(
+        eng.states, batch, rv)
+    return {f"slots={eng.slots},K={eng.chunk}": jx}
+
+
+def _pipelined_runtime_checks():
+    """The async-loop half of the contract (DESIGN.md Sec. 17): donation
+    and no-retrace as on the sync path, PLUS the pipeline hygiene only an
+    actual run can show — zero device→host pulls in the hot path (the
+    engine's pull ledger keys every conversion), retirement being the one
+    place that pulls, and prestaged chunks actually being consumed in
+    steady state (the overlap exists structurally, not just in timings)."""
+    eng = _contract_engine(pipeline=True)
+    eng._step_fn = engine_chunk_step_fn.__wrapped__(eng.cfg)   # isolated cache
+    batch, rv = _contract_engine_batch(eng)
+    results = [_contracts.donation_report(eng._step_fn, eng.states, batch,
+                                          rv, argnum=0,
+                                          contract="engine.step.pipelined")]
+    eng.run_until_done()             # 6 rounds / chunk 2 = 3 steps + drain
+    results.append(_contracts.retrace_report(eng._step_fn, 3,
+                                             contract="engine.step.pipelined"))
+    cid = "engine.step.pipelined"
+    results.append(_contracts.RuleResult(
+        cid, "hot-loop:no-host-pull", eng.pulls["hot"] == 0,
+        f"{eng.pulls['hot']} device pulls in the pipelined hot path over "
+        f"{eng._clock} steps (want 0; retirement pulled "
+        f"{eng.pulls['retire']})"))
+    results.append(_contracts.RuleResult(
+        cid, "hot-loop:retire-pulls-only", eng.pulls["retire"] > 0,
+        f"retirement pulled {eng.pulls['retire']} scalars — the loop's "
+        f"only device→host sync point"))
+    results.append(_contracts.RuleResult(
+        cid, "hot-loop:prestage", eng._prestage_hits >= 1,
+        f"{eng._prestage_hits} prestaged chunks consumed, "
+        f"{eng._prestage_misses} inline stages (want >=1 hit: the "
+        f"pipeline must actually pipeline)"))
+    return results
+
+
+_contracts.register(_contracts.Contract(
+    id="engine.step.pipelined",
+    where="repro.serve.engine.StreamingPCAEngine.step",
+    claim="the pipelined loop's chunk body is the same single-launch "
+          "donated step (no host-sync primitive anywhere in the traced "
+          "program), and at runtime the hot path makes zero device->host "
+          "pulls — results are pulled at retirement only, and prestaged "
+          "chunks are consumed in steady state",
+    trace=_trace_engine_step_pipelined,
+    rules=(_jl.PrimitiveBudget("pallas_call", exact=1),
+           _jl.PrimitiveBudget("eigh", max=1),
+           _jl.ForbidInLoops(everywhere=True),
+           _jl.NoF64(),
+           _res.VmemBudget(),
+           _res.HbmTrafficBudget(max_passes=1.0)),
+    runtime=_pipelined_runtime_checks,
 ))

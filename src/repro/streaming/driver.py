@@ -72,8 +72,9 @@ from repro.streaming.online_cov import (OnlineCovariance, online_apply_chunk,
 from repro.streaming.scheduler import RecomputeScheduler, SchedulerState
 
 __all__ = ["StreamConfig", "StreamState", "RoundMetrics", "stream_init",
-           "stream_step", "chunk_stream_step", "stream_run",
-           "chunked_stream_run", "batched_stream_run", "sharded_stream_run"]
+           "stream_step", "chunk_stream_step", "engine_chunk_step_fn",
+           "stream_run", "chunked_stream_run", "batched_stream_run",
+           "sharded_stream_run"]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -454,6 +455,35 @@ def chunk_stream_step(cfg: StreamConfig, state: StreamState,
                            compression=compression,
                            detection=detection)
     return new, metrics
+
+
+@functools.lru_cache(maxsize=None)
+def engine_chunk_step_fn(cfg: StreamConfig, *, masked: bool = False):
+    """The serving engine's jitted chunk body (DESIGN.md Sec. 17): the
+    vmapped :func:`chunk_stream_step` with the stacked fleet state DONATED.
+
+    Memoized per (cfg, masked): every engine instance with the same config
+    shares ONE jitted callable — and therefore one compilation cache —
+    instead of re-tracing per engine (a benchmark sweeping modes would
+    otherwise spend most of its wall time compiling identical programs).
+
+    This is the donation-safe consumer of the engine's double-buffered
+    staging path: argument 0 (the per-slot state pytree) is donated so XLA
+    updates the fleet in place every step, while the staged chunk batch
+    (argument 1) and mask batch are deliberately NOT donated — they are
+    engine-owned uploads that the staging fence may still be waiting on
+    when the next chunk is dispatched, so the engine must keep the right
+    to hold references to them.  Built here (not in ``serve/engine.py``)
+    so the engine and the ``engine.step*`` analysis contracts trace the
+    exact same callable.
+    """
+    if masked:
+        def body(s, x, m, rv):
+            return chunk_stream_step(cfg, s, x, m, rv)
+    else:
+        def body(s, x, rv):
+            return chunk_stream_step(cfg, s, x, round_valid=rv)
+    return jax.jit(jax.vmap(body), donate_argnums=(0,))
 
 
 @functools.partial(jax.jit, static_argnums=0)

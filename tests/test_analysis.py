@@ -32,6 +32,7 @@ from repro.streaming.driver import (StreamConfig, chunk_stream_step,
 REQUIRED_CONTRACTS = (
     "chunk.body", "chunk.body.split", "chunk.fused.fp32", "chunk.fused.bf16",
     "driver.hot-loop", "dtype.policy", "hierarchy.refresh", "engine.step",
+    "engine.step.pipelined",
 )
 
 
